@@ -1,0 +1,83 @@
+"""Beyond-paper benchmarks.
+
+1. k-way regression selector over the widened candidate set
+   {NT_DIRECT, TNN, TNN_FUSED, XLA_DOT} vs the paper's binary classifier
+   vs oracle (analytic-tpu data).
+2. Pallas kernel block-shape sweep: VMEM footprint + modelled time per
+   BlockSpec — the §Perf tiling knob, evaluated structurally.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import core
+from repro.core import simulate
+from repro.core.hardware import TPU_V5E
+
+from .common import analytic_dataset, save_json, section
+
+
+def kway_selector(full: bool = False):
+    section("Beyond-paper — k-way selector over 4 candidates vs binary vs oracle")
+    ds = analytic_dataset(full)
+    kway, krep = core.train_kway_model(ds)
+    clf, brep = core.train_paper_model(ds)
+
+    algos = list(kway.candidates)
+    t_all = np.stack([ds.times[c] for c in algos], axis=1)
+    t_oracle = t_all.min(axis=1)
+    # binary selector restricted to the paper pair
+    pred = clf.predict(ds.X)
+    t_binary = np.where(pred == 1, ds.times["NT"], ds.times["TNN"])
+    sel = kway.select(ds.X)
+    t_kway = t_all[np.arange(len(ds)), sel]
+    t_xla = ds.times["XLA_DOT"]
+
+    rows = {
+        "always_xla_dot": float((t_xla / t_oracle).mean()),
+        "paper_binary_mtnn": float((t_binary / t_oracle).mean()),
+        "kway_regressor": float((t_kway / t_oracle).mean()),
+        "oracle": 1.0,
+    }
+    print(f"  {'policy':<20s} {'mean slowdown vs oracle':>24s}")
+    for k, v in rows.items():
+        print(f"  {k:<20s} {v:24.3f}x")
+    print(f"  k-way oracle-match {krep['oracle_match']*100:.1f}%; "
+          f"mean speedup vs always-XLA "
+          f"{float((t_xla / t_kway).mean()):.2f}x")
+    out = {"rows": rows, "kway_report": krep,
+           "speedup_vs_xla": float((t_xla / t_kway).mean())}
+    save_json("beyond_kway", out)
+    return out
+
+
+def kernel_block_sweep(full: bool = False):
+    section("Beyond-paper — Pallas BlockSpec sweep (VMEM footprint + model)")
+    shapes = [(4096, 4096, 4096), (8192, 1024, 8192), (1024, 65536, 512)]
+    blocks = [(128, 128, 128), (256, 256, 256), (512, 512, 512),
+              (512, 1024, 512), (1024, 512, 1024)]
+    print(f"  {'(m,n,k)':<20s} {'block':<18s} {'VMEM MiB':>9s} "
+          f"{'AI(flops/B)':>12s} {'t_model ms':>10s}")
+    rows = []
+    for (m, n, k) in shapes:
+        best = None
+        for (bm, bn, bk) in blocks:
+            vmem = (bm * bk + bk * bn + bm * bn) * 2 + bm * bn * 4  # bf16+f32acc
+            if vmem > 64 * 2**20:  # half of a v5e core's 128MiB VMEM
+                continue
+            byts = simulate.blocked_matmul_bytes(m, n, k, 2, (bm, bn, bk))
+            fl = simulate.matmul_flops(m, n, k)
+            ai = fl / byts
+            t = max(fl / (197e12 * simulate.mxu_efficiency(m, n, k)),
+                    byts / 819e9) * 1e3
+            rows.append({"shape": (m, n, k), "block": (bm, bn, bk),
+                         "vmem_mib": vmem / 2**20, "ai": ai, "t_ms": t})
+            mark = ""
+            if best is None or t < best[0]:
+                best = (t, (bm, bn, bk))
+            print(f"  {str((m,n,k)):<20s} {str((bm,bn,bk)):<18s} "
+                  f"{vmem/2**20:9.1f} {ai:12.1f} {t:10.3f}")
+        print(f"    -> best block for {(m,n,k)}: {best[1]} ({best[0]:.3f} ms)")
+    save_json("kernel_block_sweep", {"rows": rows})
+    return {"rows": rows}

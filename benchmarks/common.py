@@ -1,0 +1,71 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints a human-readable section AND returns a JSON-able
+dict; ``run.py`` tees both.  Data sources are labelled per DESIGN.md §2:
+``analytic-tpu`` (cost model, where the NT/TNN phenomenon lives) and
+``measured-host`` (real wall-clock on this CPU container).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import core
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+_DS_CACHE: Dict[str, "core.SelectionDataset"] = {}
+
+
+def analytic_dataset(full: bool = False) -> "core.SelectionDataset":
+    """Paper grid S={2^7..2^16}^3 x 3 chips (full) or a reduced grid."""
+    key = "full" if full else "small"
+    if key not in _DS_CACHE:
+        _DS_CACHE[key] = core.collect_analytic(lo=7, hi=16 if full else 12)
+    return _DS_CACHE[key]
+
+
+def measured_dataset(full: bool = False) -> "core.SelectionDataset":
+    key = "m_full" if full else "m_small"
+    if key not in _DS_CACHE:
+        sizes = [2**i for i in range(5, 11 if full else 9)]
+        _DS_CACHE[key] = core.collect_measured(sizes=sizes, reps=3)
+    return _DS_CACHE[key]
+
+
+def hist(ratios: np.ndarray, edges=None) -> Dict[str, float]:
+    """The paper's Fig.1/3/6 frequency buckets (last bucket = 'x+')."""
+    edges = edges or [0.6, 0.8, 1.0, 1.1, 1.2, 1.4, 1.6, 1.8, 2.0]
+    out = {}
+    prev = 0.0
+    for e in edges:
+        out[f"<{e}"] = float(((ratios >= prev) & (ratios < e)).mean())
+        prev = e
+    out[f"{edges[-1]}+"] = float((ratios >= edges[-1]).mean())
+    return out
+
+
+def print_hist(title: str, h: Dict[str, float]) -> None:
+    print(f"  {title}")
+    for k, v in h.items():
+        bar = "#" * int(round(v * 50))
+        print(f"    {k:>6s} {v*100:5.1f}% {bar}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, default=float)
+    return path
+
+
+def section(title: str) -> None:
+    print("\n" + "=" * 72)
+    print(title)
+    print("=" * 72)

@@ -1,0 +1,57 @@
+"""Render the §Roofline table from the dry-run records
+(experiments/dryrun/*.json) — deliverable (g)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save_json, section
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_table(full: bool = False, mesh: str = "16x16"):
+    section(f"§Roofline — per (arch x shape) on the {mesh} mesh (from dry-run)")
+    recs = load_records(mesh)
+    if not recs:
+        print("  (no dry-run records found — run `python -m repro.launch.dryrun --all`)")
+        return {}
+    print(f"  {'arch':<18s} {'shape':<12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+          f"{'coll(s)':>9s} {'bound':>7s} {'useful':>7s} {'fit(GB)':>8s}")
+    rows = []
+    for r in recs:
+        if r.get("status") == "skip":
+            print(f"  {r['arch']:<18s} {r['shape']:<12s} {r['why']}")
+            rows.append({k: r.get(k) for k in ("arch", "shape", "status", "why")})
+            continue
+        if r.get("status") != "ok":
+            print(f"  {r['arch']:<18s} {r['shape']:<12s} ERROR {r.get('error','')[:60]}")
+            rows.append({k: r.get(k) for k in ("arch", "shape", "status", "error")})
+            continue
+        rf = r["roofline"]
+        mem = rf.get("memory") or {}
+        fit = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+               - mem.get("alias_bytes", 0)) / 1e9
+        print(f"  {r['arch']:<18s} {r['shape']:<12s} {rf['t_compute_s']:9.4f} "
+              f"{rf['t_memory_s']:9.4f} {rf['t_collective_s']:9.4f} "
+              f"{rf['bottleneck'][:7]:>7s} {rf['useful_ratio']*100:6.1f}% "
+              f"{fit:8.2f}")
+        rows.append({"arch": r["arch"], "shape": r["shape"], "status": "ok",
+                     **{k: rf[k] for k in ("t_compute_s", "t_memory_s",
+                                           "t_collective_s", "bottleneck",
+                                           "useful_ratio")},
+                     "fit_gb": fit})
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    print(f"\n  {n_ok} ok / {len(rows)} cells")
+    save_json(f"roofline_{mesh}", {"rows": rows})
+    return {"rows": rows}

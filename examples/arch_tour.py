@@ -1,0 +1,51 @@
+"""Tour of all ten assigned architectures: instantiate each reduced config,
+run one train step and one decode step, report shapes/params/loss.
+
+  PYTHONPATH=src python examples/arch_tour.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import lm
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    print(f"{'arch':<20s} {'family':<7s} {'full params':>12s} {'smoke loss':>11s} "
+          f"{'decode':>9s} {'ms':>6s}")
+    for name in sorted(ARCHS):
+        full = get_config(name)
+        cfg = smoke_config(name)
+        params = lm.init_lm(key, cfg)
+        if cfg.input_mode == "tokens":
+            batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+        elif cfg.input_mode == "frames":
+            batch = {"frames": jax.random.normal(key, (B, S, cfg.d_model))}
+        else:
+            batch = {
+                "patches": jax.random.normal(key, (B, cfg.prefix_len, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, S - cfg.prefix_len), 0, cfg.vocab),
+            }
+        labels = jax.random.randint(
+            key, (B, S - (cfg.prefix_len if cfg.input_mode == "vlm" else 0)),
+            0, cfg.vocab,
+        )
+        t0 = time.perf_counter()
+        loss, _ = lm.lm_loss(params, cfg, {**batch, "labels": labels})
+        cache = lm.init_lm_cache(cfg, B, max_seq=16)
+        db = ({"frames": batch["frames"][:, :1]} if cfg.input_mode == "frames"
+              else {"tokens": jnp.ones((B, 1), jnp.int32)})
+        logits, cache = lm.lm_decode(params, cfg, cache, db)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"{name:<20s} {full.family:<7s} {full.param_count()/1e9:11.2f}B "
+              f"{float(loss):11.4f} {str(tuple(logits.shape)):>9s} {dt:6.0f}")
+
+
+if __name__ == "__main__":
+    main()

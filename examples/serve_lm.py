@@ -1,0 +1,32 @@
+"""Batched LM serving: prefill a batch of prompts, decode continuations.
+
+Uses the real launch/serve path (prefill + in-place-cache decode steps)
+on a reduced config by default; pass --real for the full smollm-135m.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch smollm-135m] [--real]
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--real", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len), "--gen", str(args.gen),
+            "--mesh", "1x1"]
+    if not args.real:
+        argv.append("--smoke")
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""§Perf iteration #3b for gemma2-27b train_4k: accumulation granularity.
+
+Hypothesis: per-step gradient all-reduce bytes scale linearly with the
+microbatch count (each microbatch all-reduces the FULL 27B-param gradient);
+accum 16 -> 4 should cut the grad-AR component ~4x at +~4 GB temp
+(bigger per-microbatch activations).
+
+Usage: PYTHONPATH=src python experiments/gemma2_accum_iter.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["TF_CPP_MIN_LOG_LEVEL"] = "2"
+
+import json
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.distributed import batch_specs, named
+from repro.distributed.context import use_mesh
+from repro.launch.accounting import account_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops_for_cell, roofline_from_costs
+from repro.launch.steps import (
+    TrainStepConfig, make_train_step, train_state_shapes, train_state_specs,
+)
+
+cfg = get_config("gemma2-27b")
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+mf = model_flops_for_cell(cfg, shape)
+
+results = {}
+for accum in (16, 8, 4):
+    # fit proof at this accum
+    step = make_train_step(cfg, TrainStepConfig(accum=accum), mesh=mesh)
+    ss = train_state_shapes(cfg)
+    sp = train_state_specs(ss, mesh)
+    bsh = input_specs(cfg, shape)
+    bsp = batch_specs(bsh, mesh)
+    msp = {"loss": P(), "grad_norm": P(), "lr": P()}
+    with use_mesh(mesh):
+        compiled = jax.jit(
+            step,
+            in_shardings=(named(mesh, sp), named(mesh, bsp)),
+            out_shardings=(named(mesh, sp), named(mesh, msp)),
+            donate_argnums=(0,),
+        ).lower(ss, bsh).compile()
+    ms = compiled.memory_analysis()
+    fit = (ms.argument_size_in_bytes + ms.temp_size_in_bytes - ms.alias_size_in_bytes) / 1e9
+    costs = account_cell(cfg, shape, mesh, accum=accum)
+    rep = roofline_from_costs(costs, mesh.size, model_flops_global=mf)
+    results[accum] = {"fit_gb": fit, **rep.to_dict()}
+    print(f"accum={accum:2d} fit={fit:6.2f}GB compute={rep.t_compute:.3f} "
+          f"memory={rep.t_memory:.3f} coll={rep.t_collective:.3f} "
+          f"useful={rep.useful_ratio*100:.1f}%")
+
+out = os.path.join(os.path.dirname(__file__), "gemma2_accum_iter.json")
+with open(out, "w") as fh:
+    json.dump(results, fh, indent=1, default=float)
+print("saved", out)

@@ -1,0 +1,158 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, async, elastic.
+
+  * atomic: write to ``step_XXXX.tmp`` then ``os.replace`` — a crash
+    mid-save never corrupts the latest checkpoint.
+  * keep-N: older checkpoints garbage-collected after each save.
+  * async: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes on a background thread — training overlap.
+  * elastic: arrays are saved *unsharded* (logical shapes); ``restore``
+    re-shards onto whatever mesh/sharding the new job provides, so a
+    512-chip checkpoint restarts on 256 chips (tests/test_checkpoint.py).
+    At 10k+ chips the same API would write per-shard files (ocdbt); the
+    single-file npz keeps this container honest without pretending.
+
+A checkpoint is valid iff its ``meta.json`` exists and matches; restore
+scans newest -> oldest and skips invalid ones (torn writes at crash).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(tree_like, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves = []
+    for path, ref in paths:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs model {ref.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------
+    def _write(self, step: int, flat: Dict[str, np.ndarray], meta: Dict):
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as fh:
+            json.dump(meta, fh)
+        if os.path.isdir(final):  # overwrite-resave of same step
+            import shutil
+
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def save(self, step: int, state, extra_meta: Optional[Dict] = None) -> None:
+        state = jax.device_get(state)  # gather to host, unsharded
+        flat = _flatten(state)
+        meta = {"step": step, "n_leaves": len(flat), "time": time.time()}
+        meta.update(extra_meta or {})
+        self._write(step, flat, meta)
+
+    def save_async(self, step: int, state, extra_meta: Optional[Dict] = None):
+        self.wait()  # one in-flight save at a time
+        state = jax.device_get(state)  # synchronous snapshot
+        flat = _flatten(state)
+        meta = {"step": step, "n_leaves": len(flat), "time": time.time()}
+        meta.update(extra_meta or {})
+        self._thread = threading.Thread(target=self._write, args=(step, flat, meta))
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ----------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, state_like, step: Optional[int] = None, shardings=None
+    ) -> Tuple[Any, int]:
+        """Restore into the structure of ``state_like``.
+
+        ``shardings``: optional pytree of NamedSharding — the *new* mesh's
+        layout; arrays are device_put with it (elastic re-shard).
+        """
+        candidates = self.steps()
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
+        if not candidates:
+            raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        for s in reversed(candidates):
+            path = os.path.join(self.dir, f"step_{s}")
+            try:
+                with open(os.path.join(path, "meta.json")) as fh:
+                    meta = json.load(fh)
+                z = np.load(os.path.join(path, "arrays.npz"))
+                flat = {k: z[k] for k in z.files}
+                if len(flat) != meta["n_leaves"]:
+                    raise ValueError("leaf count mismatch")
+                state = _unflatten_into(state_like, flat)
+                if shardings is not None:
+                    state = jax.tree.map(
+                        lambda x, sh: jax.device_put(x, sh), state, shardings
+                    )
+                return state, s
+            except Exception as e:  # torn/invalid: try older
+                print(f"[ckpt] skipping invalid step_{s}: {e}")
+        raise FileNotFoundError(f"no restorable checkpoint in {self.dir}")
+
+    # -- gc ---------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            import shutil
+
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)

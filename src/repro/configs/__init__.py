@@ -1,0 +1,22 @@
+"""Configs: one module per assigned architecture + the shape registry +
+the paper's own FCN experiment configs."""
+
+from .arch import ArchConfig, BlockCfg, MoEConfig, SSMConfig
+from .registry import ARCHS, get_config, list_archs, smoke_config
+from .shapes import SHAPES, ShapeCell, cache_specs, cell_applicable, input_specs
+
+__all__ = [
+    "ArchConfig",
+    "BlockCfg",
+    "MoEConfig",
+    "SSMConfig",
+    "ARCHS",
+    "get_config",
+    "list_archs",
+    "smoke_config",
+    "SHAPES",
+    "ShapeCell",
+    "input_specs",
+    "cache_specs",
+    "cell_applicable",
+]

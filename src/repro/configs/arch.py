@@ -1,0 +1,131 @@
+"""ArchConfig — the single declarative description every subsystem reads.
+
+``segments`` is a tuple of ``(repeat, (BlockCfg, ...))``: the layer stack is
+``lax.scan`` over each segment, one scan step applying the unit's blocks in
+order.  Heterogeneous patterns (Gemma local:global alternation, Zamba2
+mamba+shared-attention units) are expressed as multi-block units.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.models.blocks import BlockCfg
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+
+__all__ = ["ArchConfig", "BlockCfg", "MoEConfig", "SSMConfig"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    segments: Tuple[Tuple[int, Tuple[BlockCfg, ...]], ...]
+    # attention details
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_chunk: int = 1024
+    post_norm: bool = False
+    # embedding / head
+    tie_embeddings: bool = True
+    emb_scale: bool = False
+    vocab_pad: int = 256  # padded so vocab shards over the model axis
+    # sub-layers
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # modality
+    input_mode: str = "tokens"  # tokens | frames (audio stub) | vlm (patch stub)
+    prefix_len: int = 0  # vlm: bidirectional patch prefix
+    # numerics / memory
+    activation: str = "gelu"
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"  # none | dots | full
+    optimizer: str = "adamw"  # adamw | adafactor (memory-bound giants)
+    # capability flags
+    sub_quadratic: bool = False  # eligible for long_500k
+    # §Perf variant: sequence-parallel attention core (models whose head
+    # counts don't divide the mesh model axis; see AttnConfig.sp_attention)
+    sp_attention: bool = False
+    # accounting: python-loop the layer stack instead of lax.scan (used by
+    # the dry-run cost probes — cost_analysis counts while bodies once)
+    unroll_segments: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        return _round_up(self.vocab, self.vocab_pad)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(c * len(blocks) for c, blocks in self.segments)
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are decoder-style
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Exact parameter count (matches init_lm)."""
+        d, dh = self.d_model, self.d_head
+        n = self.vocab_padded * d  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_padded * d
+        n += d  # final norm
+        attn = (self.n_heads * dh + 2 * self.n_kv * dh) * d + d * self.n_heads * dh
+        if self.qk_norm:
+            attn += 2 * dh
+        mlp = 3 * d * self.d_ff
+        for count, blocks in self.segments:
+            for b in blocks:
+                per = d  # ln1
+                if b.mixer == "attn":
+                    per += attn
+                elif b.mixer == "mamba":
+                    s = self.ssm
+                    di, N, H = s.d_inner, s.d_state, s.n_heads
+                    per += 2 * di * d + 2 * N * d + H * d  # z,x,B,C,dt proj
+                    per += s.d_conv * di + di  # conv
+                    per += 3 * H  # A_log, D, dt_bias
+                    per += di + d * di  # norm + out proj
+                if self.post_norm:
+                    per += d
+                if b.ffn == "mlp":
+                    per += d + mlp + (d if self.post_norm else 0)
+                elif b.ffn == "moe":
+                    m = self.moe
+                    per += d + m.n_experts * (3 * d * m.d_ff) + m.n_experts * d
+                    per += d if self.post_norm else 0
+                n += count * per
+        if any(b.mixer == "shared_attn" for _, bl in self.segments for b in bl):
+            n += attn  # one shared set
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        total = self.param_count()
+        moe_blocks = sum(
+            c * sum(1 for b in bl if b.ffn == "moe") for c, bl in self.segments
+        )
+        all_experts = moe_blocks * m.n_experts * 3 * self.d_model * m.d_ff
+        active = moe_blocks * m.top_k * 3 * self.d_model * m.d_ff
+        return total - all_experts + active

@@ -1,0 +1,76 @@
+"""The assigned input-shape set and ShapeDtypeStruct ``input_specs``.
+
+Every cell of the (arch x shape) grid is defined here; ``launch/dryrun.py``
+lowers ``train_step``/``prefill_step``/``serve_step`` per the shape's kind
+without allocating anything (ShapeDtypeStruct stand-ins only).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ShapeCell", "SHAPES", "input_specs", "cache_specs", "cell_applicable"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg, shape: ShapeCell) -> Tuple[bool, str]:
+    """The assignment's skip rule: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "SKIP(full-attn): 512k dense KV outside design envelope"
+    return True, ""
+
+
+def _tok(b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of this cell (no labels for serve kinds)."""
+    B, S = shape.global_batch, shape.seq_len
+    emb = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            d = {"tokens": _tok(B, S)}
+        elif cfg.input_mode == "frames":
+            d = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb)}
+        else:  # vlm: S = prefix patches + text
+            st = S - cfg.prefix_len
+            d = {
+                "patches": jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model), emb),
+                "tokens": _tok(B, st),
+            }
+        if shape.kind == "train":
+            lab = S - cfg.prefix_len if cfg.input_mode == "vlm" else S
+            d["labels"] = _tok(B, lab)
+        return d
+    # decode: one new token against a cache of S
+    if cfg.input_mode == "frames":
+        return {"frames": jax.ShapeDtypeStruct((B, 1, cfg.d_model), emb)}
+    return {"tokens": _tok(B, 1)}
+
+
+def cache_specs(cfg, shape: ShapeCell, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache (via eval_shape)."""
+    from repro.models.lm import init_lm_cache
+
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: init_lm_cache(cfg, B, S, dtype))

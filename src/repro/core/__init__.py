@@ -1,0 +1,53 @@
+"""repro.core — the paper's contribution: supervised algorithm selection
+for the NT matmul (MTNN), adapted to TPU/JAX.  See DESIGN.md §1–2."""
+
+from .candidates import CANDIDATES, PAPER_PAIR, get_candidate
+from .dataset import SelectionDataset, collect_analytic, collect_measured
+from .features import FEATURE_NAMES, make_features
+from .gbdt import DecisionTreeClassifier, GBDTClassifier, GBDTRegressor
+from .hardware import SIMULATED_CHIPS, TPU_V4, TPU_V5E, TPU_V5P, HardwareSpec, host_spec
+from .selector import MTNNSelector, default_selector, select_matmul, set_default_selector
+from .svm import SVMClassifier
+from .train_model import (
+    KWayModel,
+    accuracy_report,
+    accuracy_vs_train_size,
+    kfold_cv,
+    selection_metrics,
+    train_kway_model,
+    train_paper_model,
+    train_test_split,
+)
+
+__all__ = [
+    "CANDIDATES",
+    "PAPER_PAIR",
+    "get_candidate",
+    "SelectionDataset",
+    "collect_analytic",
+    "collect_measured",
+    "FEATURE_NAMES",
+    "make_features",
+    "GBDTClassifier",
+    "GBDTRegressor",
+    "DecisionTreeClassifier",
+    "SVMClassifier",
+    "HardwareSpec",
+    "SIMULATED_CHIPS",
+    "TPU_V5E",
+    "TPU_V4",
+    "TPU_V5P",
+    "host_spec",
+    "MTNNSelector",
+    "select_matmul",
+    "default_selector",
+    "set_default_selector",
+    "KWayModel",
+    "train_paper_model",
+    "train_kway_model",
+    "train_test_split",
+    "kfold_cv",
+    "accuracy_report",
+    "accuracy_vs_train_size",
+    "selection_metrics",
+]

@@ -1,0 +1,98 @@
+"""Candidate implementations of the NT operation  C = A @ B^T.
+
+The paper's candidate set is {NT, TNN}.  Ours (beyond-paper) is wider:
+
+  XLA_NT      lax.dot_general contracting (1, 1)      — the "cuBLAS NT" analogue
+  XLA_TNN     explicit transpose then NN dot          — the paper's TNN on XLA
+  PALLAS_NT   Pallas kernel, direct NT dim numbers    — TPU target
+  PALLAS_TNN  Pallas transpose kernel + Pallas NN     — TPU target
+  PALLAS_TNN_FUSED  Pallas NT with in-VMEM transpose  — beyond-paper
+
+All candidates share the signature ``f(a, b) -> c`` with ``a:(m,k)``,
+``b:(n,k)``, ``c:(m,n)``, are pure and jit-safe, and are registered in
+``CANDIDATES``.  ``distributed_safe`` marks the candidates that are legal
+inside pjit-partitioned programs without a shard_map wrapper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Candidate", "CANDIDATES", "get_candidate", "candidate_names"]
+
+
+def xla_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct NT: contract the trailing dim of both operands."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+def xla_tnn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """TNN: materialise B^T, then an NN dot."""
+    bt = jnp.swapaxes(b, -1, -2)
+    return jax.lax.dot_general(
+        a, bt, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+def _pallas_nt(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_nt(a, b)
+
+
+def _pallas_tnn(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_tnn(a, b)
+
+
+def _pallas_tnn_fused(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_tnn_fused(a, b)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    name: str
+    fn: Callable[[jax.Array, jax.Array], jax.Array]
+    sim_algo: str  # which analytic-cost-model arm describes it
+    distributed_safe: bool  # usable directly under pjit partitioning
+    extra_memory: bool  # needs room for B^T (paper's OOM guard)
+
+
+CANDIDATES: Dict[str, Candidate] = {
+    "XLA_NT": Candidate("XLA_NT", xla_nt, "NT_DIRECT", True, False),
+    "XLA_TNN": Candidate("XLA_TNN", xla_tnn, "TNN", True, True),
+    "PALLAS_NT": Candidate("PALLAS_NT", _pallas_nt, "NT_DIRECT", False, False),
+    "PALLAS_TNN": Candidate("PALLAS_TNN", _pallas_tnn, "TNN", False, True),
+    "PALLAS_TNN_FUSED": Candidate(
+        "PALLAS_TNN_FUSED", _pallas_tnn_fused, "TNN_FUSED", False, False
+    ),
+}
+
+# the paper's binary setting
+PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")
+
+
+def get_candidate(name: str) -> Candidate:
+    try:
+        return CANDIDATES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown candidate {name!r}; have {sorted(CANDIDATES)}"
+        ) from None
+
+
+def candidate_names(distributed_only: bool = False):
+    return tuple(
+        n for n, c in CANDIDATES.items() if c.distributed_safe or not distributed_only
+    )

@@ -1,0 +1,219 @@
+"""Dataset construction for the selection problem (paper §V-A).
+
+Two honest data sources (kept separate, labelled in every report):
+
+  * ``collect_analytic``  — the analytic-TPU cost model over the paper's
+    grid S = {2^7 .. 2^16}^3 for three TPU chips (the paper used two GPUs).
+    Samples whose working set (incl. B^T) does not fit device memory are
+    dropped, mirroring the paper's OOM filter (=> fewer than 1000 valid
+    samples per chip, like the paper's 891/941).
+
+  * ``collect_measured``  — real wall-clock of the two XLA lowerings of the
+    NT op on the *current host backend*.  On this CPU container the signal
+    is weak (|ratio-1| ~ 5%) but genuine; on a real TPU the same harness
+    times the Pallas candidates.
+
+Record format (paper): (gm, sm, cc, mbw, l2c, m, n, k) -> label,
+label = +1 if P_NT >= P_TNN (choose NT) else -1 (choose TNN).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import simulate
+from .candidates import CANDIDATES
+from .features import make_features
+from .hardware import SIMULATED_CHIPS, HardwareSpec, host_spec
+
+__all__ = ["SelectionDataset", "collect_analytic", "collect_measured", "paper_grid"]
+
+
+def paper_grid(lo: int = 7, hi: int = 16) -> List[Tuple[int, int, int]]:
+    """The paper's S = {2^i | i = 7..16}^3 grid (1000 combinations)."""
+    sizes = [2**i for i in range(lo, hi + 1)]
+    return [(m, n, k) for m in sizes for n in sizes for k in sizes]
+
+
+@dataclass
+class SelectionDataset:
+    """Samples + per-candidate times.
+
+    X:      (N, 8) feature matrix (paper layout)
+    y:      (N,) labels in {-1, +1}   (+1 => NT faster-or-equal, choose NT)
+    times:  algo-name -> (N,) seconds; always includes the paper pair
+            'NT' and 'TNN'; may include more candidates (beyond-paper).
+    mnk:    (N, 3) matrix sizes
+    hw:     (N,) hardware name per sample
+    source: 'analytic-tpu' | 'measured-host'
+    """
+
+    X: np.ndarray
+    y: np.ndarray
+    times: Dict[str, np.ndarray]
+    mnk: np.ndarray
+    hw: np.ndarray
+    source: str
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+    def class_counts(self) -> Dict[int, int]:
+        return {-1: int((self.y == -1).sum()), 1: int((self.y == 1).sum())}
+
+    def subset(self, idx: np.ndarray) -> "SelectionDataset":
+        return SelectionDataset(
+            X=self.X[idx],
+            y=self.y[idx],
+            times={k: v[idx] for k, v in self.times.items()},
+            mnk=self.mnk[idx],
+            hw=self.hw[idx],
+            source=self.source,
+        )
+
+    @staticmethod
+    def concat(parts: Sequence["SelectionDataset"]) -> "SelectionDataset":
+        keys = set(parts[0].times)
+        for p in parts:
+            keys &= set(p.times)
+        return SelectionDataset(
+            X=np.concatenate([p.X for p in parts]),
+            y=np.concatenate([p.y for p in parts]),
+            times={k: np.concatenate([p.times[k] for p in parts]) for k in keys},
+            mnk=np.concatenate([p.mnk for p in parts]),
+            hw=np.concatenate([p.hw for p in parts]),
+            source="+".join(dict.fromkeys(p.source for p in parts)),
+        )
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            X=self.X,
+            y=self.y,
+            mnk=self.mnk,
+            hw=self.hw,
+            source=np.array(self.source),
+            time_keys=np.array(sorted(self.times)),
+            **{f"time_{k}": v for k, v in self.times.items()},
+        )
+
+    @staticmethod
+    def load(path: str) -> "SelectionDataset":
+        z = np.load(path, allow_pickle=False)
+        keys = [str(k) for k in z["time_keys"]]
+        return SelectionDataset(
+            X=z["X"],
+            y=z["y"],
+            times={k: z[f"time_{k}"] for k in keys},
+            mnk=z["mnk"],
+            hw=z["hw"],
+            source=str(z["source"]),
+        )
+
+
+def collect_analytic(
+    chips: Optional[Sequence[HardwareSpec]] = None,
+    lo: int = 7,
+    hi: int = 16,
+    dsize: int = 2,
+    sigma: float = 0.03,
+    algos: Sequence[str] = simulate.SIM_ALGOS,
+) -> SelectionDataset:
+    """Build the analytic-TPU dataset over the paper grid."""
+    chips = list(SIMULATED_CHIPS.values()) if chips is None else list(chips)
+    rows_X, rows_y, rows_mnk, rows_hw = [], [], [], []
+    times: Dict[str, List[float]] = {a: [] for a in algos}
+    for hw in chips:
+        for (m, n, k) in paper_grid(lo, hi):
+            # paper's OOM filter: TNN needs room for B^T
+            if not simulate.fits_memory(hw, m, n, k, dsize, tnn=True):
+                continue
+            t = {a: simulate.simulate_time(hw, a, m, n, k, dsize, sigma) for a in algos}
+            p_nt = simulate.matmul_flops(m, n, k) / t["NT_DIRECT"]
+            p_tnn = simulate.matmul_flops(m, n, k) / t["TNN"]
+            label = 1 if p_nt >= p_tnn else -1
+            rows_X.append(make_features(hw, m, n, k))
+            rows_y.append(label)
+            rows_mnk.append((m, n, k))
+            rows_hw.append(hw.name)
+            for a in algos:
+                times[a].append(t[a])
+    ds = SelectionDataset(
+        X=np.array(rows_X),
+        y=np.array(rows_y),
+        times={a: np.array(v) for a, v in times.items()},
+        mnk=np.array(rows_mnk),
+        hw=np.array(rows_hw),
+        source="analytic-tpu",
+    )
+    # canonical aliases for the paper pair
+    ds.times["NT"] = ds.times["NT_DIRECT"]
+    ds.times["TNN"] = ds.times["TNN"]
+    return ds
+
+
+def _bench(fn, a, b, reps: int, warmup: int = 1) -> float:
+    import jax
+
+    out = fn(a, b)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(fn(a, b))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def collect_measured(
+    sizes: Optional[Sequence[int]] = None,
+    reps: int = 3,
+    dtype: str = "float32",
+    candidates: Tuple[str, str] = ("XLA_NT", "XLA_TNN"),
+    max_flops: float = 5e10,
+    verbose: bool = False,
+) -> SelectionDataset:
+    """Real wall-clock dataset on the current backend (host CPU here)."""
+    import jax
+    import jax.numpy as jnp
+
+    sizes = [2**i for i in range(5, 11)] if sizes is None else list(sizes)
+    hw = host_spec()
+    nt_fn = jax.jit(CANDIDATES[candidates[0]].fn)
+    tnn_fn = jax.jit(CANDIDATES[candidates[1]].fn)
+    key = jax.random.PRNGKey(0)
+    rows_X, rows_y, rows_mnk, rows_hw = [], [], [], []
+    t_nt_all, t_tnn_all = [], []
+    for m in sizes:
+        for n in sizes:
+            for k in sizes:
+                if simulate.matmul_flops(m, n, k) > max_flops:
+                    continue
+                a = jax.random.normal(key, (m, k), dtype=jnp.dtype(dtype))
+                b = jax.random.normal(key, (n, k), dtype=jnp.dtype(dtype))
+                t_nt = _bench(nt_fn, a, b, reps)
+                t_tnn = _bench(tnn_fn, a, b, reps)
+                label = 1 if t_nt <= t_tnn else -1
+                rows_X.append(make_features(hw, m, n, k))
+                rows_y.append(label)
+                rows_mnk.append((m, n, k))
+                rows_hw.append(hw.name)
+                t_nt_all.append(t_nt)
+                t_tnn_all.append(t_tnn)
+                if verbose:
+                    print(f"  m={m} n={n} k={k} NT={t_nt*1e3:.3f}ms "
+                          f"TNN={t_tnn*1e3:.3f}ms -> {label}")
+    return SelectionDataset(
+        X=np.array(rows_X),
+        y=np.array(rows_y),
+        times={"NT": np.array(t_nt_all), "TNN": np.array(t_tnn_all)},
+        mnk=np.array(rows_mnk),
+        hw=np.array(rows_hw),
+        source="measured-host",
+    )

@@ -1,0 +1,43 @@
+"""Feature extraction for the selection problem.
+
+Paper format (8-dim):  (gm, sm, cc, mbw, l2c, m, n, k) -> label in {-1, +1}
+
+Feature generation is O(1) — the paper stresses this so the predictor adds
+negligible overhead.  In our JAX port the predictor runs at *trace* time
+(shapes are static under jit), so the runtime overhead is exactly zero.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .hardware import HardwareSpec
+
+__all__ = ["FEATURE_NAMES", "make_features", "make_feature_matrix", "normalize01"]
+
+FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k")
+
+
+def make_features(hw: HardwareSpec, m: int, n: int, k: int) -> np.ndarray:
+    """The paper's 8-dim sample vector.  O(1)."""
+    gm, sm, cc, mbw, l2c = hw.features()
+    return np.array([gm, sm, cc, mbw, l2c, float(m), float(n), float(k)])
+
+
+def make_feature_matrix(
+    hw: HardwareSpec, mnk: Sequence[Sequence[int]]
+) -> np.ndarray:
+    base = np.array(hw.features(), dtype=np.float64)
+    mnk = np.asarray(mnk, dtype=np.float64)
+    return np.concatenate([np.tile(base, (len(mnk), 1)), mnk], axis=1)
+
+
+def normalize01(X: np.ndarray, lo=None, hi=None):
+    """(0,1) min-max normalisation — required for SVMs, not for trees."""
+    X = np.asarray(X, dtype=np.float64)
+    lo = X.min(axis=0) if lo is None else lo
+    hi = X.max(axis=0) if hi is None else hi
+    span = np.where(hi > lo, hi - lo, 1.0)
+    return (X - lo) / span, lo, hi

@@ -1,0 +1,220 @@
+"""The MTNN selector — the paper's Algorithm 2, as a trace-time dispatcher.
+
+Differences from the paper's runtime flow (and why):
+  * JAX shapes are static under ``jit``; the predictor therefore runs once
+    per distinct (m, n, k) at *trace* time and never in the compiled step.
+    The paper's 0.005 ms per-call prediction overhead becomes exactly zero.
+  * The paper's OOM guard ("if B^T does not fit, use NT") is preserved: the
+    selector refuses extra-memory candidates when the estimated resident
+    bytes would exceed the memory budget.
+  * Binary (paper-faithful) and k-way (beyond-paper) modes share this API.
+
+The default artifact shipped in ``core/artifacts/`` is trained on the
+analytic-TPU dataset; ``examples/collect_and_train_selector.py`` rebuilds
+it (optionally from measured data).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .candidates import CANDIDATES, PAPER_PAIR, Candidate, get_candidate
+from .features import make_features
+from .gbdt import GBDTClassifier
+from .hardware import SIMULATED_CHIPS, TPU_V5E, HardwareSpec, host_spec
+from .train_model import KWayModel
+
+__all__ = ["MTNNSelector", "select_matmul", "default_selector", "set_default_selector"]
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
+
+
+@dataclass
+class SelectorStats:
+    calls: int = 0
+    by_candidate: Dict[str, int] = None
+
+    def __post_init__(self):
+        if self.by_candidate is None:
+            self.by_candidate = {}
+
+    def record(self, name: str):
+        self.calls += 1
+        self.by_candidate[name] = self.by_candidate.get(name, 0) + 1
+
+
+class MTNNSelector:
+    """Selects one candidate implementation of ``C = A @ B^T`` per shape."""
+
+    def __init__(
+        self,
+        model,
+        hardware: Optional[HardwareSpec] = None,
+        mode: str = "binary",
+        binary_pair: Tuple[str, str] = PAPER_PAIR,
+        distributed: bool = False,
+        mem_budget_frac: float = 0.9,
+    ):
+        self.model = model
+        self.hardware = hardware or TPU_V5E
+        self.mode = mode
+        self.binary_pair = binary_pair
+        self.distributed = distributed
+        self.mem_budget_frac = mem_budget_frac
+        self.stats = SelectorStats()
+        self._cache: Dict[Tuple[int, int, int, int], str] = {}
+
+    # -- decision ----------------------------------------------------------
+    def _fits(self, cand: Candidate, m: int, n: int, k: int, dsize: int) -> bool:
+        if not cand.extra_memory:
+            return True
+        budget = self.hardware.mem_gib * (1024**3) * self.mem_budget_frac
+        resident = (m * k + n * k + m * n + n * k) * dsize
+        return resident <= budget
+
+    def _allowed(self, name: str) -> bool:
+        return (not self.distributed) or CANDIDATES[name].distributed_safe
+
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+        """Candidate name for this shape.  O(1) features, O(trees*depth) walk."""
+        key = (m, n, k, dsize)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.stats.record(hit)
+            return hit
+        x = make_features(self.hardware, m, n, k)[None, :]
+        if self.mode == "binary":
+            nt_name, tnn_name = self.binary_pair
+            label = int(self.model.predict(x)[0])
+            name = nt_name if label == 1 else tnn_name
+            if not (self._fits(CANDIDATES[name], m, n, k, dsize) and self._allowed(name)):
+                name = nt_name  # paper's fallback: NT when B^T cannot fit
+        else:  # k-way
+            order = np.argsort(self.model.predict_times(x)[0])
+            name = None
+            for i in order:
+                cand_name = self.model.candidates[i]
+                mapped = _sim_to_candidate(cand_name)
+                if mapped is None:
+                    continue
+                if self._fits(CANDIDATES[mapped], m, n, k, dsize) and self._allowed(
+                    mapped
+                ):
+                    name = mapped
+                    break
+            if name is None:
+                name = self.binary_pair[0]
+        self._cache[key] = name
+        self.stats.record(name)
+        return name
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        payload = {
+            "mode": self.mode,
+            "binary_pair": list(self.binary_pair),
+            "hardware": self.hardware.name,
+            "model": self.model.to_dict(),
+        }
+        with open(path, "w") as fh:
+            json.dump(payload, fh)
+
+    @staticmethod
+    def load(
+        path: str,
+        hardware: Optional[HardwareSpec] = None,
+        distributed: bool = False,
+    ) -> "MTNNSelector":
+        with open(path) as fh:
+            payload = json.load(fh)
+        model_d = payload["model"]
+        if model_d.get("kind") == "kway":
+            model = KWayModel.from_dict(model_d)
+        else:
+            model = GBDTClassifier.from_dict(model_d)
+        hw = hardware or SIMULATED_CHIPS.get(payload.get("hardware", ""), TPU_V5E)
+        return MTNNSelector(
+            model,
+            hardware=hw,
+            mode=payload.get("mode", "binary"),
+            binary_pair=tuple(payload.get("binary_pair", PAPER_PAIR)),
+            distributed=distributed,
+        )
+
+
+def _sim_to_candidate(sim_name: str) -> Optional[str]:
+    """Map analytic-model arm names to registered candidate names."""
+    table = {
+        "NT_DIRECT": "XLA_NT",
+        "TNN": "XLA_TNN",
+        "TNN_FUSED": "PALLAS_TNN_FUSED",
+        "XLA_DOT": "XLA_NT",
+        # already-candidate names pass through
+        **{n: n for n in CANDIDATES},
+    }
+    return table.get(sim_name)
+
+
+# -- module-level default selector ------------------------------------------
+
+_DEFAULT: Optional[MTNNSelector] = None
+
+
+def set_default_selector(sel: Optional[MTNNSelector]) -> None:
+    global _DEFAULT
+    _DEFAULT = sel
+
+
+@functools.lru_cache(maxsize=1)
+def _builtin_selector() -> MTNNSelector:
+    if os.path.exists(DEFAULT_ARTIFACT):
+        return MTNNSelector.load(DEFAULT_ARTIFACT, distributed=True)
+    # fall back: train a small model on the analytic dataset right here.
+    from .dataset import collect_analytic
+    from .train_model import train_paper_model
+
+    ds = collect_analytic(lo=7, hi=13)
+    clf, _ = train_paper_model(ds)
+    return MTNNSelector(clf, distributed=True)
+
+
+def default_selector() -> MTNNSelector:
+    return _DEFAULT if _DEFAULT is not None else _builtin_selector()
+
+
+def select_matmul(
+    a,
+    b,
+    selector: Optional[MTNNSelector] = None,
+    force: Optional[str] = None,
+):
+    """Compute ``a @ b^T`` through the selected candidate.
+
+    ``a``: (..., m, k) activations; ``b``: (n, k) weights in the paper's
+    row-major (out, in) convention — the forward pass of a dense layer is
+    literally the paper's NT operation.
+    """
+    import jax.numpy as jnp
+
+    sel = selector or default_selector()
+    lead = a.shape[:-1]
+    k = a.shape[-1]
+    n = b.shape[0]
+    m = 1
+    for d in lead:
+        m *= int(d)
+    if force is not None:
+        name = force
+    else:
+        name = sel.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
+    a2 = a.reshape((m, k))
+    out = get_candidate(name).fn(a2, b)
+    return out.reshape(lead + (n,))

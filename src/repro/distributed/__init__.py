@@ -1,0 +1,29 @@
+"""Distribution layer: sharding rules + explicit collectives."""
+
+from .collectives import (
+    compressed_mean,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+from .sharding import (
+    batch_specs,
+    cache_specs_tree,
+    data_axes,
+    named,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs_tree",
+    "data_axes",
+    "named",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "compressed_mean",
+]

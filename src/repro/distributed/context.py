@@ -1,0 +1,71 @@
+"""Current-mesh context: lets deep model code apply sharding constraints
+without threading the Mesh through every call signature.
+
+``constrain(x, P(...))`` is a no-op outside a registered mesh (single-
+device tests, eager exploration), so model code stays portable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["set_current_mesh", "current_mesh", "use_mesh", "constrain", "dp_axes"]
+
+_MESH: Optional[Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH = prev
+
+
+def dp_axes() -> tuple:
+    if _MESH is None:
+        return ()
+    return tuple(a for a in _MESH.axis_names if a in ("pod", "data"))
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the current mesh (no-op without).
+
+    Axes named in ``spec`` that don't exist on the current mesh, or that
+    don't divide the corresponding dim, degrade to None.
+    """
+    if _MESH is None:
+        return x
+    entries = list(spec) + [None] * (x.ndim - len(spec))
+    fixed = []
+    for dim, e in zip(x.shape, entries):
+        if e is None:
+            fixed.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        if not all(a in _MESH.shape for a in axes):
+            fixed.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= _MESH.shape[a]
+        fixed.append(e if (dim % size == 0 and dim >= size) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))

@@ -1,0 +1,259 @@
+"""Sharding rules: params / optimizer state / batches / decode caches.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  DP runs over ``("pod", "data")`` jointly; TP/EP over
+``"model"``.  Rules are *divisibility-guarded*: a dim is only sharded when
+it divides evenly, falling back along a documented chain (out-dim ->
+in-dim -> replicate), so every assigned arch lowers on the production mesh
+regardless of its head/expert counts (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "data_axes",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs_tree",
+    "named",
+]
+
+# weights whose *input* dim carries the model axis (their producer's output
+# dim is model-sharded, so contraction happens model-local then psums)
+_ROW_IN = {"wo", "down", "out"}
+
+# §Perf knob (beyond-paper variant): projections whose candidate dim is
+# smaller than this are replicated instead of model-sharded — thin shards
+# (e.g. mamba2's (128, d) B/C projections, smollm's 576-wide heads) cost
+# more in resharding collectives than they save in FLOPs.  0 = paper-
+# faithful baseline behaviour.
+MIN_MODEL_DIM = 0
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(f"[{k.idx}]")
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return tuple(out)
+
+
+def _spec_for_param(names: Tuple[str, ...], shape, mesh: Mesh) -> P:
+    msize = _axis_size(mesh, "model")
+    nd = len(shape)
+    none = [None] * nd
+
+    def with_model(dim: int, check_min: bool = True) -> Optional[P]:
+        # MIN_MODEL_DIM guards *projection width* dims only (thin shards);
+        # expert-count / vocab dims bypass it via check_min=False
+        if check_min and shape[dim] < max(MIN_MODEL_DIM, msize):
+            return None
+        s = list(none)
+        s[dim] = "model"
+        return P(*s)
+
+    # 0/1-D: norms, biases, scalars — replicated
+    if nd <= 1:
+        return P(*none)
+
+    # embeddings / LM head: (V, d) vocab-sharded
+    if "emb" in names:
+        if shape[-2] % msize == 0:
+            s = with_model(nd - 2, check_min=False)
+            if s is not None:
+                return s
+        return P(*none)
+
+    # MoE expert tensors: (..., E, f|d, d|f) — sharded 2-D: one dim over
+    # 'model' (EP, or TP-within-expert when E doesn't divide), PLUS a
+    # second dim over the data axes (FSDP/ZeRO-3 style: weights stored
+    # fully sharded, all-gathered per layer at compute time).  Without the
+    # second axis kimi-k2's 1T params are 130 GB/device — found by the
+    # dry-run memory proof.
+    if "moe" in names and names[-1] in ("gate", "up", "down"):
+        daxes = data_axes(mesh)
+        dsize = _axis_size(mesh, daxes)
+        d_entry = daxes if len(daxes) > 1 else daxes[0]
+        e_dim, mid, last = nd - 3, nd - 2, nd - 1
+        ff_dim = mid if names[-1] in ("gate", "up") else last
+        other = last if ff_dim == mid else mid
+        s = list(none)
+        if shape[e_dim] % msize == 0:  # EP on experts
+            s[e_dim] = "model"
+            if shape[ff_dim] % dsize == 0:  # FSDP on the hidden dim
+                s[ff_dim] = d_entry
+        elif shape[ff_dim] % msize == 0:  # TP within expert
+            s[ff_dim] = "model"
+            if shape[other] % dsize == 0:  # FSDP on d_model
+                s[other] = d_entry
+        return P(*s)
+
+    # depthwise conv taps: (d_conv, d_inner)
+    if names[-1] == "conv_w":
+        if shape[-1] % msize == 0:
+            s = with_model(nd - 1)
+            if s is not None:
+                return s
+        return P(*none)
+
+    # dense weights "w" under a named projection
+    if names[-1] == "w" and nd >= 2:
+        parent = names[-2] if len(names) >= 2 else ""
+        # wdt's out-dim IS the SSD head axis: replicating it (MIN_MODEL_DIM)
+        # destroys the head-sharding anchor of the decay tensors and XLA
+        # gathers xh instead (+80 GB collectives — §Perf iteration #2,
+        # refuted first attempt).  Head-axis projections bypass the
+        # thin-shard rule.
+        anchor = parent in ("wdt",)
+        if parent in _ROW_IN:
+            order = (nd - 1, nd - 2)  # prefer in-dim (model-sharded producer)
+        else:
+            order = (nd - 2, nd - 1)  # prefer out-dim
+        for dim in order:
+            if shape[dim] % msize == 0:
+                s = with_model(dim, check_min=not anchor)
+                if s is not None:
+                    return s
+        return P(*none)
+
+    return P(*none)
+
+
+def param_specs(shapes_tree, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``shapes_tree`` (arrays or
+    ShapeDtypeStruct leaves)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_param(_path_names(path), leaf.shape, mesh),
+        shapes_tree,
+    )
+
+
+def _zero1(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: extend a param spec by sharding the largest free dim over the
+    data axes (optimizer state only)."""
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if used & set(daxes):  # already data-sharded (2-D FSDP tensors)
+        return P(*entries)
+    free = [
+        (shape[i], i)
+        for i in range(len(shape))
+        if entries[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize
+    ]
+    if not free:
+        return P(*entries)
+    _, dim = max(free)
+    entries[dim] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def opt_state_specs(opt_state_shapes, params_specs, mesh: Mesh, zero1: bool = True):
+    """Optimizer-state specs.  Leaves that match a param shape inherit its
+    spec (+ZeRO-1 data sharding); factored/scalar stats get generic rules."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        s = _spec_for_param(names, leaf.shape, mesh)
+        if zero1 and len(leaf.shape) >= 1:
+            s = _zero1(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, opt_state_shapes)
+
+
+def batch_specs(batch_shapes, mesh: Mesh):
+    """Shard the leading batch dim over ('pod','data') when divisible."""
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    axes = daxes if len(daxes) > 1 else daxes[0]
+
+    def spec(leaf):
+        shape = leaf.shape
+        s: list = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % dsize == 0 and shape[0] >= dsize:
+            s[0] = axes
+        return P(*s)
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def _spec_for_cache(names, shape, mesh: Mesh) -> P:
+    """Decode-cache leaves.
+
+    attn 'k'/'v': (layers, B, slots, kv, dh); ssm 'ssm': (layers, B, H, P, N);
+    'conv': (layers, B, taps, d_inner).  Greedy: B -> data axes (else slots),
+    kv/H -> model (else slots/d_inner).
+    """
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    msize = _axis_size(mesh, "model")
+    axes_entry = daxes if len(daxes) > 1 else daxes[0]
+    nd = len(shape)
+    s: list = [None] * nd
+    kind = names[-1] if names else ""
+    if kind in ("k", "v"):
+        b_dim, slot_dim, kv_dim = nd - 4, nd - 3, nd - 2
+        if shape[b_dim] % dsize == 0 and shape[b_dim] >= dsize:
+            s[b_dim] = axes_entry
+        elif shape[slot_dim] % dsize == 0:
+            s[slot_dim] = axes_entry
+        if shape[kv_dim] % msize == 0:
+            s[kv_dim] = "model"
+        elif s[slot_dim] is None and shape[slot_dim] % msize == 0:
+            s[slot_dim] = "model"
+    elif kind == "ssm":
+        b_dim, h_dim = nd - 4, nd - 3
+        if shape[b_dim] % dsize == 0 and shape[b_dim] >= dsize:
+            s[b_dim] = axes_entry
+        if shape[h_dim] % msize == 0:
+            s[h_dim] = "model"
+    elif kind == "conv":
+        b_dim, d_dim = nd - 3, nd - 1
+        if shape[b_dim] % dsize == 0 and shape[b_dim] >= dsize:
+            s[b_dim] = axes_entry
+        if shape[d_dim] % msize == 0:
+            s[d_dim] = "model"
+    elif kind == "pos":
+        pass  # scalar position: replicated
+    return P(*s)
+
+
+def cache_specs_tree(cache_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_cache(_path_names(path), leaf.shape, mesh),
+        cache_shapes,
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

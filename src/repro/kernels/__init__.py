@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the NT-matmul candidate set (paper §IV).
+
+``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec kernel, ``ops.py``
+the jit'd wrappers, ``ref.py`` the pure-jnp oracles.
+"""
+
+from . import ops, ref
+from .common import DEFAULT_BLOCK, should_interpret
+
+__all__ = ["ops", "ref", "DEFAULT_BLOCK", "should_interpret"]

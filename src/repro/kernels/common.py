@@ -1,0 +1,64 @@
+"""Shared helpers for the Pallas kernels in this package.
+
+Target hardware is TPU (MXU 128x128, VMEM-staged blocks).  On this CPU
+container every kernel runs under ``interpret=True``; on a TPU backend the
+same ``pallas_call`` lowers through Mosaic.  ``ops.py`` picks the mode.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "cdiv",
+    "round_up",
+    "pick_block",
+    "pad2",
+    "should_interpret",
+    "DEFAULT_BLOCK",
+    "MXU_EDGE",
+]
+
+MXU_EDGE = 128
+# Default VMEM tile for the matmul family: (bm, bn, bk).  At bf16 this is
+# 512KiB per operand block + a 1MiB f32 accumulator — comfortably inside a
+# v5e core's VMEM with double buffering.
+DEFAULT_BLOCK: Tuple[int, int, int] = (512, 512, 512)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, mult: int) -> int:
+    return cdiv(x, mult) * mult
+
+
+def pick_block(dim: int, default: int, align: int = MXU_EDGE) -> int:
+    """Largest useful block: the default, shrunk for small dims but kept
+    hardware-aligned so the MXU tiles stay full."""
+    return min(default, round_up(max(dim, 1), align))
+
+
+def pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols).  Zeros are correctness-safe
+    for both transpose and matmul accumulation."""
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def should_interpret() -> bool:
+    """Interpret Pallas on non-TPU backends (this container is CPU-only).
+
+    Override with REPRO_PALLAS_INTERPRET=0/1.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,73 @@
+"""Blocked NN matmul: C = A @ B, A:(m,k) B:(k,n).
+
+The layout-clean kernel TNN runs after the out-of-place transpose.  Grid is
+(m/bm, n/bn, k/bk) with the k axis sequential ("arbitrary") so a single
+f32 VMEM accumulator per (i, j) tile carries partial sums across k steps.
+Both operands feed the MXU in its native orientation (contraction dim on
+lanes) — no in-kernel re-orientation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+
+__all__ = ["matmul_nn"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_nn(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm, bn, bk = block or DEFAULT_BLOCK
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    ap, bp = pad2(a, mp, kp), pad2(b, kp, np_)
+    n_k = cdiv(kp, bk)
+    interp = should_interpret() if interpret is None else interpret
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(cdiv(mp, bm), cdiv(np_, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interp,
+        name="matmul_nn",
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,77 @@
+"""Direct NT matmul: C = A @ B^T, A:(m,k) B:(n,k) — the "cuBLAS NT" arm.
+
+Each grid step loads a (bn, bk) block of B *in its stored row-major
+orientation* and must re-orient it inside VMEM before the MXU dot.  The
+re-orientation (``.T`` -> VPU shuffles on TPU) is paid once per
+(i, j, kk) grid step, i.e. the same B block is re-transposed
+``ceil(m/bm)`` times as the m-grid revisits it — this is the structural
+inefficiency the paper observed in cuBLAS's NT path, reproduced on TPU
+tiling mechanics.  See ``matmul_tnn_fused`` for the cheaper fused variant
+and ``ops.matmul_tnn`` for the paper's two-kernel TNN.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+
+__all__ = ["matmul_nt"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Explicit VMEM-side transpose of the B block, then a clean NN dot.
+    bt = b_ref[...].T  # (bk, bn): VPU re-orientation, once per grid step
+    acc_ref[...] += jnp.dot(a_ref[...], bt, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_nt(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}^T"
+    bm, bn, bk = block or DEFAULT_BLOCK
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    ap, bp = pad2(a, mp, kp), pad2(b, np_, kp)
+    n_k = cdiv(kp, bk)
+    interp = should_interpret() if interpret is None else interpret
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(cdiv(mp, bm), cdiv(np_, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # B block indexed (n-tile, k-tile): stored orientation.
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interp,
+        name="matmul_nt_direct",
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,85 @@
+"""Fused TNN matmul (beyond-paper): C = A @ B^T without materialising B^T.
+
+Difference from ``matmul_nt``: the B block is *not* re-oriented with an
+explicit VMEM transpose.  Instead the MXU dot is issued with NT dimension
+numbers (contract both operands' trailing dim), letting Mosaic feed the
+systolic array with B's stored layout directly — the transpose dissolves
+into the MXU operand staging rather than costing separate VPU shuffle
+cycles.  This removes both TNN's HBM round-trip *and* matmul_nt's
+per-grid-step shuffle.
+
+The grid iterates n-major (j outermost) so each (bn, bk) B strip stays
+VMEM-resident across the full k loop, and A strips stream — the
+"block-resident revisit order" of DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+
+__all__ = ["matmul_tnn_fused"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # NT dimension numbers: contract trailing dims of both blocks.  No
+    # explicit re-orientation op; Mosaic stages the transposed operand.
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_tnn_fused(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}^T"
+    bm, bn, bk = block or DEFAULT_BLOCK
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    ap, bp = pad2(a, mp, kp), pad2(b, np_, kp)
+    n_k = cdiv(kp, bk)
+    interp = should_interpret() if interpret is None else interpret
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        # j outermost: B strip resident, A streams.
+        grid=(cdiv(np_, bn), cdiv(mp, bm), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda j, i, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interp,
+        name="matmul_tnn_fused",
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,48 @@
+"""Jit'd public wrappers over the Pallas kernels (the candidate registry's
+``PALLAS_*`` arms call these).
+
+  matmul_nn         C = A @ B          one clean blocked kernel
+  matmul_nt         C = A @ B^T        direct NT, in-kernel block transpose
+  matmul_tnn        C = A @ B^T        paper's TNN: transpose kernel + NN
+  matmul_tnn_fused  C = A @ B^T        fused NT, MXU-staged transpose
+  transpose         B^T                out-of-place bandwidth-bound kernel
+
+All validated against ``ref.py`` under interpret mode in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from .matmul_nn import matmul_nn
+from .matmul_nt import matmul_nt
+from .matmul_tnn_fused import matmul_tnn_fused
+from .transpose import transpose
+
+__all__ = [
+    "transpose",
+    "matmul_nn",
+    "matmul_nt",
+    "matmul_tnn",
+    "matmul_tnn_fused",
+]
+
+
+def matmul_tnn(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The paper's TNN (Algorithm 1): out-of-place transpose of B, then NN.
+
+    Two kernel launches; B^T round-trips through HBM.  Wins when the
+    one-off transpose cost amortises over a large m grid (Eq. 3).
+    """
+    tb = None if block is None else (block[1], block[2])
+    bt = transpose(b, block=tb, interpret=interpret)
+    return matmul_nn(a, bt, block=block, interpret=interpret)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernel must match
+(asserted with ``assert_allclose`` across shape/dtype sweeps in
+``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["transpose", "matmul_nn", "matmul_nt", "matmul_tnn", "matmul_tnn_fused"]
+
+
+def transpose(b: jax.Array) -> jax.Array:
+    """Out-of-place transpose of a 2-D array: (n, k) -> (k, n)."""
+    return jnp.swapaxes(b, 0, 1)
+
+
+def matmul_nn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with A:(m,k), B:(k,n) -> C:(m,n); accumulate in f32."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def matmul_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B^T with A:(m,k), B:(n,k) -> C:(m,n); accumulate in f32."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+# TNN and TNN_FUSED compute the same function as matmul_nt; they differ
+# only in the physical schedule.  Their oracle is matmul_nt.
+matmul_tnn = matmul_nt
+matmul_tnn_fused = matmul_nt

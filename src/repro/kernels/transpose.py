@@ -1,0 +1,61 @@
+"""Out-of-place tiled matrix transpose (the paper's §IV enabler).
+
+GPU original (Ruetsch & Micikevicius [20]): stage 32x32 tiles through
+shared memory so both the global read and the global write are coalesced,
+reaching ~80% of peak bandwidth.
+
+TPU adaptation: the same idea maps onto VMEM blocks.  Each grid step reads
+one (bn, bk) block of B HBM->VMEM, re-orients it with the VPU inside VMEM
+(an 8x128-lane shuffle, not a strided HBM access), and writes the (bk, bn)
+block of B^T to its transposed grid position.  Both HBM transfers are
+contiguous block copies, which is exactly the coalescing property the CUDA
+kernel buys with shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+
+__all__ = ["transpose_kernel", "transpose"]
+
+
+def _kernel(b_ref, out_ref):
+    # VMEM-resident re-orientation; lowers to VPU lane shuffles on TPU.
+    out_ref[...] = b_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def transpose(
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """B:(n,k) -> B^T:(k,n) via one bandwidth-bound Pallas kernel."""
+    n, k = b.shape
+    bn = pick_block(n, block[0] if block else DEFAULT_BLOCK[1])
+    bk = pick_block(k, block[1] if block else DEFAULT_BLOCK[2])
+    np_, kp = round_up(n, bn), round_up(k, bk)
+    bp = pad2(b, np_, kp)
+    interp = should_interpret() if interpret is None else interpret
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(cdiv(np_, bn), cdiv(kp, bk)),
+        in_specs=[pl.BlockSpec((bn, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((kp, np_), b.dtype),
+        interpret=interp,
+        name="oop_transpose",
+    )(bp)
+    return out[:k, :n]
+
+
+transpose_kernel = _kernel

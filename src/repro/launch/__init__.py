@@ -1,0 +1,39 @@
+"""Launch layer: meshes, step builders, dry-run, roofline, drivers.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — it sets XLA_FLAGS at
+import time and must only be imported as ``__main__`` (or explicitly,
+before jax initializes devices).
+"""
+
+from .mesh import make_local_mesh, make_production_mesh
+from .roofline import (
+    HW_V5E,
+    model_flops_for_cell,
+    parse_collectives,
+    roofline,
+    roofline_from_costs,
+)
+from .steps import (
+    TrainStepConfig,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_state_shapes,
+    train_state_specs,
+)
+
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "train_state_shapes",
+    "train_state_specs",
+    "TrainStepConfig",
+    "HW_V5E",
+    "roofline",
+    "roofline_from_costs",
+    "parse_collectives",
+    "model_flops_for_cell",
+]

@@ -1,0 +1,232 @@
+"""Exact per-step cost accounting via composable unrolled probes.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, so a scanned layer
+stack (and the microbatch-accumulation scan) under-reports FLOPs / bytes /
+collectives.  Rather than unrolling the production artifact (HLO blow-up)
+we exploit linearity: segments execute sequentially, so every metric is
+
+    total_micro = base + sum_s (count_s - 1) * unit_s
+    total_step  = accum * total_micro (+ optimizer probe, train only)
+
+where ``base`` is the model with every segment count = 1 (python-unrolled:
+no while loops => exact costs) and ``unit_s`` is the marginal cost of one
+extra unit of segment ``s`` (probe with count_s = 2, minus base).  The
+optimizer update runs once per step and is probed separately (it contains
+no loops => exact).  Known residual: the SSD inter-chunk ``lax.scan``
+inside a Mamba unit is still counted once — its body is O(B*H*P*N) element
+ops vs the unit's matmuls, <0.1% error (EXPERIMENTS.md §Dry-run).
+
+All probes lower on the SAME production mesh as the artifact, so sharding
+-induced collectives and per-device fractions are faithful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import cache_specs, input_specs
+from repro.distributed.context import use_mesh
+from repro.distributed import batch_specs, cache_specs_tree, named, param_specs
+from repro.launch.roofline import HW_V5E, parse_collectives
+from repro.models import lm
+from repro.optim import make_optimizer
+
+__all__ = ["account_cell", "CellCosts"]
+
+
+def _probe_cfg(cfg, counts: List[int]):
+    segs = tuple((c, blocks) for c, (_, blocks) in zip(counts, cfg.segments))
+    return cfg.replace(segments=segs, unroll_segments=True)
+
+
+def _measure(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text())
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": coll.effective_bytes,
+    }
+    for k, v in coll.by_kind.items():
+        out[f"coll_{k}"] = v
+    return out
+
+
+def _combine(base: Dict, units: List[Tuple[int, Dict]], mult: float = 1.0) -> Dict:
+    keys = set(base)
+    for _, u in units:
+        keys |= set(u)
+    out = {}
+    for k in keys:
+        v = base.get(k, 0.0)
+        for extra, u in units:
+            v += extra * u.get(k, 0.0)
+        out[k] = v * mult
+    return out
+
+
+def _grad_probe(pcfg, mesh: Mesh, micro_batch: int, seq: int, shape_cell,
+                zero1_grads: bool = False):
+    """value_and_grad of the loss on one microbatch (probe config)."""
+    cell = dataclasses.replace(shape_cell, global_batch=micro_batch, seq_len=seq)
+    b_shapes = input_specs(pcfg, cell)
+    p_shapes = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), pcfg))
+    p_specs = param_specs(p_shapes, mesh)
+    b_specs = batch_specs(b_shapes, mesh)
+
+    def fn(params, batch):
+        loss, _ = lm.lm_loss(params, pcfg, batch)
+        return loss
+
+    grad_fn = jax.value_and_grad(fn)
+    if zero1_grads:
+        from repro.distributed import opt_state_specs
+
+        g32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes
+        )
+        g_specs = opt_state_specs(g32, None, mesh, zero1=True)
+    else:
+        g_specs = p_specs  # grads co-sharded with params
+    with use_mesh(mesh):
+        compiled = (
+            jax.jit(
+                grad_fn,
+                in_shardings=(named(mesh, p_specs), named(mesh, b_specs)),
+                out_shardings=(named(mesh, P()), named(mesh, g_specs)),
+            )
+            .lower(p_shapes, b_shapes)
+            .compile()
+        )
+    return _measure(compiled)
+
+
+def _opt_probe(cfg, mesh: Mesh, zero1_grads: bool = False) -> Dict[str, float]:
+    """One optimizer update on the FULL config's param shapes (no loops)."""
+    from repro.launch.steps import train_state_shapes, train_state_specs
+
+    state_shapes = train_state_shapes(cfg)
+    state_specs = train_state_specs(state_shapes, mesh)
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    def fn(state, grads):
+        new_p, new_opt = opt_update(grads, state["opt"], state["params"], 1e-3)
+        return {"params": new_p, "opt": new_opt, "step": state["step"] + 1}
+
+    g_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), state_shapes["params"]
+    )
+    if zero1_grads:
+        from repro.distributed import opt_state_specs
+
+        g_specs = opt_state_specs(g_shapes, None, mesh, zero1=True)
+    else:
+        g_specs = param_specs(g_shapes, mesh)
+    with use_mesh(mesh):
+        compiled = (
+            jax.jit(
+                fn,
+                in_shardings=(named(mesh, state_specs), named(mesh, g_specs)),
+                out_shardings=named(mesh, state_specs),
+            )
+            .lower(state_shapes, g_shapes)
+            .compile()
+        )
+    return _measure(compiled)
+
+
+def _prefill_probe(pcfg, mesh: Mesh, batch: int, seq: int, shape_cell):
+    cell = dataclasses.replace(shape_cell, global_batch=batch, seq_len=seq)
+    b_shapes = input_specs(pcfg, cell)
+    p_shapes = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), pcfg))
+    p_specs = param_specs(p_shapes, mesh)
+    b_specs = batch_specs(b_shapes, mesh)
+    c_shapes = jax.eval_shape(lambda: lm.init_lm_cache(pcfg, batch, seq))
+    c_specs = cache_specs_tree(c_shapes, mesh)
+
+    def fn(params, b):
+        return lm.lm_prefill(params, pcfg, b, max_seq=seq)
+
+    with use_mesh(mesh):
+        compiled = (
+            jax.jit(
+                fn,
+                in_shardings=(named(mesh, p_specs), named(mesh, b_specs)),
+                out_shardings=(named(mesh, P()), named(mesh, c_specs)),
+            )
+            .lower(p_shapes, b_shapes)
+            .compile()
+        )
+    return _measure(compiled)
+
+
+def _decode_probe(pcfg, mesh: Mesh, shape_cell):
+    b_shapes = input_specs(pcfg, shape_cell)
+    p_shapes = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), pcfg))
+    p_specs = param_specs(p_shapes, mesh)
+    b_specs = batch_specs(b_shapes, mesh)
+    c_shapes = cache_specs(pcfg, shape_cell)
+    c_specs = cache_specs_tree(c_shapes, mesh)
+
+    def fn(params, cache, b):
+        return lm.lm_decode(params, pcfg, cache, b)
+
+    with use_mesh(mesh):
+        compiled = (
+            jax.jit(
+                fn,
+                in_shardings=(
+                    named(mesh, p_specs),
+                    named(mesh, c_specs),
+                    named(mesh, b_specs),
+                ),
+                out_shardings=(named(mesh, P()), named(mesh, c_specs)),
+            )
+            .lower(p_shapes, c_shapes, b_shapes)
+            .compile()
+        )
+    return _measure(compiled)
+
+
+class CellCosts(dict):
+    """Corrected per-device totals: flops / bytes / coll_bytes (+by kind)."""
+
+
+def account_cell(cfg, shape, mesh: Mesh, accum: int = 1,
+                 zero1_grads: bool = False) -> CellCosts:
+    counts = [c for c, _ in cfg.segments]
+    base_counts = [1] * len(counts)
+
+    if shape.kind == "train":
+        micro_gb = max(1, shape.global_batch // accum)
+        run = lambda pc: _grad_probe(pc, mesh, micro_gb, shape.seq_len, shape,
+                                     zero1_grads=zero1_grads)
+    elif shape.kind == "prefill":
+        run = lambda pc: _prefill_probe(pc, mesh, shape.global_batch, shape.seq_len, shape)
+    else:
+        run = lambda pc: _decode_probe(pc, mesh, shape)
+
+    base = run(_probe_cfg(cfg, base_counts))
+    units: List[Tuple[int, Dict]] = []
+    for s, c in enumerate(counts):
+        if c <= 1:
+            continue
+        two = list(base_counts)
+        two[s] = 2
+        probe2 = run(_probe_cfg(cfg, two))
+        unit = {k: probe2.get(k, 0.0) - base.get(k, 0.0) for k in set(base) | set(probe2)}
+        units.append((c - 1, unit))
+
+    totals = _combine(base, units, mult=float(accum if shape.kind == "train" else 1))
+    if shape.kind == "train":
+        opt = _opt_probe(cfg, mesh, zero1_grads=zero1_grads)
+        totals = {k: totals.get(k, 0.0) + opt.get(k, 0.0) for k in set(totals) | set(opt)}
+    return CellCosts(totals)

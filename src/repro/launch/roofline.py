@@ -1,0 +1,251 @@
+"""Roofline analysis from compiled artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms, in seconds, per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = effective_collective_bytes_per_device / link_bw
+
+cost_analysis() on the post-SPMD module is already per-device, so dividing
+global quantities by chip count is equivalent.  collective bytes are NOT
+in cost_analysis: we parse ``compiled.as_text()`` (post-partitioning HLO)
+and sum per-op effective wire bytes using ring-algorithm conventions:
+
+  all-reduce        2 * (S-1)/S * result      (reduce-scatter + all-gather)
+  all-gather        (S-1)/S * result
+  reduce-scatter    (S-1) * result            (operand = S * result)
+  all-to-all        (S-1)/S * result
+  collective-permute  result
+
+with S the replica-group size parsed from ``replica_groups=[G,S]<=[N]``.
+
+Hardware constants: TPU v5e — 197 TF/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+__all__ = ["HW_V5E", "CollectiveStats", "parse_collectives", "roofline", "RooflineReport"]
+
+HW_V5E = {
+    "peak_flops_bf16": 197e12,
+    "hbm_gbps": 819e9,
+    "link_gbps": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# "= f32[128,256]{1,0} all-gather(" — result type then op name
+_RE_OP = re.compile(
+    r"=\s+(?:\([^)]*\)\s+)?(\w+)\[([\d,]*)\][^ ]*\s+(" + "|".join(_COLL_OPS) + r")\b"
+)
+_RE_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return float(b * n)
+
+
+@dataclass
+class CollectiveStats:
+    effective_bytes: float = 0.0
+    result_bytes: float = 0.0
+    count: int = 0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _RE_OP.search(line)
+        if not m:
+            # '-start' variants ("all-gather-start") match via op name too
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if f"{kind}-done" in line:
+            continue  # count start ops only, not their completions
+        rb = _shape_bytes(dtype, dims)
+        gm = _RE_GROUPS.search(line)
+        S = int(gm.group(2)) if gm else 2
+        S = max(S, 2)
+        frac = (S - 1) / S
+        if kind == "all-reduce":
+            eff = 2.0 * frac * rb
+        elif kind == "all-gather":
+            eff = frac * rb
+        elif kind == "reduce-scatter":
+            eff = (S - 1) * rb
+        elif kind == "all-to-all":
+            eff = frac * rb
+        else:  # collective-permute
+            eff = rb
+        stats.effective_bytes += eff
+        stats.result_bytes += rb
+        stats.count += 1
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + eff
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    collectives: Optional[CollectiveStats] = None
+    memory_stats: Optional[Dict[str, float]] = None
+
+    def to_dict(self) -> Dict:
+        d = {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+        if self.collectives:
+            d["collective_by_kind"] = self.collectives.by_kind
+            d["collective_counts"] = self.collectives.count_by_kind
+        if self.memory_stats:
+            d["memory"] = self.memory_stats
+        return d
+
+
+def roofline(
+    compiled,
+    n_chips: int,
+    model_flops_global: float = 0.0,
+    hw: Dict[str, float] = HW_V5E,
+) -> RooflineReport:
+    """Derive the three terms from a compiled SPMD executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))  # per-device (SPMD module)
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+
+    t_c = flops / hw["peak_flops_bf16"]
+    t_m = byts / hw["hbm_gbps"]
+    t_x = coll.effective_bytes / hw["link_gbps"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = None
+    try:
+        ms = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": float(ms.argument_size_in_bytes),
+            "output_bytes": float(ms.output_size_in_bytes),
+            "temp_bytes": float(ms.temp_size_in_bytes),
+            "alias_bytes": float(ms.alias_size_in_bytes),
+        }
+    except Exception:
+        pass
+
+    useful = 0.0
+    if model_flops_global and flops:
+        useful = model_flops_global / (flops * n_chips)
+    return RooflineReport(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=coll.effective_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_ratio=useful,
+        collectives=coll,
+        memory_stats=mem,
+    )
+
+
+def roofline_from_costs(
+    costs: Dict[str, float],
+    n_chips: int,
+    model_flops_global: float = 0.0,
+    hw: Dict[str, float] = HW_V5E,
+    memory_stats: Optional[Dict[str, float]] = None,
+) -> RooflineReport:
+    """Three terms from probe-corrected per-device totals (accounting.py)."""
+    flops = costs.get("flops", 0.0)
+    byts = costs.get("bytes", 0.0)
+    coll = costs.get("coll_bytes", 0.0)
+    t_c = flops / hw["peak_flops_bf16"]
+    t_m = byts / hw["hbm_gbps"]
+    t_x = coll / hw["link_gbps"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = (
+        model_flops_global / (flops * n_chips) if model_flops_global and flops else 0.0
+    )
+    cs = CollectiveStats(
+        effective_bytes=coll,
+        by_kind={
+            k[len("coll_"):]: v
+            for k, v in costs.items()
+            if k.startswith("coll_") and k != "coll_bytes"
+        },
+    )
+    return RooflineReport(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=coll,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_ratio=useful,
+        collectives=cs,
+        memory_stats=memory_stats,
+    )
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N=active params, D=tokens);
+    2*N*D for inference forward passes."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,97 @@
+"""Batched serving driver: prefill then token-by-token decode.
+
+Demonstrates the inference path end-to-end on CPU with a reduced config:
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --batch 4 --prompt-len 32 --gen 16 --mesh 1x1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.distributed import batch_specs, cache_specs_tree, named, param_specs
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "production":
+        mesh = make_production_mesh()
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_local_mesh(d, m)
+
+    max_seq = args.prompt_len + args.gen
+    rng = np.random.RandomState(args.seed)
+    B = args.batch
+
+    params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    p_specs = param_specs(params, mesh)
+    with mesh:
+        params = jax.device_put(params, named(mesh, p_specs))
+
+    if cfg.input_mode == "frames":
+        prompt = {"frames": jnp.asarray(
+            rng.randn(B, args.prompt_len, cfg.d_model).astype(np.float32) * 0.02
+        )}
+    else:
+        prompt = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab, (B, args.prompt_len)), jnp.int32
+        )}
+
+    prefill = make_prefill_step(cfg, max_seq=max_seq)
+    serve = make_serve_step(cfg)
+    with mesh:
+        jit_prefill = jax.jit(prefill)
+        jit_serve = jax.jit(serve, donate_argnums=(1,))  # in-place cache
+        t0 = time.perf_counter()
+        logits, cache = jit_prefill(params, prompt)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        outs = []
+        tok = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1)[:, None]
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            outs.append(np.asarray(tok))
+            if cfg.input_mode == "frames":
+                step_in = {"frames": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+            else:
+                step_in = {"tokens": tok.astype(jnp.int32)}
+            logits, cache = jit_serve(params, cache, step_in)
+            tok = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1)[:, None]
+        jax.block_until_ready(logits)
+        t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(outs, axis=1)
+    print(f"[serve] prefill {args.prompt_len} tok x {B}: {t_prefill*1e3:.1f} ms")
+    print(
+        f"[serve] decode {args.gen} steps: {t_decode*1e3:.1f} ms "
+        f"({t_decode/args.gen*1e3:.2f} ms/tok)"
+    )
+    print("[serve] sample generations:", gen[:2, :8].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Model definitions: every linear hot-spot routes through the MTNN
+selector (``repro.core``), making the paper's technique a first-class
+framework feature across all ten assigned architectures."""
+
+from .attention import AttnConfig, attention, attention_decode, init_attention
+from .blocks import BlockCfg, apply_block, decode_block, init_block, prefill_block
+from .fcn import FCNConfig, fcn_forward, fcn_loss, init_fcn
+from .layers import (
+    cross_entropy_loss,
+    dense,
+    embed,
+    gated_mlp,
+    init_dense,
+    init_embedding,
+    init_gated_mlp,
+    init_rmsnorm,
+    rmsnorm,
+    softcap,
+    unembed,
+)
+from .lm import init_lm, init_lm_cache, lm_decode, lm_forward, lm_loss, lm_prefill
+from .moe import MoEConfig, init_moe, moe_layer
+from .ssm import SSMConfig, init_ssm, ssm_decode, ssm_layer
+
+__all__ = [
+    "AttnConfig",
+    "BlockCfg",
+    "FCNConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "attention",
+    "attention_decode",
+    "apply_block",
+    "decode_block",
+    "init_attention",
+    "init_block",
+    "prefill_block",
+    "init_lm",
+    "init_lm_cache",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode",
+    "init_fcn",
+    "fcn_forward",
+    "fcn_loss",
+    "init_moe",
+    "moe_layer",
+    "init_ssm",
+    "ssm_layer",
+    "ssm_decode",
+    "dense",
+    "init_dense",
+    "embed",
+    "unembed",
+    "init_embedding",
+    "rmsnorm",
+    "init_rmsnorm",
+    "gated_mlp",
+    "init_gated_mlp",
+    "softcap",
+    "cross_entropy_loss",
+]

@@ -1,0 +1,57 @@
+"""Fully connected networks — the paper's §VI-C Caffe experiment.
+
+Weights are stored row-major ``(out, in)`` (the Caffe/paper convention), so
+every forward projection is the NT operation ``y = x @ W^T`` and routes
+through MTNN.  The two paper configurations (MNIST-sized and the large
+"synthetic" net) live in ``configs/fcn_paper.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, cross_entropy_loss, dense, init_dense
+
+__all__ = ["FCNConfig", "init_fcn", "fcn_forward", "fcn_loss"]
+
+
+@dataclass(frozen=True)
+class FCNConfig:
+    name: str
+    input_dim: int
+    output_dim: int
+    hidden: Tuple[int, ...]
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return (self.input_dim,) + self.hidden + (self.output_dim,)
+
+
+def init_fcn(key: jax.Array, cfg: FCNConfig, dtype=jnp.float32) -> Param:
+    dims = cfg.dims
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            init_dense(keys[i], dims[i + 1], dims[i], dtype, bias=True)
+            for i in range(len(dims) - 1)
+        ]
+    }
+
+
+def fcn_forward(params: Param, x: jax.Array, selector=None) -> jax.Array:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = dense(layer, x, selector)  # NT op — MTNN dispatch point
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def fcn_loss(params: Param, batch: Dict[str, jax.Array], selector=None):
+    logits = fcn_forward(params, batch["x"], selector)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss, {"loss": loss}

@@ -1,0 +1,134 @@
+"""Foundational layers.  Every projection stores its weight row-major
+``(out, in)`` — the Caffe convention the paper studies — so the forward
+pass of each dense layer is *literally* the paper's NT operation
+``C = A @ B^T`` and routes through ``core.select_matmul`` (MTNN).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selector import MTNNSelector, select_matmul
+
+__all__ = [
+    "Param",
+    "init_dense",
+    "dense",
+    "init_rmsnorm",
+    "rmsnorm",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "softcap",
+    "init_gated_mlp",
+    "gated_mlp",
+    "cross_entropy_loss",
+]
+
+Param = Dict[str, Any]
+
+
+def init_dense(
+    key: jax.Array,
+    out_dim: int,
+    in_dim: int,
+    dtype=jnp.float32,
+    bias: bool = False,
+    scale: Optional[float] = None,
+) -> Param:
+    """Weight stored (out, in): forward is the NT op x @ W^T."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": (jax.random.normal(key, (out_dim, in_dim)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p: Param, x: jax.Array, selector: Optional[MTNNSelector] = None) -> jax.Array:
+    """y = x @ W^T (+ b) — the paper's NT operation, MTNN-dispatched."""
+    y = select_matmul(x, p["w"], selector=selector)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Param:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: Param, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Gemma-style RMSNorm: weight is (1 + scale), computed in f32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Param:
+    return {"emb": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: Param, tokens: jax.Array, scale_by_sqrt_dim: bool = False) -> jax.Array:
+    x = jnp.take(p["emb"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(p["emb"].shape[1]), x.dtype)
+    return x
+
+
+def unembed(
+    p: Param, x: jax.Array, selector: Optional[MTNNSelector] = None
+) -> jax.Array:
+    """logits = x @ E^T — the LM head is an NT op over (vocab, d)."""
+    return select_matmul(x, p["emb"], selector=selector)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return jnp.asarray(cap, x.dtype) * jnp.tanh(x / jnp.asarray(cap, x.dtype))
+
+
+def init_gated_mlp(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> Param:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(kg, d_ff, d, dtype),
+        "up": init_dense(ku, d_ff, d, dtype),
+        "down": init_dense(kd, d, d_ff, dtype),
+    }
+
+
+def gated_mlp(
+    p: Param,
+    x: jax.Array,
+    activation: str = "gelu",
+    selector: Optional[MTNNSelector] = None,
+) -> jax.Array:
+    """SwiGLU/GeGLU MLP: three NT matmuls."""
+    g = dense(p["gate"], x, selector)
+    act = jax.nn.gelu(g, approximate=True) if activation == "gelu" else jax.nn.silu(g)
+    h = act * dense(p["up"], x, selector)
+    return dense(p["down"], h, selector)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+) -> jax.Array:
+    """Mean next-token CE in f32; ``mask`` zeroes ignored positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,214 @@
+"""Mamba-2 SSD (state-space duality) layer: chunked quadratic-within-chunk /
+linear-across-chunks training form, O(1)-state decode form.
+
+Faithful to Dao & Gu (2024) §6 with two documented simplifications
+(DESIGN.md §4): ``ngroups=1`` (B/C shared across heads) and the short
+causal conv applied to x only.  The intra-chunk computation is matmul-rich
+— exactly the hot-spot class the paper's selector targets — and the
+in/out projections are NT ops routed through MTNN.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, dense, init_dense, init_rmsnorm, rmsnorm
+
+__all__ = ["SSMConfig", "init_ssm", "ssm_layer", "ssm_decode", "init_ssm_cache"]
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32) -> Param:
+    kz, kx, kb, kc, kdt, kcv, ko = jax.random.split(key, 7)
+    H = cfg.n_heads
+    return {
+        "wz": init_dense(kz, cfg.d_inner, cfg.d_model, dtype),
+        "wx": init_dense(kx, cfg.d_inner, cfg.d_model, dtype),
+        "wB": init_dense(kb, cfg.d_state, cfg.d_model, dtype),
+        "wC": init_dense(kc, cfg.d_state, cfg.d_model, dtype),
+        "wdt": init_dense(kdt, H, cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(kcv, (cfg.d_conv, cfg.d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cfg.d_inner,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rmsnorm(cfg.d_inner, dtype),
+        "out": init_dense(ko, cfg.d_model, cfg.d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, d_inner) with taps (d_conv, d_inner)."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(d_conv):
+        out = out + pad[:, t : t + x.shape[1]] * w[t]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P)
+    Bv: jax.Array,  # (B, S, N)
+    Cv: jax.Array,  # (B, S, N)
+    dt: jax.Array,  # (B, S, H) post-softplus
+    A: jax.Array,  # (H,) negative
+    chunk: int,
+    h0: jax.Array = None,  # optional (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,H,P), h_final: (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    N = Bv.shape[-1]
+    L = min(chunk, S)
+    if S % L != 0:  # ragged tail: fall back to one chunk
+        L = S
+    nc = S // L
+    r = lambda t, shape: t.reshape((Bsz, nc, L) + shape)
+    xh, Bv, Cv, dt = r(xh, (H, P)), r(Bv, (N,)), r(Cv, (N,)), r(dt, (H,))
+
+    a = dt * A  # (B,nc,L,H) log-decay per step
+    cum = jnp.cumsum(a, axis=2)  # inclusive within-chunk cumsum
+
+    # intra-chunk (quadratic in L): scores[b,c,l,s,h] = (C_l.B_s) L[l,s,h]
+    cb = jnp.einsum("bcln,bcsn->bcls", Cv, Bv)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    scores = cb[..., None] * decay * dt[:, :, None, :, :]
+    scores = jnp.where(causal[None, None, :, :, None], scores, 0.0)
+    y = jnp.einsum("bclsh,bcshp->bclhp", scores.astype(xh.dtype), xh)
+
+    # chunk summaries: S_c[b,h,p,n] = sum_s exp(cum_L - cum_s) dt_s x_s B_s
+    seg = jnp.exp(cum[:, :, -1:, :] - cum) * dt  # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn", seg.astype(xh.dtype), xh, Bv)
+
+    # inter-chunk scan: H_c = exp(cum_L_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), xh.dtype)
+
+    def step(h, inp):
+        dcy, s_c = inp  # (B,H), (B,H,P,N)
+        h_new = h * dcy[..., None, None].astype(h.dtype) + s_c
+        return h_new, h
+
+    h_final, h_prevs = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, nc, H, P, N) state *before* chunk c
+
+    # inter-chunk contribution: y_t += C_t . (exp(cum_t) H_prev)
+    inter = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp",
+        Cv,
+        h_prevs,
+        jnp.exp(cum).astype(xh.dtype),
+    )
+    y = (y + inter).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssm_layer(
+    p: Param, x: jax.Array, cfg: SSMConfig, selector=None, return_state: bool = False,
+    cache_dtype=jnp.bfloat16,
+):
+    """x: (B, S, d_model) -> (B, S, d_model) [, decode cache]."""
+    B, S, _ = x.shape
+    z = dense(p["wz"], x, selector)
+    xi_raw = dense(p["wx"], x, selector)
+    xi = _causal_conv(xi_raw, p["conv_w"], p["conv_b"])
+    Bv = dense(p["wB"], x, selector).astype(jnp.float32)
+    Cv = dense(p["wC"], x, selector).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dense(p["wdt"], x, selector).astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y, h_final = _ssd_chunked(
+        xh, Bv.astype(xh.dtype), Cv.astype(xh.dtype), dt, A, cfg.chunk
+    )
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out"], y, selector)
+    if not return_state:
+        return out
+    tail = cfg.d_conv - 1
+    conv_cache = xi_raw[:, S - tail :] if S >= tail else jnp.pad(
+        xi_raw, ((0, 0), (tail - S, 0), (0, 0))
+    )
+    cache = {
+        "conv": conv_cache.astype(cache_dtype),
+        "ssm": h_final.astype(cache_dtype),
+    }
+    return out, cache
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+    }
+
+
+def ssm_decode(
+    p: Param,
+    x: jax.Array,  # (B, 1, d_model)
+    cfg: SSMConfig,
+    cache: Dict[str, Any],
+    selector=None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B = x.shape[0]
+    z = dense(p["wz"], x, selector)[:, 0]
+    xi_raw = dense(p["wx"], x, selector)[:, 0]  # (B, d_inner)
+
+    # conv ring: taps over [cache, new]
+    hist = jnp.concatenate([cache["conv"].astype(xi_raw.dtype), xi_raw[:, None]], axis=1)
+    conv_out = jnp.einsum("btd,td->bd", hist, p["conv_w"]) + p["conv_b"]
+    xi = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:].astype(cache["conv"].dtype)
+
+    Bv = dense(p["wB"], x, selector)[:, 0].astype(jnp.float32)  # (B, N)
+    Cv = dense(p["wC"], x, selector)[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dense(p["wdt"], x, selector)[:, 0].astype(jnp.float32) + p["dt_bias"]
+    )  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, cfg.n_heads, cfg.head_dim)
+
+    dA = jnp.exp(dt * A)  # (B, H)
+    h = cache["ssm"].astype(jnp.float32)
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32), Bv
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h) + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z)[:, None])
+    out = dense(p["out"], y, selector)
+    return out, {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}

@@ -1,0 +1,40 @@
+"""Optimizers + schedules + gradient utilities."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adafactor import adafactor_init, adafactor_update
+from .adamw import adamw_init, adamw_update
+from .schedule import constant, warmup_cosine, warmup_linear
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "warmup_cosine",
+    "warmup_linear",
+    "constant",
+    "clip_by_global_norm",
+    "make_optimizer",
+]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params, lr))."""
+    if name == "adamw":
+        return adamw_init, lambda g, s, p, lr: adamw_update(g, s, p, lr, **kw)
+    if name == "adafactor":
+        return adafactor_init, lambda g, s, p, lr: adafactor_update(g, s, p, lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

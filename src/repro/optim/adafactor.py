@@ -1,0 +1,85 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+State is ~O(rows + cols) per matrix instead of AdamW's O(rows * cols) f32
+pair — the difference between kimi-k2 (1T params) fitting a 512-chip v5e
+pod or not (DESIGN.md §5)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adafactor_init", "adafactor_update"]
+
+_EPS1 = 1e-30
+_EPS2 = 1e-3
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def init(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "stats": jax.tree.map(init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads,
+    state,
+    params,
+    lr,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - jnp.power(c, -0.8)
+
+    # pass 1: updated stats.  params is the first tree, so its array leaves
+    # align with stats *subtrees* ({"v"} or {"vr","vc"}), which arrive whole.
+    def upd_stats(p, g, s):
+        g2 = jnp.square(g.astype(jnp.float32)) + _EPS1
+        if _factored(p):
+            return {
+                "vr": beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1),
+                "vc": beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2),
+            }
+        return {"v": beta2 * s["v"] + (1 - beta2) * g2}
+
+    new_stats = jax.tree.map(upd_stats, params, grads, state["stats"])
+
+    # pass 2: parameter update from the new stats
+    def upd_param(p, g, s):
+        g = g.astype(jnp.float32)
+        if _factored(p):
+            vr, vc = s["vr"], s["vc"]
+            denom = vr.mean(axis=-1, keepdims=True)[..., None]
+            vhat = (vr[..., None] / jnp.maximum(denom, _EPS1)) * vc[..., None, :]
+        else:
+            vhat = s["v"]
+        step = g * jax.lax.rsqrt(jnp.maximum(vhat, _EPS1))
+        rms = jnp.sqrt(jnp.mean(step * step) + _EPS1)  # update-RMS clipping
+        step = step / jnp.maximum(1.0, rms / clip_threshold)
+        scale = jnp.maximum(
+            _EPS2, jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2))
+        )  # relative step size
+        new_p = p.astype(jnp.float32) - lr * scale * step
+        if weight_decay:
+            new_p = new_p - lr * weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype)
+
+    new_params = jax.tree.map(upd_param, params, grads, new_stats)
+    return new_params, {"stats": new_stats, "count": count}

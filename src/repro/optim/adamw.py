@@ -1,0 +1,55 @@
+"""AdamW with decoupled weight decay.  State in f32 regardless of param
+dtype (bf16-safe master statistics)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update"]
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    # separate passes (params pytrees contain structural tuples, so a
+    # tuple-unzip with is_leaf would misfire); XLA CSEs the shared terms
+    new_m = jax.tree.map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state["m"]
+    )
+    new_v = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads,
+        state["v"],
+    )
+
+    def upd(p, m2, v2):
+        step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "count": count}

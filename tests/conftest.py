@@ -1,0 +1,50 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests and benches must see
+the single real CPU device (the 512-device override is dryrun-only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_hybrid_cfg():
+    """One config exercising every block kind (attn local/global, mamba,
+    shared-attn, moe) — used by the integration tests."""
+    from repro.configs.arch import ArchConfig, BlockCfg, MoEConfig, SSMConfig
+
+    return ArchConfig(
+        name="tiny-test",
+        family="hybrid",
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_head=16,
+        d_ff=128,
+        vocab=100,
+        segments=(
+            (2, (BlockCfg("attn", "mlp", window=8), BlockCfg("attn", "mlp"))),
+            (1, (BlockCfg("mamba", "none"), BlockCfg("shared_attn", "mlp"))),
+            (1, (BlockCfg("attn", "moe"),)),
+        ),
+        moe=MoEConfig(d_model=64, d_ff=32, n_experts=4, top_k=2, group=16),
+        ssm=SSMConfig(d_model=64, d_state=16, head_dim=16, chunk=8),
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        qk_norm=True,
+        post_norm=True,
+        param_dtype="float32",
+        compute_dtype="float32",
+        attn_chunk=16,
+        remat="none",
+    )

@@ -1,0 +1,149 @@
+"""Distribution layer: sharding-rule invariants (pure), plus real
+multi-device checks run in a subprocess with 8 forced host devices (the
+main test process must keep the single real device — see conftest)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+class TestShardingRules:
+    """Pure spec-construction invariants (no devices needed)."""
+
+    def _specs(self, arch="gemma2-27b"):
+        # abstract meshes are not required: build the spec tree against a
+        # fake mesh-shape lookalike via the production mesh in a subprocess
+        # for real checks; here we only need divisibility logic, so use a
+        # 1x1 local mesh and a mocked 16x16 via monkeypatched axis sizes.
+        pass
+
+    def test_divisibility_guarantee_subprocess(self):
+        """Every param/batch/cache spec divides its dim on the 16x16 mesh
+        for EVERY assigned arch (the invariant the dry-run relies on)."""
+        out = _run_subprocess("""
+            import jax, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.configs import ARCHS, SHAPES, input_specs, cache_specs
+            from repro.distributed import param_specs, batch_specs, cache_specs_tree
+            from repro.launch.mesh import make_local_mesh
+            from repro.models import lm
+
+            mesh = make_local_mesh(2, 4)  # axes (data, model) on 8 devs
+
+            def check(tree, specs):
+                for (path, leaf), (_, spec) in zip(
+                    jax.tree_util.tree_flatten_with_path(tree)[0],
+                    jax.tree_util.tree_flatten_with_path(
+                        specs, is_leaf=lambda x: isinstance(x, P))[0],
+                ):
+                    for dim, entry in zip(leaf.shape, tuple(spec)):
+                        if entry is None: continue
+                        axes = entry if isinstance(entry, tuple) else (entry,)
+                        size = int(np.prod([mesh.shape[a] for a in axes]))
+                        assert dim % size == 0, (path, leaf.shape, spec)
+
+            for name, cfg in ARCHS.items():
+                shapes = jax.eval_shape(lambda c=cfg: lm.init_lm(jax.random.PRNGKey(0), c))
+                check(shapes, param_specs(shapes, mesh))
+                for sn in ("train_4k", "decode_32k"):
+                    b = input_specs(cfg, SHAPES[sn])
+                    check(b, batch_specs(b, mesh))
+                c = jax.eval_shape(lambda c=cfg: lm.init_lm_cache(c, 8, 64))
+                check(c, cache_specs_tree(c, mesh))
+            print("DIVISIBILITY-OK")
+        """)
+        assert "DIVISIBILITY-OK" in out
+
+    def test_compressed_psum_multidevice(self):
+        """int8-compressed all-reduce == f32 all-reduce within quant error."""
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.distributed import compressed_psum
+            from repro.launch.mesh import make_local_mesh
+
+            mesh = make_local_mesh(8, 1)
+            rng = np.random.RandomState(0)
+            g = {"a": jnp.asarray(rng.randn(64, 33), jnp.float32),
+                 "b": jnp.asarray(rng.randn(129), jnp.float32)}
+            with mesh:
+                got = compressed_psum(g, mesh, ("data",))
+            # every replica holds the same g => psum = 8 * g
+            for k in g:
+                want = 8 * np.asarray(g[k])
+                err = np.abs(np.asarray(got[k]) - want)
+                scale = np.abs(np.asarray(g[k])).max() / 127.0
+                assert err.max() <= 8 * (0.5 * scale) + 1e-5, (k, err.max())
+            print("PSUM-OK")
+        """)
+        assert "PSUM-OK" in out
+
+    def test_sharded_train_step_runs_multidevice(self):
+        """A real sharded train step executes on a 4x2 mesh and the loss
+        matches the single-device value (SPMD correctness)."""
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.configs import smoke_config
+            from repro.data import make_train_batch
+            from repro.distributed import batch_specs, named
+            from repro.launch.mesh import make_local_mesh
+            from repro.launch.steps import (TrainStepConfig, make_train_step,
+                train_state_shapes, train_state_specs)
+            from repro.launch.train import build_state
+
+            cfg = smoke_config("gemma3-4b")
+            losses = {}
+            for dm in [(1, 1), (4, 2)]:
+                mesh = make_local_mesh(*dm)
+                ss = train_state_shapes(cfg)
+                sp = train_state_specs(ss, mesh)
+                step = make_train_step(cfg, TrainStepConfig(accum=2), mesh=mesh)
+                state = build_state(cfg, mesh, sp, seed=0)
+                batch = make_train_batch(cfg, 32, 8, 0, seed=0)
+                bsp = batch_specs(jax.tree.map(jnp.asarray, batch), mesh)
+                msp = {"loss": P(), "grad_norm": P(), "lr": P()}
+                with mesh:
+                    jt = jax.jit(step,
+                        in_shardings=(named(mesh, sp), named(mesh, bsp)),
+                        out_shardings=(named(mesh, sp), named(mesh, msp)))
+                    state, metrics = jt(state, jax.device_put(batch, named(mesh, bsp)))
+                losses[dm] = float(metrics["loss"])
+            diff = abs(losses[(1,1)] - losses[(4,2)])
+            assert diff < 1e-3, losses
+            print("SPMD-LOSS-OK", losses)
+        """)
+        assert "SPMD-LOSS-OK" in out
+
+    def test_multipod_mesh_axes(self):
+        out = _run_subprocess("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+            from repro.launch.mesh import make_production_mesh
+            m1 = make_production_mesh()
+            m2 = make_production_mesh(multi_pod=True)
+            assert m1.axis_names == ("data", "model") and m1.size == 256
+            assert m2.axis_names == ("pod", "data", "model") and m2.size == 512
+            print("MESH-OK")
+        """)
+        assert "MESH-OK" in out

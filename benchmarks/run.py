@@ -11,7 +11,14 @@ import argparse
 import time
 import traceback
 
-from . import beyond_paper, paper_figures, paper_tables, roofline_table, table10_fcn
+from . import (
+    beyond_paper,
+    paper_figures,
+    paper_tables,
+    policy_overhead,
+    roofline_table,
+    table10_fcn,
+)
 
 BENCHES = {
     "fig1": paper_figures.fig1_nn_vs_nt,
@@ -23,6 +30,7 @@ BENCHES = {
     "table8": paper_tables.table8_selection,
     "table10": table10_fcn.table10,
     "kway": beyond_paper.kway_selector,
+    "policy_overhead": policy_overhead.policy_overhead,
     "blocksweep": beyond_paper.kernel_block_sweep,
     "roofline": roofline_table.roofline_table,
 }

@@ -1,8 +1,10 @@
 """Paper §VI-C / Table X / Figs. 7-8 — end-to-end FCN training with MTNN.
 
-CaffeNT   = every layer forced through the direct NT candidate.
-CaffeMTNN = every layer dispatched by a selector trained on *measured*
-            host data (the honest analogue of the paper's per-GPU model).
+CaffeNT   = every layer forced through the direct NT candidate
+            (``FixedPolicy("XLA_NT")``).
+CaffeMTNN = every layer dispatched by a policy wrapping a selector trained
+            on *measured* host data (the honest analogue of the paper's
+            per-GPU model).
 
 Real wall-clock on this container's CPU backend.  The synthetic net is
 dimension-scaled (26752 -> 2048, documented) so a minibatch finishes in
@@ -15,7 +17,6 @@ import time
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import core
@@ -31,7 +32,7 @@ SYN_SCALED = {
 }
 
 
-def _bench_phase(cfg: FCNConfig, batch_size: int, force, selector, reps=3):
+def _bench_phase(cfg: FCNConfig, batch_size: int, policy, reps=3):
     key = jax.random.PRNGKey(0)
     params = init_fcn(key, cfg)
     x = jax.random.normal(key, (batch_size, cfg.input_dim))
@@ -41,31 +42,28 @@ def _bench_phase(cfg: FCNConfig, batch_size: int, force, selector, reps=3):
     from repro.models.fcn import fcn_forward
 
     def fwd(p):
-        return fcn_forward(p, batch["x"], selector=selector).sum()
+        return fcn_forward(p, batch["x"]).sum()
 
     def full(p):
         (l, _), g = jax.value_and_grad(
-            lambda q: fcn_loss(q, batch, selector=selector), has_aux=True
+            lambda q: fcn_loss(q, batch), has_aux=True
         )(p)
         return l, g
 
-    if force is not None:
-        old = core.selector._DEFAULT
-        core.set_default_selector(force)
-    try:
+    # dispatch decisions land at trace time, so the policy scope covers the
+    # first (tracing) call of each jitted function; timed re-runs hit the
+    # compiled cache and make no further decisions.
+    with core.use_policy(policy):
         jf = jax.jit(fwd)
         jfb = jax.jit(full)
         jax.block_until_ready(jf(params))
         jax.block_until_ready(jfb(params)[0])
-        t_f = min(
-            _timed(lambda: jax.block_until_ready(jf(params))) for _ in range(reps)
-        )
-        t_fb = min(
-            _timed(lambda: jax.block_until_ready(jfb(params)[0])) for _ in range(reps)
-        )
-    finally:
-        if force is not None:
-            core.set_default_selector(old)
+    t_f = min(
+        _timed(lambda: jax.block_until_ready(jf(params))) for _ in range(reps)
+    )
+    t_fb = min(
+        _timed(lambda: jax.block_until_ready(jfb(params)[0])) for _ in range(reps)
+    )
     return t_f, max(t_fb - t_f, 0.0)  # (forward, backward) seconds
 
 
@@ -75,24 +73,12 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
-class _ForceSelector:
-    """A 'selector' that always picks one candidate (the CaffeNT arm)."""
-
-    def __init__(self, name):
-        self.name = name
-        self.stats = core.selector.SelectorStats()
-
-    def select(self, m, n, k, dsize=4):
-        self.stats.record(self.name)
-        return self.name
-
-
 def table10(full: bool = False):
     section("Table X / Figs.7-8 — FCN training: always-NT vs MTNN (measured)")
     ds = measured_dataset(full)
     clf, rep = core.train_paper_model(ds)
-    sel = core.MTNNSelector(clf, hardware=core.host_spec())
-    nt = _ForceSelector("XLA_NT")
+    mtnn = core.ModelPolicy(core.MTNNSelector(clf, hardware=core.host_spec()))
+    nt = core.FixedPolicy("XLA_NT")  # the CaffeNT arm
 
     out: Dict[str, Dict] = {}
     nets = {"mnist-2h": MNIST_FCNS[2], "mnist-3h": MNIST_FCNS[3],
@@ -102,8 +88,8 @@ def table10(full: bool = False):
           f"{'bwd NT':>9s} {'bwd MTNN':>9s} {'fwd speedup':>11s}")
     for name, cfg in nets.items():
         for bs in batches:
-            fn, bn = _bench_phase(cfg, bs, force=None, selector=nt)
-            fm, bm = _bench_phase(cfg, bs, force=None, selector=sel)
+            fn, bn = _bench_phase(cfg, bs, policy=nt)
+            fm, bm = _bench_phase(cfg, bs, policy=mtnn)
             sp = fn / max(fm, 1e-9)
             out[f"{name}@{bs}"] = {
                 "fwd_nt_ms": fn * 1e3, "fwd_mtnn_ms": fm * 1e3,
@@ -121,7 +107,7 @@ def table10(full: bool = False):
     out["_summary"] = {
         "mean_fwd_speedup": float(np.mean(fwd_sp)),
         "total_ratio": tot_nt / max(tot_mt, 1e-9),
-        "selector_decisions": dict(sel.stats.by_candidate),
+        "selector_decisions": dict(mtnn.stats.by_candidate),
     }
     save_json("table10", out)
     return out

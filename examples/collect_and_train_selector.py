@@ -43,7 +43,7 @@ def main():
     clf, report = core.train_paper_model(ds)
     print(f"      full-data acc {report['full_data_accuracy']['total']*100:.2f}%")
 
-    print(f"[4/4] saving artifact -> {args.out}")
+    print(f"[4/4] saving artifact (schema v{core.SCHEMA_VERSION}) -> {args.out}")
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     sel = core.MTNNSelector(clf)
     sel.save(args.out)
@@ -51,7 +51,8 @@ def main():
     sel2 = core.MTNNSelector.load(args.out)
     assert sel2.select(4096, 4096, 4096) == sel.select(4096, 4096, 4096)
     print("      reload check OK.  The framework's Dense/MoE/SSM layers now "
-          "dispatch through this model by default.")
+          "dispatch through this model by default (current_policy()); scope "
+          "overrides with core.use_policy(...).")
 
 
 if __name__ == "__main__":

@@ -41,15 +41,16 @@ def main():
     )
     print(f"[fcn] {cfg.name}: dims {cfg.dims}, {n_params/1e6:.1f}M params")
 
-    # selector trained on measured host data (or the forced-NT baseline)
+    # policy: learned on measured host data, or the forced-NT baseline
     if args.always_nt:
-        selector = None
-        core.set_default_selector(None)
+        policy = core.FixedPolicy("XLA_NT")
         print("[fcn] MTNN disabled (always XLA_NT)")
     else:
         ds = core.collect_measured(sizes=[64, 256, 1024], reps=2)
         clf, _ = core.train_paper_model(ds)
-        selector = core.MTNNSelector(clf, hardware=core.host_spec())
+        policy = core.ModelPolicy(
+            core.MTNNSelector(clf, hardware=core.host_spec())
+        )
         print(f"[fcn] selector trained on {len(ds)} measured samples")
 
     key = jax.random.PRNGKey(0)
@@ -60,9 +61,11 @@ def main():
 
     @jax.jit
     def step_fn(params, opt, step, batch):
-        (loss, _), grads = jax.value_and_grad(
-            lambda p: fcn_loss(p, batch, selector=selector), has_aux=True
-        )(params)
+        # dispatch decisions happen while tracing, inside this policy scope
+        with core.use_policy(policy):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: fcn_loss(p, batch), has_aux=True
+            )(params)
         grads, gnorm = clip_by_global_norm(grads, 1.0)
         params, opt = adamw_update(grads, opt, params, sched(step))
         return params, opt, loss, gnorm
@@ -87,8 +90,7 @@ def main():
     med = float(np.median(t_hist[2:]))
     print(f"[fcn] done; median {med*1e3:.0f} ms/step "
           f"({2*3*args.batch*n_params/med/1e9:.1f} GFLOP/s effective)")
-    if selector is not None:
-        print(f"[fcn] selector decisions: {selector.stats.by_candidate}")
+    print(core.dispatch_report(policy))
 
 
 if __name__ == "__main__":

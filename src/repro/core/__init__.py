@@ -1,12 +1,38 @@
 """repro.core — the paper's contribution: supervised algorithm selection
 for the NT matmul (MTNN), adapted to TPU/JAX.  See DESIGN.md §1–2."""
 
-from .candidates import CANDIDATES, PAPER_PAIR, get_candidate
+from .candidates import (
+    CANDIDATES,
+    PAPER_PAIR,
+    candidate_names,
+    candidates_for,
+    get_candidate,
+    register_candidate,
+    unregister_candidate,
+)
 from .dataset import SelectionDataset, collect_analytic, collect_measured
+from .engine import dispatch_nt, dispatch_report, policy_from_spec
 from .features import FEATURE_NAMES, make_features
 from .gbdt import DecisionTreeClassifier, GBDTClassifier, GBDTRegressor
 from .hardware import SIMULATED_CHIPS, TPU_V4, TPU_V5E, TPU_V5P, HardwareSpec, host_spec
-from .selector import MTNNSelector, default_selector, select_matmul, set_default_selector
+from .policy import (
+    AnalyticPolicy,
+    CascadePolicy,
+    FixedPolicy,
+    ModelPolicy,
+    SelectionPolicy,
+    current_policy,
+    default_policy,
+    use_policy,
+)
+from .selector import (
+    SCHEMA_VERSION,
+    MTNNSelector,
+    SelectorStats,
+    default_selector,
+    select_matmul,
+    set_default_selector,
+)
 from .svm import SVMClassifier
 from .train_model import (
     KWayModel,
@@ -23,6 +49,23 @@ __all__ = [
     "CANDIDATES",
     "PAPER_PAIR",
     "get_candidate",
+    "register_candidate",
+    "unregister_candidate",
+    "candidate_names",
+    "candidates_for",
+    "SelectionPolicy",
+    "ModelPolicy",
+    "FixedPolicy",
+    "AnalyticPolicy",
+    "CascadePolicy",
+    "use_policy",
+    "current_policy",
+    "default_policy",
+    "dispatch_nt",
+    "dispatch_report",
+    "policy_from_spec",
+    "SelectorStats",
+    "SCHEMA_VERSION",
     "SelectionDataset",
     "collect_analytic",
     "collect_measured",

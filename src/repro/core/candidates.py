@@ -1,6 +1,18 @@
-"""Candidate implementations of the NT operation  C = A @ B^T.
+"""Pluggable registry of candidate implementations of  C = A @ B^T.
 
-The paper's candidate set is {NT, TNN}.  Ours (beyond-paper) is wider:
+The paper's candidate set is {NT, TNN}.  Ours (beyond-paper) is wider, and
+— since this registry is the extension surface every later backend rides on
+— candidates are added with a registration decorator rather than by editing
+a hardcoded dict:
+
+    @register_candidate(
+        "MY_BACKEND_NT", sim_algo="NT_DIRECT",
+        distributed_safe=True, platforms=("gpu",),
+    )
+    def my_backend_nt(a, b):
+        ...
+
+Built-in candidates:
 
   XLA_NT      lax.dot_general contracting (1, 1)      — the "cuBLAS NT" analogue
   XLA_TNN     explicit transpose then NN dot          — the paper's TNN on XLA
@@ -9,55 +21,36 @@ The paper's candidate set is {NT, TNN}.  Ours (beyond-paper) is wider:
   PALLAS_TNN_FUSED  Pallas NT with in-VMEM transpose  — beyond-paper
 
 All candidates share the signature ``f(a, b) -> c`` with ``a:(m,k)``,
-``b:(n,k)``, ``c:(m,n)``, are pure and jit-safe, and are registered in
-``CANDIDATES``.  ``distributed_safe`` marks the candidates that are legal
-inside pjit-partitioned programs without a shard_map wrapper.
+``b:(n,k)``, ``c:(m,n)``, and are pure and jit-safe.  ``distributed_safe``
+marks the candidates that are legal inside pjit-partitioned programs
+without a shard_map wrapper; ``extra_memory`` marks the ones needing room
+for a materialised B^T (the paper's OOM guard); ``platforms``/``dtypes``
+bound where a candidate may be enumerated (per-hardware registries).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Candidate", "CANDIDATES", "get_candidate", "candidate_names"]
+__all__ = [
+    "Candidate",
+    "CANDIDATES",
+    "register_candidate",
+    "unregister_candidate",
+    "get_candidate",
+    "candidate_names",
+    "candidates_for",
+    "current_platform",
+    "candidate_fits_memory",
+    "candidate_allowed",
+    "PAPER_PAIR",
+]
 
-
-def xla_nt(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Direct NT: contract the trailing dim of both operands."""
-    return jax.lax.dot_general(
-        a, b, (((a.ndim - 1,), (b.ndim - 1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).astype(a.dtype)
-
-
-def xla_tnn(a: jax.Array, b: jax.Array) -> jax.Array:
-    """TNN: materialise B^T, then an NN dot."""
-    bt = jnp.swapaxes(b, -1, -2)
-    return jax.lax.dot_general(
-        a, bt, (((a.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).astype(a.dtype)
-
-
-def _pallas_nt(a, b):
-    from repro.kernels import ops
-
-    return ops.matmul_nt(a, b)
-
-
-def _pallas_tnn(a, b):
-    from repro.kernels import ops
-
-    return ops.matmul_tnn(a, b)
-
-
-def _pallas_tnn_fused(a, b):
-    from repro.kernels import ops
-
-    return ops.matmul_tnn_fused(a, b)
+ALL_PLATFORMS: Tuple[str, ...] = ("tpu", "cpu", "gpu")
 
 
 @dataclass(frozen=True)
@@ -67,32 +60,168 @@ class Candidate:
     sim_algo: str  # which analytic-cost-model arm describes it
     distributed_safe: bool  # usable directly under pjit partitioning
     extra_memory: bool  # needs room for B^T (paper's OOM guard)
+    platforms: Tuple[str, ...] = ALL_PLATFORMS  # backends it may run on
+    dtypes: Optional[Tuple[str, ...]] = None  # None => any dtype
+
+    def supports(self, platform: Optional[str] = None, dtype=None) -> bool:
+        if platform is not None and platform not in self.platforms:
+            return False
+        if dtype is not None and self.dtypes is not None:
+            return jnp.dtype(dtype).name in self.dtypes
+        return True
 
 
-CANDIDATES: Dict[str, Candidate] = {
-    "XLA_NT": Candidate("XLA_NT", xla_nt, "NT_DIRECT", True, False),
-    "XLA_TNN": Candidate("XLA_TNN", xla_tnn, "TNN", True, True),
-    "PALLAS_NT": Candidate("PALLAS_NT", _pallas_nt, "NT_DIRECT", False, False),
-    "PALLAS_TNN": Candidate("PALLAS_TNN", _pallas_tnn, "TNN", False, True),
-    "PALLAS_TNN_FUSED": Candidate(
-        "PALLAS_TNN_FUSED", _pallas_tnn_fused, "TNN_FUSED", False, False
-    ),
-}
+# The registry.  ``CANDIDATES`` is the same dict object (kept under its
+# historical name so existing callers and artifacts keep working).
+_REGISTRY: Dict[str, Candidate] = {}
+CANDIDATES = _REGISTRY
 
-# the paper's binary setting
-PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")
+
+def register_candidate(
+    name: str,
+    *,
+    sim_algo: str,
+    distributed_safe: bool = False,
+    extra_memory: bool = False,
+    platforms: Tuple[str, ...] = ALL_PLATFORMS,
+    dtypes: Optional[Tuple[str, ...]] = None,
+):
+    """Decorator registering ``fn(a, b) -> c`` as a dispatch candidate.
+
+    Raises ``ValueError`` on a duplicate name: candidates are identified by
+    name in persisted selector artifacts, so silent replacement would make
+    old artifacts dispatch to different code.
+    """
+
+    def deco(fn: Callable[[jax.Array, jax.Array], jax.Array]):
+        if name in _REGISTRY:
+            raise ValueError(
+                f"candidate {name!r} is already registered; "
+                "unregister_candidate() it first if replacement is intended"
+            )
+        _REGISTRY[name] = Candidate(
+            name=name,
+            fn=fn,
+            sim_algo=sim_algo,
+            distributed_safe=distributed_safe,
+            extra_memory=extra_memory,
+            platforms=tuple(platforms),
+            dtypes=tuple(dtypes) if dtypes is not None else None,
+        )
+        return fn
+
+    return deco
+
+
+def unregister_candidate(name: str) -> None:
+    """Remove a candidate (tests / plugin teardown)."""
+    _REGISTRY.pop(name, None)
 
 
 def get_candidate(name: str) -> Candidate:
     try:
-        return CANDIDATES[name]
+        return _REGISTRY[name]
     except KeyError:
         raise KeyError(
-            f"unknown candidate {name!r}; have {sorted(CANDIDATES)}"
+            f"unknown candidate {name!r}; have {sorted(_REGISTRY)}"
         ) from None
 
 
-def candidate_names(distributed_only: bool = False):
+def candidate_names(distributed_only: bool = False) -> Tuple[str, ...]:
     return tuple(
-        n for n, c in CANDIDATES.items() if c.distributed_safe or not distributed_only
+        n for n, c in _REGISTRY.items() if c.distributed_safe or not distributed_only
     )
+
+
+def candidates_for(
+    platform: Optional[str] = None,
+    dtype=None,
+    distributed: bool = False,
+) -> Tuple[Candidate, ...]:
+    """Per-hardware enumeration: candidates legal on this backend/dtype."""
+    return tuple(
+        c
+        for c in _REGISTRY.values()
+        if c.supports(platform, dtype) and (not distributed or c.distributed_safe)
+    )
+
+
+def current_platform() -> str:
+    """The jax backend candidates must support to be selectable here."""
+    return jax.default_backend()
+
+
+# Shared admissibility guards — the single home of the paper's OOM estimate
+# and the distributed/platform filters, used by both MTNNSelector and the
+# policy zoo so their decisions can never drift apart.
+
+
+def candidate_fits_memory(
+    cand: Candidate, m: int, n: int, k: int, dsize: int, mem_gib: float,
+    budget_frac: float = 0.9,
+) -> bool:
+    """Paper's OOM guard: extra-memory candidates must fit A, B, C *and*
+    the materialised B^T inside the budget."""
+    if not cand.extra_memory:
+        return True
+    budget = mem_gib * (1024**3) * budget_frac
+    resident = (m * k + n * k + m * n + n * k) * dsize
+    return resident <= budget
+
+
+def candidate_allowed(cand: Candidate, distributed: bool) -> bool:
+    """Distributed-safety + runtime-platform filter."""
+    if distributed and not cand.distributed_safe:
+        return False
+    return cand.supports(platform=current_platform())
+
+
+# -- built-in candidates ------------------------------------------------------
+
+
+@register_candidate("XLA_NT", sim_algo="NT_DIRECT", distributed_safe=True)
+def xla_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct NT: contract the trailing dim of both operands."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate(
+    "XLA_TNN", sim_algo="TNN", distributed_safe=True, extra_memory=True
+)
+def xla_tnn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """TNN: materialise B^T, then an NN dot."""
+    bt = jnp.swapaxes(b, -1, -2)
+    return jax.lax.dot_general(
+        a, bt, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate("PALLAS_NT", sim_algo="NT_DIRECT", platforms=("tpu", "cpu"))
+def _pallas_nt(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_nt(a, b)
+
+
+@register_candidate(
+    "PALLAS_TNN", sim_algo="TNN", extra_memory=True, platforms=("tpu", "cpu")
+)
+def _pallas_tnn(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_tnn(a, b)
+
+
+@register_candidate("PALLAS_TNN_FUSED", sim_algo="TNN_FUSED", platforms=("tpu", "cpu"))
+def _pallas_tnn_fused(a, b):
+    from repro.kernels import ops
+
+    return ops.matmul_tnn_fused(a, b)
+
+
+# the paper's binary setting
+PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")

@@ -1,0 +1,121 @@
+"""The dispatch engine: every NT op in the model layer lands here.
+
+``dispatch_nt(a, b)`` computes ``a @ b^T`` through whichever candidate the
+*scoped* policy picks (``policy.current_policy()``) — model code never
+threads a selector argument.  Because JAX shapes are static under ``jit``,
+the policy runs once per distinct shape at trace time and contributes
+nothing to the compiled step.
+
+``dispatch_report()`` renders the per-candidate decision counts of the
+scoped policy — surfaced at the end of train/serve runs so dispatch stays
+observable in production.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .candidates import get_candidate
+from .policy import (
+    AnalyticPolicy,
+    CascadePolicy,
+    FixedPolicy,
+    ModelPolicy,
+    SelectionPolicy,
+    current_policy,
+    default_policy,
+    use_policy,
+)
+
+__all__ = [
+    "dispatch_nt",
+    "dispatch_report",
+    "policy_from_spec",
+    "add_policy_argument",
+    "use_policy",
+    "current_policy",
+    "default_policy",
+]
+
+POLICY_SPEC_HELP = (
+    "NT-dispatch policy: model[:artifact.json] | fixed:<NAME> | analytic | "
+    "cascade:<A,B,...>"
+)
+
+
+def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
+    """Compute ``a @ b^T`` through the policy-selected candidate.
+
+    ``a``: (..., m, k) activations; ``b``: (n, k) weights in the paper's
+    row-major (out, in) convention — the forward pass of a dense layer is
+    literally the paper's NT operation.
+    """
+    import jax.numpy as jnp
+
+    pol = policy if policy is not None else current_policy()
+    lead = a.shape[:-1]
+    k = a.shape[-1]
+    n = b.shape[0]
+    m = 1
+    for d in lead:
+        m *= int(d)
+    name = pol.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
+    a2 = a.reshape((m, k))
+    out = get_candidate(name).fn(a2, b)
+    return out.reshape(lead + (n,))
+
+
+def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
+    """Pretty-print per-candidate decision counts for ``policy`` (default:
+    the scoped policy).  Returns the rendered table; callers print it."""
+    pol = policy if policy is not None else current_policy()
+    stats = pol.stats
+    lines = [f"dispatch report — {pol!r}"]
+    if not stats.calls:
+        lines.append("  (no dispatches recorded)")
+        return "\n".join(lines)
+    width = max(len(n) for n in stats.by_candidate)
+    lines.append(f"  {'candidate':<{width}s} {'calls':>8s} {'share':>7s}")
+    for name, count in sorted(stats.by_candidate.items(), key=lambda kv: -kv[1]):
+        lines.append(
+            f"  {name:<{width}s} {count:8d} {100.0 * count / stats.calls:6.1f}%"
+        )
+    lines.append(f"  {'total':<{width}s} {stats.calls:8d}")
+    return "\n".join(lines)
+
+
+def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
+    """Build a policy from a CLI-friendly spec string.
+
+      model[:path]              learned selector (default artifact or path)
+      fixed:XLA_TNN             FixedPolicy
+      analytic                  AnalyticPolicy on the default hardware
+      cascade:A,B,C             CascadePolicy over the named candidates
+
+    ``distributed=True`` restricts guarded policies to pjit-safe candidates
+    — launchers running on a >1-device mesh must pass it (FixedPolicy is
+    exempt: forcing a candidate is an explicit user override).
+    """
+    kind, _, arg = spec.partition(":")
+    if kind == "model":
+        if not arg:
+            return default_policy()  # builtin selector: distributed-safe
+        return ModelPolicy.from_artifact(arg, distributed=distributed)
+    if kind == "fixed":
+        if not arg:
+            raise ValueError("fixed policy needs a candidate: fixed:<NAME>")
+        return FixedPolicy(arg)
+    if kind == "analytic":
+        return AnalyticPolicy(distributed=distributed)
+    if kind == "cascade":
+        if not arg:
+            raise ValueError("cascade policy needs names: cascade:<A,B,...>")
+        return CascadePolicy(
+            [n.strip() for n in arg.split(",")], distributed=distributed
+        )
+    raise ValueError(f"unknown policy spec {spec!r}")
+
+
+def add_policy_argument(parser) -> None:
+    """Attach the shared ``--policy`` option to an argparse parser."""
+    parser.add_argument("--policy", default="model", help=POLICY_SPEC_HELP)

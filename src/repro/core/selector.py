@@ -9,9 +9,14 @@ Differences from the paper's runtime flow (and why):
     bytes would exceed the memory budget.
   * Binary (paper-faithful) and k-way (beyond-paper) modes share this API.
 
+Dispatch now goes through ``core.engine`` + ``core.policy`` (the selector
+is wrapped by ``ModelPolicy``); ``select_matmul`` below remains as a
+deprecated shim for one release.
+
 The default artifact shipped in ``core/artifacts/`` is trained on the
 analytic-TPU dataset; ``examples/collect_and_train_selector.py`` rebuilds
-it (optionally from measured data).
+it (optionally from measured data).  Artifacts carry a ``schema_version``
+field; unversioned (v0) files from earlier builds are migrated on load.
 """
 
 from __future__ import annotations
@@ -19,21 +24,39 @@ from __future__ import annotations
 import functools
 import json
 import os
+import warnings
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .candidates import CANDIDATES, PAPER_PAIR, Candidate, get_candidate
+from .candidates import (
+    CANDIDATES,
+    PAPER_PAIR,
+    candidate_allowed,
+    candidate_fits_memory,
+)
 from .features import make_features
 from .gbdt import GBDTClassifier
-from .hardware import SIMULATED_CHIPS, TPU_V5E, HardwareSpec, host_spec
+from .hardware import SIMULATED_CHIPS, TPU_V5E, HardwareSpec
 from .train_model import KWayModel
 
-__all__ = ["MTNNSelector", "select_matmul", "default_selector", "set_default_selector"]
+__all__ = [
+    "MTNNSelector",
+    "SelectorStats",
+    "select_matmul",
+    "default_selector",
+    "set_default_selector",
+    "SCHEMA_VERSION",
+]
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
+
+# Artifact schema history:
+#   v0 (unversioned): {mode, binary_pair, hardware, model}
+#   v1: + schema_version; otherwise identical payload layout.
+SCHEMA_VERSION = 1
 
 
 @dataclass
@@ -48,6 +71,11 @@ class SelectorStats:
     def record(self, name: str):
         self.calls += 1
         self.by_candidate[name] = self.by_candidate.get(name, 0) + 1
+
+    def reset(self) -> None:
+        """Zero the counters (between serve requests / benchmark phases)."""
+        self.calls = 0
+        self.by_candidate = {}
 
 
 class MTNNSelector:
@@ -72,15 +100,13 @@ class MTNNSelector:
         self._cache: Dict[Tuple[int, int, int, int], str] = {}
 
     # -- decision ----------------------------------------------------------
-    def _fits(self, cand: Candidate, m: int, n: int, k: int, dsize: int) -> bool:
-        if not cand.extra_memory:
-            return True
-        budget = self.hardware.mem_gib * (1024**3) * self.mem_budget_frac
-        resident = (m * k + n * k + m * n + n * k) * dsize
-        return resident <= budget
+    def _fits(self, cand, m: int, n: int, k: int, dsize: int) -> bool:
+        return candidate_fits_memory(
+            cand, m, n, k, dsize, self.hardware.mem_gib, self.mem_budget_frac
+        )
 
     def _allowed(self, name: str) -> bool:
-        return (not self.distributed) or CANDIDATES[name].distributed_safe
+        return candidate_allowed(CANDIDATES[name], self.distributed)
 
     def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
         """Candidate name for this shape.  O(1) features, O(trees*depth) walk."""
@@ -115,10 +141,16 @@ class MTNNSelector:
         self.stats.record(name)
         return name
 
+    def reset_stats(self) -> None:
+        self.stats.reset()
+
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
+        parent = os.path.dirname(path)
+        if parent:  # bare filenames have no directory to create
+            os.makedirs(parent, exist_ok=True)
         payload = {
+            "schema_version": SCHEMA_VERSION,
             "mode": self.mode,
             "binary_pair": list(self.binary_pair),
             "hardware": self.hardware.name,
@@ -135,6 +167,7 @@ class MTNNSelector:
     ) -> "MTNNSelector":
         with open(path) as fh:
             payload = json.load(fh)
+        payload = _migrate_payload(payload)
         model_d = payload["model"]
         if model_d.get("kind") == "kway":
             model = KWayModel.from_dict(model_d)
@@ -148,6 +181,28 @@ class MTNNSelector:
             binary_pair=tuple(payload.get("binary_pair", PAPER_PAIR)),
             distributed=distributed,
         )
+
+
+def _migrate_payload(payload: Dict) -> Dict:
+    """Bring an artifact payload up to the current schema.
+
+    v0 artifacts predate the ``schema_version`` field; their layout is
+    otherwise the v1 layout, so migration stamps the version (and fills the
+    fields v0 writers were allowed to omit).  Unknown *newer* versions are
+    rejected rather than misread.
+    """
+    version = payload.get("schema_version", 0)
+    if version > SCHEMA_VERSION:
+        raise ValueError(
+            f"selector artifact schema v{version} is newer than supported "
+            f"v{SCHEMA_VERSION}; upgrade the code or rebuild the artifact"
+        )
+    if version < 1:
+        payload = dict(payload)
+        payload.setdefault("mode", "binary")
+        payload.setdefault("binary_pair", list(PAPER_PAIR))
+        payload["schema_version"] = 1
+    return payload
 
 
 def _sim_to_candidate(sim_name: str) -> Optional[str]:
@@ -196,25 +251,26 @@ def select_matmul(
     selector: Optional[MTNNSelector] = None,
     force: Optional[str] = None,
 ):
-    """Compute ``a @ b^T`` through the selected candidate.
+    """DEPRECATED shim over ``engine.dispatch_nt`` — one release of grace.
 
-    ``a``: (..., m, k) activations; ``b``: (n, k) weights in the paper's
-    row-major (out, in) convention — the forward pass of a dense layer is
-    literally the paper's NT operation.
+    ``selector=`` maps onto a scoped ``ModelPolicy``; ``force=`` onto
+    ``FixedPolicy``.  New code should call ``engine.dispatch_nt`` inside a
+    ``use_policy(...)`` scope instead.
     """
-    import jax.numpy as jnp
+    from .engine import dispatch_nt
+    from .policy import FixedPolicy, ModelPolicy
 
-    sel = selector or default_selector()
-    lead = a.shape[:-1]
-    k = a.shape[-1]
-    n = b.shape[0]
-    m = 1
-    for d in lead:
-        m *= int(d)
+    warnings.warn(
+        "select_matmul() is deprecated; use engine.dispatch_nt() under a "
+        "use_policy(...) scope (FixedPolicy replaces force=, ModelPolicy "
+        "replaces selector=)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if force is not None:
-        name = force
+        policy = FixedPolicy(force)
+    elif selector is not None:
+        policy = ModelPolicy(selector)
     else:
-        name = sel.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
-    a2 = a.reshape((m, k))
-    out = get_candidate(name).fn(a2, b)
-    return out.reshape(lead + (n,))
+        policy = None  # scoped/default policy
+    return dispatch_nt(a, b, policy=policy)

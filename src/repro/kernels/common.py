@@ -12,6 +12,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "cdiv",
@@ -21,7 +22,11 @@ __all__ = [
     "should_interpret",
     "DEFAULT_BLOCK",
     "MXU_EDGE",
+    "CompilerParams",
 ]
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 MXU_EDGE = 128
 # Default VMEM tile for the matmul family: (bm, bn, bk).  At bf16 this is

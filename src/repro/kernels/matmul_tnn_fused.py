@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+from .common import CompilerParams, DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
 
 __all__ = ["matmul_tnn_fused"]
 
@@ -76,7 +76,7 @@ def matmul_tnn_fused(
         out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interp,

@@ -66,7 +66,13 @@ def _accum_for(cfg, shape, mesh) -> int:
     return per_replica
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "baseline"):
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    variant: str = "baseline",
+    policy=None,
+):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = cell_applicable(cfg, shape)
@@ -94,9 +100,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "base
     }
     t0 = time.time()
 
+    from repro.core.engine import default_policy, use_policy
     from repro.distributed.context import use_mesh
 
-    with use_mesh(mesh):
+    # Dispatch decisions are made while tracing, so the policy scope wraps
+    # the lower/compile pass; the default is the distributed-safe learned
+    # selector (identical choices to the pre-policy-API behaviour).
+    with use_mesh(mesh), use_policy(policy or default_policy()):
         if shape.kind == "train":
             accum = _accum_for(cfg, shape, mesh)
             record["accum"] = accum
@@ -199,8 +209,8 @@ def _logits_spec(cfg, mesh, batch: int):
     return P(b_axis, None, v_axis)
 
 
-def run_cell(arch, shape_name, multi_pod, verbose=True, variant="baseline"):
-    out = lower_cell(arch, shape_name, multi_pod, variant=variant)
+def run_cell(arch, shape_name, multi_pod, verbose=True, variant="baseline", policy=None):
+    out = lower_cell(arch, shape_name, multi_pod, variant=variant, policy=policy)
     if isinstance(out, dict):  # skipped
         record, compiled = out, None
     else:
@@ -239,7 +249,12 @@ def main():
     ap.add_argument("--out", default=OUT_DIR)
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--variant", default="baseline", choices=["baseline", "optimized"])
+    from repro.core.engine import add_policy_argument, policy_from_spec
+
+    add_policy_argument(ap)
     args = ap.parse_args()
+    # production meshes are always multi-device: pjit-safe candidates only
+    policy = policy_from_spec(args.policy, distributed=True)
 
     os.makedirs(args.out, exist_ok=True)
     cells = []
@@ -259,7 +274,9 @@ def main():
             print(f"skip existing {tag}")
             continue
         try:
-            record = run_cell(arch, shape_name, args.multi_pod, variant=args.variant)
+            record = run_cell(
+                arch, shape_name, args.multi_pod, variant=args.variant, policy=policy
+            )
         except Exception as e:
             record = {
                 "arch": arch,

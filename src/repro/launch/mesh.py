@@ -5,15 +5,21 @@ XLA_FLAGS *before* any jax init)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# jax >= 0.5 has explicit axis types; older versions default to Auto.
+try:
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
 def _mesh(shape, axes) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

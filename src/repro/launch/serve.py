@@ -16,6 +16,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, smoke_config
+from repro.core.engine import add_policy_argument, dispatch_report, policy_from_spec
 from repro.distributed import batch_specs, cache_specs_tree, named, param_specs
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.launch.steps import make_prefill_step, make_serve_step
@@ -32,6 +33,7 @@ def main(argv=None):
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    add_policy_argument(ap)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -40,6 +42,7 @@ def main(argv=None):
     else:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_local_mesh(d, m)
+    policy = policy_from_spec(args.policy, distributed=mesh.size > 1)
 
     max_seq = args.prompt_len + args.gen
     rng = np.random.RandomState(args.seed)
@@ -59,8 +62,8 @@ def main(argv=None):
             rng.randint(0, cfg.vocab, (B, args.prompt_len)), jnp.int32
         )}
 
-    prefill = make_prefill_step(cfg, max_seq=max_seq)
-    serve = make_serve_step(cfg)
+    prefill = make_prefill_step(cfg, max_seq=max_seq, policy=policy)
+    serve = make_serve_step(cfg, policy=policy)
     with mesh:
         jit_prefill = jax.jit(prefill)
         jit_serve = jax.jit(serve, donate_argnums=(1,))  # in-place cache
@@ -90,6 +93,7 @@ def main(argv=None):
         f"({t_decode/args.gen*1e3:.2f} ms/tok)"
     )
     print("[serve] sample generations:", gen[:2, :8].tolist())
+    print(dispatch_report(policy))
     return gen
 
 

@@ -9,6 +9,7 @@ for the production meshes without allocating a single parameter.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -17,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.policy import SelectionPolicy, use_policy
 from repro.distributed import (
     batch_specs,
     cache_specs_tree,
@@ -95,8 +97,17 @@ def _dp(mesh: Mesh) -> int:
     return n
 
 
+def _policy_scope(policy: Optional[SelectionPolicy]):
+    """Scope for step bodies: selection runs at trace time, so wrapping the
+    traced computation pins every NT dispatch in the step to ``policy``."""
+    return use_policy(policy) if policy is not None else contextlib.nullcontext()
+
+
 def make_train_step(
-    cfg, step_cfg: Optional[TrainStepConfig] = None, mesh: Optional[Mesh] = None
+    cfg,
+    step_cfg: Optional[TrainStepConfig] = None,
+    mesh: Optional[Mesh] = None,
+    policy: Optional[SelectionPolicy] = None,
 ) -> Callable:
     sc = step_cfg or TrainStepConfig()
     opt_kw = {"weight_decay": sc.weight_decay} if cfg.optimizer == "adamw" else {}
@@ -114,7 +125,8 @@ def make_train_step(
             g_shardings = named(mesh, param_specs(p_shapes, mesh))
 
     def loss_fn(params, mb):
-        loss, _ = lm.lm_loss(params, cfg, mb)
+        with _policy_scope(policy):
+            loss, _ = lm.lm_loss(params, cfg, mb)
         return loss
 
     def train_step(state, batch):
@@ -163,16 +175,20 @@ def make_train_step(
     return train_step
 
 
-def make_prefill_step(cfg, max_seq: int) -> Callable:
+def make_prefill_step(
+    cfg, max_seq: int, policy: Optional[SelectionPolicy] = None
+) -> Callable:
     def prefill_step(params, batch):
-        return lm.lm_prefill(params, cfg, batch, max_seq=max_seq)
+        with _policy_scope(policy):
+            return lm.lm_prefill(params, cfg, batch, max_seq=max_seq)
 
     return prefill_step
 
 
-def make_serve_step(cfg) -> Callable:
+def make_serve_step(cfg, policy: Optional[SelectionPolicy] = None) -> Callable:
     def serve_step(params, cache, batch):
-        return lm.lm_decode(params, cfg, cache, batch)
+        with _policy_scope(policy):
+            return lm.lm_decode(params, cfg, cache, batch)
 
     return serve_step
 

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
+from repro.core.engine import add_policy_argument, dispatch_report, policy_from_spec
 from repro.data import make_train_batch
 from repro.distributed import batch_specs, named
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -76,6 +77,7 @@ def main(argv=None):
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    add_policy_argument(ap)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -84,6 +86,7 @@ def main(argv=None):
     else:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_local_mesh(d, m)
+    policy = policy_from_spec(args.policy, distributed=mesh.size > 1)
 
     state_shapes = train_state_shapes(cfg)
     state_specs = train_state_specs(state_shapes, mesh)
@@ -91,6 +94,7 @@ def main(argv=None):
         cfg,
         TrainStepConfig(accum=args.accum, lr=args.lr, total_steps=args.steps),
         mesh=mesh,
+        policy=policy,
     )
 
     dummy = make_train_batch(cfg, args.seq, args.batch, 0, seed=args.seed)
@@ -144,6 +148,7 @@ def main(argv=None):
         ckpt.save(args.steps, state)
     print(f"[train] done: {args.steps - start_step} steps, "
           f"median {statistics.median(times)*1e3:.0f} ms/step")
+    print(dispatch_report(policy))
     return state
 
 

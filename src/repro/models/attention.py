@@ -69,13 +69,13 @@ def init_attention(key: jax.Array, cfg: AttnConfig, dtype=jnp.float32) -> Param:
 
 
 def _project_qkv(
-    p: Param, x: jax.Array, cfg: AttnConfig, positions: jax.Array, selector=None
+    p: Param, x: jax.Array, cfg: AttnConfig, positions: jax.Array
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """x:(B,S,d) -> q:(B,S,kv,g,dh), k/v:(B,S,kv,dh), RoPE'd and normed."""
     B, S, _ = x.shape
-    q = dense(p["wq"], x, selector).reshape(B, S, cfg.n_heads, cfg.d_head)
-    k = dense(p["wk"], x, selector).reshape(B, S, cfg.n_kv, cfg.d_head)
-    v = dense(p["wv"], x, selector).reshape(B, S, cfg.n_kv, cfg.d_head)
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv, cfg.d_head)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv, cfg.d_head)
     if cfg.qk_norm:
         q = rmsnorm(p["qn"], q)
         k = rmsnorm(p["kn"], k)
@@ -83,6 +83,28 @@ def _project_qkv(
     k = apply_rope(k, positions, cfg.rope_theta)
     q = q.reshape(B, S, cfg.n_kv, cfg.group, cfg.d_head)
     return q, k, v
+
+
+def _barrier_impl(q, dep):
+    q2, _ = jax.lax.optimization_barrier((q, dep))
+    return q2
+
+
+def _barrier_bwd(dep, g):
+    # dep's cotangent is mathematically zero, but it must stay *barriered
+    # to g*: the zero flows into chunk i's output cotangent, forcing chunk
+    # i's backward to schedule after chunk i+1's — the same serialization
+    # (and peak-memory bound) the forward barrier provides.  An unchained
+    # plain zero would let XLA run every chunk's backward concurrently.
+    g2, zero = jax.lax.optimization_barrier((g, jnp.zeros_like(dep)))
+    return g2, zero
+
+
+# optimization_barrier has no differentiation rule on older jax; the barrier
+# is an identity, so give it one that keeps the scheduling chain intact in
+# both directions.
+_chunk_barrier = jax.custom_vjp(_barrier_impl)
+_chunk_barrier.defvjp(lambda q, dep: (_barrier_impl(q, dep), dep), _barrier_bwd)
 
 
 def _chunk_attend(
@@ -107,7 +129,6 @@ def attention(
     cfg: AttnConfig,
     positions: Optional[jax.Array] = None,
     prefix_len: int = 0,
-    selector=None,
     return_kv: bool = False,
     max_seq: Optional[int] = None,
     cache_dtype=jnp.bfloat16,
@@ -128,7 +149,7 @@ def attention(
         from jax.sharding import PartitionSpec as _PP
 
         x = _c(x, _PP(_d() or None, "model"))
-    q, k, v = _project_qkv(p, x, cfg, positions, selector)
+    q, k, v = _project_qkv(p, x, cfg, positions)
     q = q * (cfg.d_head**-0.5)
 
     chunk = min(cfg.chunk, S)
@@ -161,7 +182,7 @@ def attention(
         v_slab = v[:, lo:q_hi]
         q_chunk = q[:, q_lo:q_hi]
         if dep is not None:
-            q_chunk, _ = jax.lax.optimization_barrier((q_chunk, dep))
+            q_chunk = _chunk_barrier(q_chunk, dep)
         if cfg.sp_attention:
             # shard queries over 'model' for the chunk; K/V stay replicated
             q_chunk = constrain(q_chunk, _P(_daxes, "model"))
@@ -181,7 +202,7 @@ def attention(
     if cfg.sp_attention:  # return to batch-only sharding for the residual
         out = constrain(out, _P(_daxes, None))
     out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
-    out = dense(p["wo"], out, selector)
+    out = dense(p["wo"], out)
     if not return_kv:
         return out
     # build the decode cache this prefill implies
@@ -214,11 +235,10 @@ def attention_decode(
     cfg: AttnConfig,
     cache: Dict[str, jax.Array],
     pos: jax.Array,  # scalar int32: index of the new token
-    selector=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B = x.shape[0]
     slots = cache["k"].shape[1]
-    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None, None], selector)
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None, None])
     q = q * (cfg.d_head**-0.5)
 
     slot = pos % slots if cfg.window is not None else pos
@@ -238,4 +258,4 @@ def attention_decode(
     probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv.astype(q.dtype))
     out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
-    return dense(p["wo"], out, selector), {"k": ck, "v": cv}
+    return dense(p["wo"], out), {"k": ck, "v": cv}

@@ -77,12 +77,12 @@ def init_block(key: jax.Array, b: BlockCfg, mc, dtype=jnp.float32) -> Param:
     return p
 
 
-def _mix(h, p, b, mc, shared, positions, prefix_len, selector):
+def _mix(h, p, b, mc, shared, positions, prefix_len):
     if b.mixer == "attn":
-        return attention(p["attn"], h, _attn_cfg(b, mc), positions, prefix_len, selector)
+        return attention(p["attn"], h, _attn_cfg(b, mc), positions, prefix_len)
     if b.mixer == "shared_attn":
-        return attention(shared["attn"], h, _attn_cfg(b, mc), positions, prefix_len, selector)
-    return ssm_layer(p["ssm"], h, mc.ssm, selector)
+        return attention(shared["attn"], h, _attn_cfg(b, mc), positions, prefix_len)
+    return ssm_layer(p["ssm"], h, mc.ssm)
 
 
 def apply_block(
@@ -93,18 +93,17 @@ def apply_block(
     shared: Optional[Param] = None,
     positions=None,
     prefix_len: int = 0,
-    selector=None,
 ) -> jax.Array:
-    h = _mix(rmsnorm(p["ln1"], x), p, b, mc, shared, positions, prefix_len, selector)
+    h = _mix(rmsnorm(p["ln1"], x), p, b, mc, shared, positions, prefix_len)
     if mc.post_norm:
         h = rmsnorm(p["ln1b"], h)
     x = x + h
     if b.ffn != "none":
         h = rmsnorm(p["ln2"], x)
         if b.ffn == "mlp":
-            h = gated_mlp(p["mlp"], h, mc.activation, selector)
+            h = gated_mlp(p["mlp"], h, mc.activation)
         else:
-            h = moe_layer(p["moe"], h, mc.moe, selector)
+            h = moe_layer(p["moe"], h, mc.moe)
         if mc.post_norm:
             h = rmsnorm(p["ln2b"], h)
         x = x + h
@@ -120,7 +119,6 @@ def prefill_block(
     shared: Optional[Param] = None,
     positions=None,
     prefix_len: int = 0,
-    selector=None,
     cache_dtype=jnp.bfloat16,
 ):
     """apply_block + build this layer's decode cache."""
@@ -128,12 +126,12 @@ def prefill_block(
     if b.mixer in ("attn", "shared_attn"):
         ap = p["attn"] if b.mixer == "attn" else shared["attn"]
         h, cache = attention(
-            ap, h, _attn_cfg(b, mc), positions, prefix_len, selector,
+            ap, h, _attn_cfg(b, mc), positions, prefix_len,
             return_kv=True, max_seq=max_seq, cache_dtype=cache_dtype,
         )
     else:
         h, cache = ssm_layer(
-            p["ssm"], h, mc.ssm, selector, return_state=True, cache_dtype=cache_dtype
+            p["ssm"], h, mc.ssm, return_state=True, cache_dtype=cache_dtype
         )
     if mc.post_norm:
         h = rmsnorm(p["ln1b"], h)
@@ -141,9 +139,9 @@ def prefill_block(
     if b.ffn != "none":
         h = rmsnorm(p["ln2"], x)
         h = (
-            gated_mlp(p["mlp"], h, mc.activation, selector)
+            gated_mlp(p["mlp"], h, mc.activation)
             if b.ffn == "mlp"
-            else moe_layer(p["moe"], h, mc.moe, selector)
+            else moe_layer(p["moe"], h, mc.moe)
         )
         if mc.post_norm:
             h = rmsnorm(p["ln2b"], h)
@@ -168,24 +166,23 @@ def decode_block(
     cache,
     pos,
     shared: Optional[Param] = None,
-    selector=None,
 ):
     h = rmsnorm(p["ln1"], x)
     if b.mixer == "attn":
-        h, cache = attention_decode(p["attn"], h, _attn_cfg(b, mc), cache, pos, selector)
+        h, cache = attention_decode(p["attn"], h, _attn_cfg(b, mc), cache, pos)
     elif b.mixer == "shared_attn":
-        h, cache = attention_decode(shared["attn"], h, _attn_cfg(b, mc), cache, pos, selector)
+        h, cache = attention_decode(shared["attn"], h, _attn_cfg(b, mc), cache, pos)
     else:
-        h, cache = ssm_decode(p["ssm"], h, mc.ssm, cache, selector)
+        h, cache = ssm_decode(p["ssm"], h, mc.ssm, cache)
     if mc.post_norm:
         h = rmsnorm(p["ln1b"], h)
     x = x + h
     if b.ffn != "none":
         h = rmsnorm(p["ln2"], x)
         if b.ffn == "mlp":
-            h = gated_mlp(p["mlp"], h, mc.activation, selector)
+            h = gated_mlp(p["mlp"], h, mc.activation)
         else:
-            h = moe_layer(p["moe"], h, mc.moe, selector)
+            h = moe_layer(p["moe"], h, mc.moe)
         if mc.post_norm:
             h = rmsnorm(p["ln2b"], h)
         x = x + h

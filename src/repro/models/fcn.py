@@ -42,16 +42,16 @@ def init_fcn(key: jax.Array, cfg: FCNConfig, dtype=jnp.float32) -> Param:
     }
 
 
-def fcn_forward(params: Param, x: jax.Array, selector=None) -> jax.Array:
+def fcn_forward(params: Param, x: jax.Array) -> jax.Array:
     n = len(params["layers"])
     for i, layer in enumerate(params["layers"]):
-        x = dense(layer, x, selector)  # NT op — MTNN dispatch point
+        x = dense(layer, x)  # NT op — policy dispatch point
         if i < n - 1:
             x = jax.nn.relu(x)
     return x
 
 
-def fcn_loss(params: Param, batch: Dict[str, jax.Array], selector=None):
-    logits = fcn_forward(params, batch["x"], selector)
+def fcn_loss(params: Param, batch: Dict[str, jax.Array]):
+    logits = fcn_forward(params, batch["x"])
     loss = cross_entropy_loss(logits, batch["labels"])
     return loss, {"loss": loss}

@@ -1,7 +1,12 @@
 """Foundational layers.  Every projection stores its weight row-major
 ``(out, in)`` — the Caffe convention the paper studies — so the forward
 pass of each dense layer is *literally* the paper's NT operation
-``C = A @ B^T`` and routes through ``core.select_matmul`` (MTNN).
+``C = A @ B^T`` and routes through ``core.engine.dispatch_nt`` (MTNN).
+
+Which candidate implements each NT op is decided by the *scoped* selection
+policy (``core.policy.use_policy`` / ``current_policy``) — layers take no
+selector argument; wrap the forward pass (or the ``jit`` trace) in a
+``use_policy(...)`` block to change dispatch.
 """
 
 from __future__ import annotations
@@ -12,7 +17,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.selector import MTNNSelector, select_matmul
+from repro.core.engine import dispatch_nt
 
 __all__ = [
     "Param",
@@ -48,9 +53,9 @@ def init_dense(
     return p
 
 
-def dense(p: Param, x: jax.Array, selector: Optional[MTNNSelector] = None) -> jax.Array:
-    """y = x @ W^T (+ b) — the paper's NT operation, MTNN-dispatched."""
-    y = select_matmul(x, p["w"], selector=selector)
+def dense(p: Param, x: jax.Array) -> jax.Array:
+    """y = x @ W^T (+ b) — the paper's NT operation, policy-dispatched."""
+    y = dispatch_nt(x, p["w"])
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -79,11 +84,9 @@ def embed(p: Param, tokens: jax.Array, scale_by_sqrt_dim: bool = False) -> jax.A
     return x
 
 
-def unembed(
-    p: Param, x: jax.Array, selector: Optional[MTNNSelector] = None
-) -> jax.Array:
+def unembed(p: Param, x: jax.Array) -> jax.Array:
     """logits = x @ E^T — the LM head is an NT op over (vocab, d)."""
-    return select_matmul(x, p["emb"], selector=selector)
+    return dispatch_nt(x, p["emb"])
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:
@@ -102,17 +105,12 @@ def init_gated_mlp(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> Para
     }
 
 
-def gated_mlp(
-    p: Param,
-    x: jax.Array,
-    activation: str = "gelu",
-    selector: Optional[MTNNSelector] = None,
-) -> jax.Array:
+def gated_mlp(p: Param, x: jax.Array, activation: str = "gelu") -> jax.Array:
     """SwiGLU/GeGLU MLP: three NT matmuls."""
-    g = dense(p["gate"], x, selector)
+    g = dense(p["gate"], x)
     act = jax.nn.gelu(g, approximate=True) if activation == "gelu" else jax.nn.silu(g)
-    h = act * dense(p["up"], x, selector)
-    return dense(p["down"], h, selector)
+    h = act * dense(p["up"], x)
+    return dense(p["down"], h)
 
 
 def cross_entropy_loss(

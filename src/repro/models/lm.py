@@ -121,13 +121,13 @@ def _unit_slice(slot_params, i):
     return tuple(jax.tree.map(lambda l: l[i], sp) for sp in slot_params)
 
 
-def _run_stack(params, cfg, x, positions, prefix_len, selector=None):
+def _run_stack(params, cfg, x, positions, prefix_len):
     shared = params.get("shared")
     for (count, blocks), slot_params in zip(cfg.segments, params["segments"]):
         def unit(carry, unit_params, _blocks=blocks):
             h = carry
             for b, bp in zip(_blocks, unit_params):
-                h = apply_block(bp, h, b, cfg, shared, positions, prefix_len, selector)
+                h = apply_block(bp, h, b, cfg, shared, positions, prefix_len)
             return h, None
 
         body = _remat_wrap(unit, cfg)
@@ -139,21 +139,21 @@ def _run_stack(params, cfg, x, positions, prefix_len, selector=None):
     return x
 
 
-def _logits(params, cfg, x, selector=None):
+def _logits(params, cfg, x):
     x = rmsnorm(params["final_norm"], x)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = unembed(head, x, selector)
+    logits = unembed(head, x)
     return softcap(logits, cfg.final_softcap)
 
 
-def lm_forward(params: Param, cfg, batch: Dict[str, jax.Array], selector=None):
+def lm_forward(params: Param, cfg, batch: Dict[str, jax.Array]):
     x, positions, prefix_len = _embed_input(params, cfg, batch)
-    x = _run_stack(params, cfg, x, positions, prefix_len, selector)
-    return _logits(params, cfg, x, selector)
+    x = _run_stack(params, cfg, x, positions, prefix_len)
+    return _logits(params, cfg, x)
 
 
-def lm_loss(params: Param, cfg, batch: Dict[str, jax.Array], selector=None):
-    logits = lm_forward(params, cfg, batch, selector)
+def lm_loss(params: Param, cfg, batch: Dict[str, jax.Array]):
+    logits = lm_forward(params, cfg, batch)
     if cfg.input_mode == "vlm":
         logits = logits[:, cfg.prefix_len :]  # loss on text positions only
     labels = batch["labels"]
@@ -170,7 +170,6 @@ def lm_prefill(
     cfg,
     batch: Dict[str, jax.Array],
     max_seq: int,
-    selector=None,
     cache_dtype=jnp.bfloat16,
 ):
     """Returns (last-position logits, cache)."""
@@ -184,7 +183,7 @@ def lm_prefill(
             for b, bp in zip(_blocks, unit_params):
                 h, c = prefill_block(
                     bp, h, b, cfg, max_seq, shared, positions, prefix_len,
-                    selector, cache_dtype,
+                    cache_dtype,
                 )
                 unit_cache.append(c)
             return h, tuple(unit_cache)
@@ -199,7 +198,7 @@ def lm_prefill(
         else:
             x, seg_cache = jax.lax.scan(body, x, tuple(slot_params))
         caches.append(seg_cache)
-    logits = _logits(params, cfg, x[:, -1:], selector)
+    logits = _logits(params, cfg, x[:, -1:])
     pos_next = jnp.asarray(x.shape[1], jnp.int32)
     return logits, {"segments": caches, "pos": pos_next}
 
@@ -251,7 +250,6 @@ def lm_decode(
     cfg,
     cache,
     batch: Dict[str, jax.Array],
-    selector=None,
 ):
     """One-token step.  batch: {'tokens': (B,1)} or {'frames': (B,1,d)}.
 
@@ -275,7 +273,7 @@ def lm_decode(
             unit_cache = _read_unit_cache(seg, i)
             new_unit = []
             for b, bp, c in zip(_blocks, unit_params, unit_cache):
-                h, c2 = decode_block(bp, h, b, cfg, c, pos, shared, selector)
+                h, c2 = decode_block(bp, h, b, cfg, c, pos, shared)
                 new_unit.append(c2)
             return (h, _write_unit_cache(seg, tuple(new_unit), i)), None
 
@@ -290,5 +288,5 @@ def lm_decode(
                 unit, (x, seg_cache), (idx, tuple(slot_params))
             )
         new_caches.append(new_seg)
-    logits = _logits(params, cfg, x, selector)
+    logits = _logits(params, cfg, x)
     return logits, {"segments": new_caches, "pos": pos + 1}

@@ -79,7 +79,7 @@ def _route(
     return dispatch, combine
 
 
-def moe_layer(p: Param, x: jax.Array, cfg: MoEConfig, selector=None) -> jax.Array:
+def moe_layer(p: Param, x: jax.Array, cfg: MoEConfig) -> jax.Array:
     """x: (B, S, d) -> (B, S, d)."""
     B, S, d = x.shape
     group = min(cfg.group, S)

@@ -132,18 +132,18 @@ def _ssd_chunked(
 
 
 def ssm_layer(
-    p: Param, x: jax.Array, cfg: SSMConfig, selector=None, return_state: bool = False,
+    p: Param, x: jax.Array, cfg: SSMConfig, return_state: bool = False,
     cache_dtype=jnp.bfloat16,
 ):
     """x: (B, S, d_model) -> (B, S, d_model) [, decode cache]."""
     B, S, _ = x.shape
-    z = dense(p["wz"], x, selector)
-    xi_raw = dense(p["wx"], x, selector)
+    z = dense(p["wz"], x)
+    xi_raw = dense(p["wx"], x)
     xi = _causal_conv(xi_raw, p["conv_w"], p["conv_b"])
-    Bv = dense(p["wB"], x, selector).astype(jnp.float32)
-    Cv = dense(p["wC"], x, selector).astype(jnp.float32)
+    Bv = dense(p["wB"], x).astype(jnp.float32)
+    Cv = dense(p["wC"], x).astype(jnp.float32)
     dt = jax.nn.softplus(
-        dense(p["wdt"], x, selector).astype(jnp.float32) + p["dt_bias"]
+        dense(p["wdt"], x).astype(jnp.float32) + p["dt_bias"]
     )
     A = -jnp.exp(p["A_log"])
     xh = xi.reshape(B, S, cfg.n_heads, cfg.head_dim)
@@ -153,7 +153,7 @@ def ssm_layer(
     y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
     y = y.reshape(B, S, cfg.d_inner)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
-    out = dense(p["out"], y, selector)
+    out = dense(p["out"], y)
     if not return_state:
         return out
     tail = cfg.d_conv - 1
@@ -182,11 +182,10 @@ def ssm_decode(
     x: jax.Array,  # (B, 1, d_model)
     cfg: SSMConfig,
     cache: Dict[str, Any],
-    selector=None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     B = x.shape[0]
-    z = dense(p["wz"], x, selector)[:, 0]
-    xi_raw = dense(p["wx"], x, selector)[:, 0]  # (B, d_inner)
+    z = dense(p["wz"], x)[:, 0]
+    xi_raw = dense(p["wx"], x)[:, 0]  # (B, d_inner)
 
     # conv ring: taps over [cache, new]
     hist = jnp.concatenate([cache["conv"].astype(xi_raw.dtype), xi_raw[:, None]], axis=1)
@@ -194,10 +193,10 @@ def ssm_decode(
     xi = jax.nn.silu(conv_out)
     new_conv = hist[:, 1:].astype(cache["conv"].dtype)
 
-    Bv = dense(p["wB"], x, selector)[:, 0].astype(jnp.float32)  # (B, N)
-    Cv = dense(p["wC"], x, selector)[:, 0].astype(jnp.float32)
+    Bv = dense(p["wB"], x)[:, 0].astype(jnp.float32)  # (B, N)
+    Cv = dense(p["wC"], x)[:, 0].astype(jnp.float32)
     dt = jax.nn.softplus(
-        dense(p["wdt"], x, selector)[:, 0].astype(jnp.float32) + p["dt_bias"]
+        dense(p["wdt"], x)[:, 0].astype(jnp.float32) + p["dt_bias"]
     )  # (B, H)
     A = -jnp.exp(p["A_log"])
     xh = xi.reshape(B, cfg.n_heads, cfg.head_dim)
@@ -210,5 +209,5 @@ def ssm_decode(
     y = jnp.einsum("bn,bhpn->bhp", Cv, h) + xh.astype(jnp.float32) * p["D"][None, :, None]
     y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z)[:, None])
-    out = dense(p["out"], y, selector)
+    out = dense(p["out"], y)
     return out, {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}

@@ -1,0 +1,368 @@
+"""The policy-scoped dispatch engine: policy zoo semantics, contextvar
+scoping (nesting / thread isolation), the candidate registry, artifact
+schema migration, and the deprecated select_matmul shim."""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import engine, policy as policy_mod
+from repro.core.hardware import TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def trained_selector():
+    ds = core.collect_analytic(lo=7, hi=10)
+    clf, _ = core.train_paper_model(ds)
+    return core.MTNNSelector(clf)
+
+
+# -- scoping ------------------------------------------------------------------
+
+
+class TestScoping:
+    def test_default_policy_is_model_policy(self):
+        assert isinstance(core.current_policy(), core.ModelPolicy)
+
+    def test_use_policy_scopes_and_restores(self):
+        outer = core.current_policy()
+        with core.use_policy(core.FixedPolicy("XLA_TNN")) as p:
+            assert core.current_policy() is p
+            with core.use_policy(core.FixedPolicy("XLA_NT")) as q:
+                assert core.current_policy() is q  # innermost wins
+            assert core.current_policy() is p  # nesting unwinds
+        assert core.current_policy() is outer
+
+    def test_use_policy_accepts_candidate_name(self):
+        with core.use_policy("XLA_TNN") as p:
+            assert isinstance(p, core.FixedPolicy) and p.name == "XLA_TNN"
+
+    def test_scope_restored_after_exception(self):
+        with pytest.raises(RuntimeError):
+            with core.use_policy(core.FixedPolicy("XLA_TNN")):
+                raise RuntimeError("boom")
+        assert not isinstance(core.current_policy(), core.FixedPolicy)
+
+    def test_thread_isolation(self):
+        """A policy scoped in the main thread is invisible to new threads
+        (fresh contextvar context), and vice versa — per-request policies
+        cannot leak across serving threads."""
+        seen = {}
+
+        def worker():
+            seen["in_thread"] = core.current_policy()
+            with core.use_policy(core.FixedPolicy("PALLAS_NT")):
+                seen["thread_scoped"] = core.current_policy()
+
+        with core.use_policy(core.FixedPolicy("XLA_TNN")):
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+            # main thread's scope is untouched by the thread's use_policy
+            assert core.current_policy().name == "XLA_TNN"
+        assert not isinstance(seen["in_thread"], core.FixedPolicy)
+        assert seen["thread_scoped"].name == "PALLAS_NT"
+
+    def test_dispatch_uses_scoped_policy(self):
+        a = jnp.ones((4, 8), jnp.float32)
+        b = jnp.ones((3, 8), jnp.float32)
+        pol = core.FixedPolicy("XLA_TNN")
+        with core.use_policy(pol):
+            out = core.dispatch_nt(a, b)
+        np.testing.assert_allclose(np.asarray(out), 8.0)
+        assert pol.stats.by_candidate == {"XLA_TNN": 1}
+
+
+# -- policy zoo ---------------------------------------------------------------
+
+
+class TestPolicies:
+    def test_fixed_policy_rejects_unknown_candidate(self):
+        with pytest.raises(KeyError):
+            core.FixedPolicy("NOT_A_CANDIDATE")
+
+    def test_model_policy_matches_selector(self, trained_selector):
+        pol = core.ModelPolicy(trained_selector)
+        for mnk in [(128, 128, 128), (4096, 4096, 4096), (512, 65536, 256)]:
+            assert pol.select(*mnk) == trained_selector.select(*mnk)
+
+    def test_analytic_policy_selects_argmin_arm(self):
+        from repro.core.simulate import simulate_time
+
+        pol = core.AnalyticPolicy(hardware=TPU_V5E)
+        name = pol.select(1024, 1024, 1024)
+        cand = core.get_candidate(name)
+        t_chosen = simulate_time(TPU_V5E, cand.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
+        for other in pol.candidates:
+            oc = core.get_candidate(other)
+            t = simulate_time(TPU_V5E, oc.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
+            assert t_chosen <= t + 1e-12
+
+    def test_analytic_policy_oom_guard(self):
+        pol = core.AnalyticPolicy(hardware=TPU_V5E)
+        huge = 2**22
+        assert not core.get_candidate(pol.select(huge, huge, 4096)).extra_memory
+
+    def test_cascade_order_and_fallback(self):
+        pol = core.CascadePolicy(["PALLAS_TNN_FUSED", "XLA_TNN", "XLA_NT"])
+        # all admissible at small sizes: first preference wins
+        assert pol.select(128, 128, 128) == "PALLAS_TNN_FUSED"
+
+    def test_cascade_oom_skips_extra_memory_candidates(self):
+        pol = core.CascadePolicy(["XLA_TNN", "XLA_NT"], hardware=TPU_V5E)
+        huge = 2**22
+        # XLA_TNN needs room for B^T -> OOM guard skips it, NT wins
+        assert pol.select(huge, huge, 4096, dsize=4) == "XLA_NT"
+
+    def test_cascade_distributed_filter(self):
+        pol = core.CascadePolicy(
+            ["PALLAS_TNN_FUSED", "PALLAS_NT", "XLA_NT"], distributed=True
+        )
+        # Pallas candidates are not distributed_safe -> fall through to XLA
+        assert pol.select(256, 256, 256) == "XLA_NT"
+
+    def test_cascade_last_entry_is_unconditional_fallback(self):
+        huge = 2**22
+        pol = core.CascadePolicy(["XLA_TNN"], hardware=TPU_V5E)
+        # even though the lone entry fails its own OOM guard, it is returned
+        assert pol.select(huge, huge, 4096, dsize=4) == "XLA_TNN"
+
+    def test_cascade_empty_rejected(self):
+        with pytest.raises(ValueError):
+            core.CascadePolicy([])
+
+    def test_policy_protocol(self, trained_selector):
+        for pol in (
+            core.FixedPolicy("XLA_NT"),
+            core.ModelPolicy(trained_selector),
+            core.AnalyticPolicy(),
+            core.CascadePolicy(["XLA_NT"]),
+        ):
+            assert isinstance(pol, core.SelectionPolicy)
+
+    def test_policy_from_spec(self):
+        assert core.policy_from_spec("fixed:XLA_TNN").name == "XLA_TNN"
+        assert isinstance(core.policy_from_spec("analytic"), core.AnalyticPolicy)
+        assert core.policy_from_spec("cascade:XLA_TNN,XLA_NT").names == (
+            "XLA_TNN",
+            "XLA_NT",
+        )
+        assert isinstance(core.policy_from_spec("model"), core.ModelPolicy)
+        with pytest.raises(ValueError):
+            core.policy_from_spec("bogus")
+
+    def test_policy_from_spec_distributed_restricts_candidates(self):
+        """Launchers on a multi-device mesh pass distributed=True: guarded
+        policies must then refuse pjit-unsafe (Pallas) candidates."""
+        pol = core.policy_from_spec(
+            "cascade:PALLAS_TNN_FUSED,XLA_NT", distributed=True
+        )
+        assert pol.select(256, 256, 256) == "XLA_NT"
+        ana = core.policy_from_spec("analytic", distributed=True)
+        assert core.get_candidate(ana.select(1024, 1024, 1024)).distributed_safe
+
+
+# -- jit-trace behaviour ------------------------------------------------------
+
+
+class TestTraceTimeDispatch:
+    def test_policy_changes_candidate_inside_jitted_lm_forward(self):
+        """use_policy(FixedPolicy(...)) changes the candidate chosen while
+        tracing lm.forward under jit — the acceptance demo."""
+        from repro.configs import smoke_config
+        from repro.models import lm
+
+        cfg = smoke_config("smollm-135m")
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+
+        jaxprs = {}
+        for name in ("XLA_TNN", "XLA_NT"):
+            pol = core.FixedPolicy(name)
+            with core.use_policy(pol):
+                jaxprs[name] = str(
+                    jax.make_jaxpr(lambda p: lm.lm_forward(p, cfg, batch))(params)
+                )
+            # every NT dispatch in the trace went to the forced candidate
+            assert list(pol.stats.by_candidate) == [name]
+            assert pol.stats.calls > 0
+        # the traced programs actually differ (TNN materialises B^T)
+        assert jaxprs["XLA_TNN"] != jaxprs["XLA_NT"]
+        assert jaxprs["XLA_TNN"].count("transpose") > jaxprs["XLA_NT"].count(
+            "transpose"
+        )
+
+    def test_forced_candidates_agree_numerically(self):
+        from repro.configs import smoke_config
+        from repro.models import lm
+
+        cfg = smoke_config("smollm-135m")
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+        outs = {}
+        for name in ("XLA_TNN", "XLA_NT"):
+            with core.use_policy(name):
+                outs[name] = np.asarray(lm.lm_forward(params, cfg, batch))
+        np.testing.assert_allclose(
+            outs["XLA_TNN"], outs["XLA_NT"], rtol=1e-4, atol=1e-4
+        )
+
+
+# -- registry -----------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_duplicate_name_rejected(self):
+        try:
+            @core.register_candidate("TEST_DUP", sim_algo="NT_DIRECT")
+            def first(a, b):
+                return a @ b.T
+
+            with pytest.raises(ValueError, match="already registered"):
+                @core.register_candidate("TEST_DUP", sim_algo="NT_DIRECT")
+                def second(a, b):
+                    return a @ b.T
+        finally:
+            core.unregister_candidate("TEST_DUP")
+        assert "TEST_DUP" not in core.CANDIDATES
+
+    def test_registered_candidate_dispatches(self):
+        calls = []
+        try:
+            @core.register_candidate(
+                "TEST_PLUGIN_NT", sim_algo="NT_DIRECT", distributed_safe=True
+            )
+            def plugin_nt(a, b):
+                calls.append(a.shape)
+                return a @ b.T
+
+            a = jnp.ones((4, 8), jnp.float32)
+            b = jnp.ones((3, 8), jnp.float32)
+            with core.use_policy(core.FixedPolicy("TEST_PLUGIN_NT")):
+                out = core.dispatch_nt(a, b)
+            np.testing.assert_allclose(np.asarray(out), 8.0)
+            assert calls == [(4, 8)]
+        finally:
+            core.unregister_candidate("TEST_PLUGIN_NT")
+
+    def test_per_hardware_enumeration(self):
+        tpu = {c.name for c in core.candidates_for(platform="tpu")}
+        gpu = {c.name for c in core.candidates_for(platform="gpu")}
+        assert "PALLAS_NT" in tpu and "PALLAS_NT" not in gpu
+        assert {"XLA_NT", "XLA_TNN"} <= gpu
+
+    def test_distributed_enumeration(self):
+        dist = core.candidates_for(distributed=True)
+        assert all(c.distributed_safe for c in dist)
+        assert {c.name for c in dist} >= {"XLA_NT", "XLA_TNN"}
+
+
+# -- artifacts ----------------------------------------------------------------
+
+
+class TestArtifacts:
+    def test_save_bare_filename(self, trained_selector, tmp_path, monkeypatch):
+        """Regression: save("model.json") used to crash in os.makedirs("")."""
+        monkeypatch.chdir(tmp_path)
+        trained_selector.save("bare_model.json")
+        sel2 = core.MTNNSelector.load("bare_model.json")
+        assert sel2.select(1024, 1024, 1024) == trained_selector.select(
+            1024, 1024, 1024
+        )
+
+    def test_artifact_carries_schema_version(self, trained_selector, tmp_path):
+        p = str(tmp_path / "sel.json")
+        trained_selector.save(p)
+        with open(p) as fh:
+            payload = json.load(fh)
+        assert payload["schema_version"] == core.SCHEMA_VERSION
+
+    def test_v0_artifact_migrates(self, trained_selector, tmp_path):
+        """An unversioned (v0) artifact — today's shipped format — loads via
+        migration and makes identical decisions."""
+        p = str(tmp_path / "v0.json")
+        v0 = {
+            # no schema_version; mode/binary_pair omitted as v0 allowed
+            "hardware": trained_selector.hardware.name,
+            "model": trained_selector.model.to_dict(),
+        }
+        with open(p, "w") as fh:
+            json.dump(v0, fh)
+        sel2 = core.MTNNSelector.load(p)
+        for mnk in [(128, 128, 128), (8192, 8192, 8192), (1024, 65536, 256)]:
+            assert sel2.select(*mnk) == trained_selector.select(*mnk)
+
+    def test_future_schema_rejected(self, trained_selector, tmp_path):
+        p = str(tmp_path / "future.json")
+        trained_selector.save(p)
+        with open(p) as fh:
+            payload = json.load(fh)
+        payload["schema_version"] = core.SCHEMA_VERSION + 1
+        with open(p, "w") as fh:
+            json.dump(payload, fh)
+        with pytest.raises(ValueError, match="newer than supported"):
+            core.MTNNSelector.load(p)
+
+    def test_roundtrip_via_model_policy(self, trained_selector, tmp_path):
+        p = str(tmp_path / "sel.json")
+        trained_selector.save(p)
+        pol = core.ModelPolicy.from_artifact(p)
+        assert pol.select(2048, 2048, 2048) == trained_selector.select(
+            2048, 2048, 2048
+        )
+
+
+# -- stats & report -----------------------------------------------------------
+
+
+class TestObservability:
+    def test_stats_reset(self, trained_selector):
+        trained_selector.select(512, 512, 512)
+        assert trained_selector.stats.calls > 0
+        trained_selector.reset_stats()
+        assert trained_selector.stats.calls == 0
+        assert trained_selector.stats.by_candidate == {}
+
+    def test_dispatch_report_contents(self):
+        pol = core.FixedPolicy("XLA_NT")
+        a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
+        with core.use_policy(pol):
+            core.dispatch_nt(a, b)
+            core.dispatch_nt(a, b)
+        report = core.dispatch_report(pol)
+        assert "XLA_NT" in report and "2" in report and "100.0%" in report
+
+    def test_dispatch_report_empty(self):
+        report = core.dispatch_report(core.FixedPolicy("XLA_NT"))
+        assert "no dispatches" in report
+
+
+# -- deprecated shim ----------------------------------------------------------
+
+
+class TestDeprecatedShim:
+    def test_select_matmul_warns(self, trained_selector):
+        a = jnp.ones((4, 8), jnp.float32)
+        b = jnp.ones((3, 8), jnp.float32)
+        with pytest.warns(DeprecationWarning, match="select_matmul"):
+            out = core.select_matmul(a, b, selector=trained_selector)
+        np.testing.assert_allclose(np.asarray(out), 8.0)
+
+    def test_select_matmul_force_maps_to_fixed_policy(self):
+        a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
+        with pytest.warns(DeprecationWarning):
+            out = core.select_matmul(a, b, force="XLA_TNN")
+        np.testing.assert_allclose(np.asarray(out), 8.0)
+
+    def test_select_matmul_records_on_legacy_selector(self, trained_selector):
+        a = jnp.ones((4, 8), jnp.float32)
+        b = jnp.ones((3, 8), jnp.float32)
+        n0 = trained_selector.stats.calls
+        with pytest.warns(DeprecationWarning):
+            core.select_matmul(a, b, selector=trained_selector)
+        assert trained_selector.stats.calls == n0 + 1

@@ -175,21 +175,22 @@ class TestServe:
 class TestFCNExperiment:
     """The paper's §VI-C experiment wiring (full run lives in benchmarks)."""
 
-    def test_fcn_forward_uses_selector(self, key):
+    def test_fcn_forward_uses_scoped_policy(self, key):
         from repro import core
         from repro.configs.fcn_paper import MNIST_FCNS
         from repro.models.fcn import fcn_forward, init_fcn
 
         ds = core.collect_analytic(lo=7, hi=9)
         clf, _ = core.train_paper_model(ds)
-        sel = core.MTNNSelector(clf)
+        policy = core.ModelPolicy(core.MTNNSelector(clf))
         cfg = MNIST_FCNS[2]
         params = init_fcn(key, cfg)
         x = jnp.ones((8, cfg.input_dim))
-        n0 = sel.stats.calls
-        out = fcn_forward(params, x, selector=sel)
+        n0 = policy.stats.calls
+        with core.use_policy(policy):
+            out = fcn_forward(params, x)
         assert out.shape == (8, cfg.output_dim)
-        assert sel.stats.calls == n0 + len(cfg.dims) - 1  # one select per layer
+        assert policy.stats.calls == n0 + len(cfg.dims) - 1  # one select per layer
 
     def test_fcn_training_reduces_loss(self, key):
         from repro.models.fcn import FCNConfig, fcn_loss, init_fcn

@@ -13,6 +13,8 @@ quantifies both halves:
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -64,6 +66,29 @@ def policy_overhead(full: bool = False):
         print(f"  {name:<22s} {r['cold_ms']:13.4f} {r['warm_ms']:13.4f}")
     print(f"  (paper's in-loop predictor: 0.005 ms/call, every call)")
 
+    # autotune: a cold select runs real on-device measurements (expensive,
+    # once per shape per cache lifetime); a warm select is a cache lookup.
+    # Smaller shape grid — cold selects execute every candidate for real.
+    at_sizes = [2**i for i in (7, 8, 9)]
+    at_shapes = [(m, n, k) for m in at_sizes for n in at_sizes for k in at_sizes]
+    at_path = os.path.join(
+        tempfile.mkdtemp(prefix="repro_autotune_bench_"), "cache.json"
+    )
+    cold_pol = core.AutotunePolicy(cache_path=at_path, reps=2)
+    r = _select_latency(cold_pol, at_shapes, reps)
+    r["measured_shapes"] = cold_pol.n_measured
+    out["AutotunePolicy(cold=measure)"] = r
+    print(f"  {'AutotunePolicy(cold)':<22s} {r['cold_ms']:13.4f} "
+          f"{r['warm_ms']:13.4f}  ({cold_pol.n_measured} shapes measured)")
+    # a fresh policy over the persisted cache: zero new measurements
+    warm_pol = core.AutotunePolicy(cache_path=at_path)
+    r = _select_latency(warm_pol, at_shapes, reps)
+    r["measured_shapes"] = warm_pol.n_measured
+    assert warm_pol.n_measured == 0, "warm cache must not re-measure"
+    out["AutotunePolicy(warm-cache)"] = r
+    print(f"  {'AutotunePolicy(warm)':<22s} {r['cold_ms']:13.4f} "
+          f"{r['warm_ms']:13.4f}  (0 shapes measured: cache file hit)")
+
     # compiled-step cost: model-dispatched vs fixed — should be identical
     w = jnp.asarray(np.random.RandomState(0).randn(1024, 1024), jnp.float32)
     x = jnp.asarray(np.random.RandomState(1).randn(256, 1024), jnp.float32)
@@ -93,3 +118,25 @@ def _timed(fn):
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+def main(argv=None):
+    """Standalone entry so CI can smoke the measurement path:
+
+      PYTHONPATH=src python -m benchmarks.policy_overhead --quick
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument(
+        "--quick", action="store_true", help="fast grids (the default; CI)"
+    )
+    grp.add_argument("--full", action="store_true", help="paper-scale grids")
+    args = ap.parse_args(argv)
+    policy_overhead(full=args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

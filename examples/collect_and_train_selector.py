@@ -1,50 +1,90 @@
 """Build the production selector artifact (core/artifacts/default_model.json).
 
-Collects BOTH data sources (measured-host wall-clock + analytic-TPU cost
-model over the full paper grid), trains the paper's GBDT on the combined
-8-dim samples (one model across all hardware rows, as the paper does for
-its two GPUs), cross-validates, and saves the artifact the framework's
-default selector loads.
+Default mode collects BOTH data sources (measured-host wall-clock +
+analytic-TPU cost model over the full paper grid), trains the paper's GBDT
+on the combined 8-dim samples (one model across all hardware rows, as the
+paper does for its two GPUs), cross-validates, and saves the artifact the
+framework's default selector loads.
+
+``--from-cache`` instead trains directly from an autotune measurement
+cache (the file ``--policy autotune`` populates at dispatch time) — the
+paper's full loop: measure in production -> retrain -> ModelPolicy.
 
   PYTHONPATH=src python examples/collect_and_train_selector.py [--fast]
+  PYTHONPATH=src python examples/collect_and_train_selector.py \
+      --from-cache ~/.cache/repro/autotune_cache.json --out selector.json
 """
 
 import argparse
 import os
 
-import numpy as np
-
 from repro import core
-from repro.core.selector import ARTIFACT_DIR, DEFAULT_ARTIFACT
+from repro.core.selector import DEFAULT_ARTIFACT
+
+
+def build_dataset(args) -> "core.SelectionDataset":
+    if args.from_cache:
+        print(f"[1/3] loading autotune measurement cache {args.from_cache}...")
+        cache = core.MeasurementCache.load(args.from_cache, missing_ok=False)
+        ds = core.dataset_from_measurements(
+            cache, dtype=args.dtype, platform=args.platform
+        )
+        print(f"      {len(cache)} cached shapes -> {len(ds)} samples "
+              f"{ds.class_counts()}")
+        return ds
+
+    hi = 12 if args.fast else 16
+    print(f"[1/3] analytic-TPU dataset (grid 2^7..2^{hi}, 3 chips)...")
+    ds_a = core.collect_analytic(lo=7, hi=hi)
+    print(f"      {len(ds_a)} samples {ds_a.class_counts()}")
+
+    print("      measured-host dataset (real wall clock)...")
+    sizes = [2**i for i in range(5, 9 if args.fast else 11)]
+    ds_m = core.collect_measured(sizes=sizes, reps=3)
+    print(f"      {len(ds_m)} samples {ds_m.class_counts()}")
+    return core.SelectionDataset.concat([ds_a, ds_m])
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced grids")
     ap.add_argument("--out", default=DEFAULT_ARTIFACT)
+    ap.add_argument(
+        "--from-cache",
+        default=None,
+        metavar="CACHE_JSON",
+        help="train from an autotune measurement cache instead of collecting",
+    )
+    ap.add_argument(
+        "--dtype",
+        default="float32",
+        help="which cache records to train from (with --from-cache); the "
+        "8-dim features carry no dtype, so one dtype per artifact",
+    )
+    ap.add_argument(
+        "--platform",
+        default=None,
+        help="restrict --from-cache records to one jax platform "
+        "(required when a cache mixes backends for the same hardware)",
+    )
     args = ap.parse_args()
 
-    hi = 12 if args.fast else 16
-    print(f"[1/4] analytic-TPU dataset (grid 2^7..2^{hi}, 3 chips)...")
-    ds_a = core.collect_analytic(lo=7, hi=hi)
-    print(f"      {len(ds_a)} samples {ds_a.class_counts()}")
-
-    print("[2/4] measured-host dataset (real wall clock)...")
-    sizes = [2**i for i in range(5, 9 if args.fast else 11)]
-    ds_m = core.collect_measured(sizes=sizes, reps=3)
-    print(f"      {len(ds_m)} samples {ds_m.class_counts()}")
-
-    ds = core.SelectionDataset.concat([ds_a, ds_m])
-    print(f"[3/4] train on combined {len(ds)} samples ({ds.source})")
-    cv = core.kfold_cv(ds, "gbdt")
-    print(f"      5-fold CV: {cv['total']['avg']*100:.2f}% "
-          f"(neg {cv['negative']['avg']*100:.2f}%, "
-          f"pos {cv['positive']['avg']*100:.2f}%)")
+    ds = build_dataset(args)
+    print(f"[2/3] train on {len(ds)} samples ({ds.source})")
+    # 5-fold CV needs enough rows per fold; small autotune caches skip it
+    if len(ds) >= 25:
+        cv = core.kfold_cv(ds, "gbdt")
+        print(f"      5-fold CV: {cv['total']['avg']*100:.2f}% "
+              f"(neg {cv['negative']['avg']*100:.2f}%, "
+              f"pos {cv['positive']['avg']*100:.2f}%)")
+    else:
+        print(f"      ({len(ds)} samples: too few for 5-fold CV, skipping)")
     clf, report = core.train_paper_model(ds)
     print(f"      full-data acc {report['full_data_accuracy']['total']*100:.2f}%")
 
-    print(f"[4/4] saving artifact (schema v{core.SCHEMA_VERSION}) -> {args.out}")
-    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    print(f"[3/3] saving artifact (schema v{core.SCHEMA_VERSION}) -> {args.out}")
+    out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
     sel = core.MTNNSelector(clf)
     sel.save(args.out)
     # reload check

@@ -10,13 +10,25 @@ from .candidates import (
     register_candidate,
     unregister_candidate,
 )
-from .dataset import SelectionDataset, collect_analytic, collect_measured
+from .dataset import (
+    SelectionDataset,
+    collect_analytic,
+    collect_measured,
+    dataset_from_measurements,
+)
 from .engine import dispatch_nt, dispatch_report, policy_from_spec
 from .features import FEATURE_NAMES, make_features
 from .gbdt import DecisionTreeClassifier, GBDTClassifier, GBDTRegressor
 from .hardware import SIMULATED_CHIPS, TPU_V4, TPU_V5E, TPU_V5P, HardwareSpec, host_spec
+from .measure import (
+    MEASURE_SCHEMA_VERSION,
+    MeasurementCache,
+    measure_candidates,
+    measurement_supported,
+)
 from .policy import (
     AnalyticPolicy,
+    AutotunePolicy,
     CascadePolicy,
     FixedPolicy,
     ModelPolicy,
@@ -58,6 +70,11 @@ __all__ = [
     "FixedPolicy",
     "AnalyticPolicy",
     "CascadePolicy",
+    "AutotunePolicy",
+    "MeasurementCache",
+    "MEASURE_SCHEMA_VERSION",
+    "measure_candidates",
+    "measurement_supported",
     "use_policy",
     "current_policy",
     "default_policy",
@@ -69,6 +86,7 @@ __all__ = [
     "SelectionDataset",
     "collect_analytic",
     "collect_measured",
+    "dataset_from_measurements",
     "FEATURE_NAMES",
     "make_features",
     "GBDTClassifier",

@@ -19,18 +19,23 @@ label = +1 if P_NT >= P_TNN (choose NT) else -1 (choose TNN).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import simulate
-from .candidates import CANDIDATES
+from .candidates import CANDIDATES, PAPER_PAIR
 from .features import make_features
 from .hardware import SIMULATED_CHIPS, HardwareSpec, host_spec
 
-__all__ = ["SelectionDataset", "collect_analytic", "collect_measured", "paper_grid"]
+__all__ = [
+    "SelectionDataset",
+    "collect_analytic",
+    "collect_measured",
+    "dataset_from_measurements",
+    "paper_grid",
+]
 
 
 def paper_grid(lo: int = 7, hi: int = 16) -> List[Tuple[int, int, int]]:
@@ -157,18 +162,9 @@ def collect_analytic(
 
 
 def _bench(fn, a, b, reps: int, warmup: int = 1) -> float:
-    import jax
+    from .measure import bench_fn
 
-    out = fn(a, b)
-    jax.block_until_ready(out)
-    for _ in range(warmup - 1):
-        jax.block_until_ready(fn(a, b))
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(a, b))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return bench_fn(fn, a, b, reps, warmup=warmup, stat="min")
 
 
 def collect_measured(
@@ -216,4 +212,111 @@ def collect_measured(
         mnk=np.array(rows_mnk),
         hw=np.array(rows_hw),
         source="measured-host",
+    )
+
+
+def dataset_from_measurements(
+    cache,
+    pair: Tuple[str, str] = PAPER_PAIR,
+    dtype: Optional[str] = "float32",
+    platform: Optional[str] = None,
+) -> SelectionDataset:
+    """Convert an autotune ``MeasurementCache`` into a ``SelectionDataset``.
+
+    This closes the paper's loop from dispatch-time measurements: shapes an
+    ``AutotunePolicy`` timed in production become training records for the
+    GBDT (measure -> retrain -> ``ModelPolicy``).  Labels follow the same
+    rule as ``collect_measured``: +1 (choose NT) iff t_NT <= t_TNN.
+
+    ``dtype`` selects which cache records to use: the paper's 8-dim feature
+    vector has no dtype component, so mixing e.g. bfloat16 and float32
+    timings of one shape would feed the learner identical features with
+    contradictory labels.  Pass ``dtype=None`` only when the cache is known
+    to be dtype-homogeneous.  The jax ``platform`` is the same kind of
+    hidden dimension — a cache populated under two backends with the same
+    hardware descriptor is ambiguous, so that case raises and asks for an
+    explicit ``platform=`` filter.
+
+    Records lacking a timing for either member of ``pair`` are skipped (the
+    OOM guard excludes TNN on shapes where B^T does not fit, exactly like
+    the paper's dataset filter).  ``times`` carries the canonical 'NT'/'TNN'
+    keys plus every candidate timed in *all* kept records.
+    """
+    nt_name, tnn_name = pair
+    host = host_spec()
+    specs = dict(SIMULATED_CHIPS)
+    specs[host.name] = host
+    kept: List[Tuple[HardwareSpec, int, int, int, Dict[str, float]]] = []
+    unknown_hw: Dict[str, int] = {}
+    other_dtypes: Dict[str, int] = {}
+    seen_platform: Dict[Tuple[str, str, int, int, int], str] = {}
+    for (rec_platform, hw_name, rec_dtype, m, n, k), times in cache.records():
+        if platform is not None and rec_platform != platform:
+            continue
+        if dtype is not None and rec_dtype != dtype:
+            other_dtypes[rec_dtype] = other_dtypes.get(rec_dtype, 0) + 1
+            continue
+        if nt_name not in times or tnn_name not in times:
+            continue
+        hw = specs.get(hw_name)
+        if hw is None:
+            # measured on hardware this build has no descriptor for — the
+            # 5 hardware feature dims cannot be rebuilt, so the record is
+            # unusable (counted so an empty result names the real cause)
+            unknown_hw[hw_name] = unknown_hw.get(hw_name, 0) + 1
+            continue
+        sk = (hw_name, rec_dtype, m, n, k)
+        prev = seen_platform.get(sk)
+        if prev is not None and prev != rec_platform:
+            raise ValueError(
+                f"measurement cache holds records for hw={hw_name!r} "
+                f"dtype={rec_dtype!r} shape=({m}, {n}, {k}) under multiple "
+                f"jax platforms ({prev!r}, {rec_platform!r}) — identical "
+                "features with possibly contradictory labels; pass "
+                "platform= to pick one"
+            )
+        seen_platform[sk] = rec_platform
+        kept.append((hw, m, n, k, times))
+    if not kept:
+        if unknown_hw:
+            why = (
+                "all matching records were measured on hardware with no "
+                f"registered descriptor: {sorted(unknown_hw)}"
+            )
+        elif other_dtypes:
+            why = (
+                f"the cache only holds {sorted(other_dtypes)} records — pass "
+                "dtype= to convert them"
+            )
+        else:
+            why = (
+                "run with an AutotunePolicy (or --policy autotune) first to "
+                "populate it"
+            )
+        raise ValueError(
+            f"measurement cache has no usable{f' {dtype}' if dtype else ''} "
+            f"records timing both {nt_name!r} and {tnn_name!r}; {why}"
+        )
+    common = set(kept[0][4])
+    for _, _, _, _, times in kept:
+        common &= set(times)
+    rows_X, rows_y, rows_mnk, rows_hw = [], [], [], []
+    t_cols: Dict[str, List[float]] = {c: [] for c in sorted(common)}
+    for hw, m, n, k, times in kept:
+        rows_X.append(make_features(hw, m, n, k))
+        rows_y.append(1 if times[nt_name] <= times[tnn_name] else -1)
+        rows_mnk.append((m, n, k))
+        rows_hw.append(hw.name)
+        for c in t_cols:
+            t_cols[c].append(times[c])
+    out_times = {c: np.array(v) for c, v in t_cols.items()}
+    out_times["NT"] = np.array([t[nt_name] for *_, t in kept])
+    out_times["TNN"] = np.array([t[tnn_name] for *_, t in kept])
+    return SelectionDataset(
+        X=np.array(rows_X),
+        y=np.array(rows_y),
+        times=out_times,
+        mnk=np.array(rows_mnk),
+        hw=np.array(rows_hw),
+        source="autotune-measured",
     )

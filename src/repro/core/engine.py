@@ -18,6 +18,7 @@ from typing import Optional
 from .candidates import get_candidate
 from .policy import (
     AnalyticPolicy,
+    AutotunePolicy,
     CascadePolicy,
     FixedPolicy,
     ModelPolicy,
@@ -39,8 +40,13 @@ __all__ = [
 
 POLICY_SPEC_HELP = (
     "NT-dispatch policy: model[:artifact.json] | fixed:<NAME> | analytic | "
-    "cascade:<A,B,...>"
+    "cascade:<A,B,...> | autotune[:cache.json]"
 )
+
+
+def _spec_error(msg: str) -> ValueError:
+    """Every malformed spec gets the same actionable hint."""
+    return ValueError(f"{msg} ({POLICY_SPEC_HELP})")
 
 
 def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
@@ -91,29 +97,43 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
       fixed:XLA_TNN             FixedPolicy
       analytic                  AnalyticPolicy on the default hardware
       cascade:A,B,C             CascadePolicy over the named candidates
+      autotune[:cache.json]     AutotunePolicy over the measurement cache
+                                (default: core.measure.default_cache_path())
 
-    ``distributed=True`` restricts guarded policies to pjit-safe candidates
-    — launchers running on a >1-device mesh must pass it (FixedPolicy is
-    exempt: forcing a candidate is an explicit user override).
+    Whitespace around the kind and its argument is ignored, so quoted CLI
+    values like ``--policy "fixed: XLA_NT"`` parse.  ``distributed=True``
+    restricts guarded policies to pjit-safe candidates — launchers running
+    on a >1-device mesh must pass it (FixedPolicy is exempt: forcing a
+    candidate is an explicit user override) — and disables autotune
+    measurement (cached timings are still used).
     """
-    kind, _, arg = spec.partition(":")
+    kind, _, arg = spec.strip().partition(":")
+    kind = kind.strip()
+    arg = arg.strip()
+    if not kind:
+        raise _spec_error("empty policy spec")
     if kind == "model":
         if not arg:
             return default_policy()  # builtin selector: distributed-safe
         return ModelPolicy.from_artifact(arg, distributed=distributed)
     if kind == "fixed":
         if not arg:
-            raise ValueError("fixed policy needs a candidate: fixed:<NAME>")
+            raise _spec_error("fixed policy needs a candidate: fixed:<NAME>")
         return FixedPolicy(arg)
     if kind == "analytic":
         return AnalyticPolicy(distributed=distributed)
-    if kind == "cascade":
-        if not arg:
-            raise ValueError("cascade policy needs names: cascade:<A,B,...>")
-        return CascadePolicy(
-            [n.strip() for n in arg.split(",")], distributed=distributed
+    if kind == "autotune":
+        from .measure import default_cache_path
+
+        return AutotunePolicy(
+            cache_path=arg or default_cache_path(), distributed=distributed
         )
-    raise ValueError(f"unknown policy spec {spec!r}")
+    if kind == "cascade":
+        names = [n.strip() for n in arg.split(",") if n.strip()]
+        if not names:
+            raise _spec_error("cascade policy needs names: cascade:<A,B,...>")
+        return CascadePolicy(names, distributed=distributed)
+    raise _spec_error(f"unknown policy spec {spec!r}")
 
 
 def add_policy_argument(parser) -> None:

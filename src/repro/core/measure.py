@@ -1,0 +1,325 @@
+"""On-device measurement subsystem — the autotune backend of the policy zoo.
+
+The paper's pipeline is *measure NT vs TNN on real hardware -> train a
+selector -> dispatch*.  This module closes the measurement end of that loop
+for dispatch itself (AutoTVM-style): a timing harness that benchmarks every
+admissible candidate for one (m, n, k) shape on the *current* backend, and
+a persistent, versioned JSON cache of those timings keyed by
+``(platform, hardware, dtype, m, n, k)``.
+
+``AutotunePolicy`` (core/policy.py) answers ``select()`` from the cache and
+measures-and-caches cold shapes; ``dataset_from_measurements``
+(core/dataset.py) turns a populated cache into a ``SelectionDataset`` so
+the paper's GBDT can be retrained from autotune-collected records.
+
+Measurement runs under ``jax.ensure_compile_time_eval()`` so it stays
+eager even when ``select()`` fires inside a ``jit`` trace (where dispatch
+normally happens); ``measurement_supported()`` reports whether that escape
+hatch exists so callers can fall back to the analytic model instead.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import statistics
+import tempfile
+import time
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+from .candidates import (
+    CANDIDATES,
+    candidate_allowed,
+    candidate_fits_memory,
+    get_candidate,
+)
+from .hardware import HardwareSpec, host_spec
+
+__all__ = [
+    "MEASURE_SCHEMA_VERSION",
+    "MeasurementKey",
+    "MeasurementCache",
+    "bench_fn",
+    "measure_candidates",
+    "measurement_supported",
+    "default_cache_path",
+    "DTYPE_BY_DSIZE",
+]
+
+# Cache schema history:
+#   v1: {"schema_version": 1, "entries": {"plat|hw|dtype|m|n|k": {name: s}}}
+MEASURE_SCHEMA_VERSION = 1
+
+# select() receives an element size, not a dtype; measurement needs a real
+# dtype to build operands.  Sizes outside this map are not measurable (the
+# policy falls back to the analytic model for them).
+DTYPE_BY_DSIZE: Dict[int, str] = {2: "bfloat16", 4: "float32"}
+
+# (platform, hardware, dtype, m, n, k)
+MeasurementKey = Tuple[str, str, str, int, int, int]
+
+
+def default_cache_path() -> str:
+    """Where ``--policy autotune`` persists measurements by default."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune_cache.json"
+    )
+
+
+def _key_str(key: MeasurementKey) -> str:
+    return "|".join(str(p) for p in key)
+
+
+def _file_sig(path: str) -> Optional[Tuple[int, int]]:
+    """(mtime_ns, size) change signature, or None when unreadable/absent."""
+    try:
+        st = os.stat(path)
+    except OSError:
+        return None
+    return (st.st_mtime_ns, st.st_size)
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Advisory lock serialising read-merge-replace across processes.
+
+    Uses flock on a sibling ``.lock`` file (the data file itself is
+    replaced atomically, so it cannot hold the lock).  On platforms
+    without fcntl this degrades to unlocked atomic-replace semantics.
+    """
+    try:
+        import fcntl
+    except ImportError:
+        yield
+        return
+    lock_path = path + ".lock"
+    with open(lock_path, "a") as fh:
+        fcntl.flock(fh.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(fh.fileno(), fcntl.LOCK_UN)
+
+
+def _parse_key(s: str) -> MeasurementKey:
+    # split from both ends: hardware names may themselves contain '|';
+    # platform, dtype and the three ints never do
+    head, m, n, k = s.rsplit("|", 3)
+    platform, rest = head.split("|", 1)
+    hardware, dtype = rest.rsplit("|", 1)
+    return (platform, hardware, dtype, int(m), int(n), int(k))
+
+
+class MeasurementCache:
+    """Persistent ``(platform, hardware, dtype, m, n, k) -> {name: seconds}``.
+
+    Versioned like selector artifacts: files newer than
+    ``MEASURE_SCHEMA_VERSION`` are rejected rather than misread.  ``save``
+    writes atomically (tmp + rename) so a crash mid-write cannot corrupt a
+    warm cache.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._entries: Dict[MeasurementKey, Dict[str, float]] = {}
+        # (mtime_ns, size) of the file state we last loaded/wrote
+        self._synced_sig: Optional[Tuple[int, int]] = None
+
+    @classmethod
+    def load(cls, path: str, missing_ok: bool = True) -> "MeasurementCache":
+        cache = cls(path)
+        if not os.path.exists(path):
+            if missing_ok:
+                return cache  # cold cache: starts empty, persists to `path`
+            raise FileNotFoundError(f"measurement cache {path!r} does not exist")
+        with open(path) as fh:
+            payload = json.load(fh)
+        cache._synced_sig = _file_sig(path)
+        version = payload.get("schema_version", 0)
+        if version > MEASURE_SCHEMA_VERSION:
+            raise ValueError(
+                f"measurement cache schema v{version} is newer than supported "
+                f"v{MEASURE_SCHEMA_VERSION}; upgrade the code or re-measure"
+            )
+        for ks, times in payload.get("entries", {}).items():
+            cache._entries[_parse_key(ks)] = {
+                str(c): float(t) for c, t in times.items()
+            }
+        return cache
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        if path is None:
+            raise ValueError("MeasurementCache has no path to save to")
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        # merge-on-save under an advisory lock: concurrent processes sharing
+        # one cache file each loaded their own snapshot — fold in shapes
+        # others persisted since (ours win on conflict) and publish
+        # atomically, so no writer clobbers another's measurements.  The
+        # re-read is skipped when the file is still at the (mtime_ns, size)
+        # state we last loaded/wrote — single-writer runs stay O(1) reads.
+        with _file_lock(path):
+            disk_sig = _file_sig(path)
+            if disk_sig is not None and disk_sig != (
+                self._synced_sig if path == self.path else None
+            ):
+                try:
+                    on_disk = MeasurementCache.load(path)
+                except (ValueError, OSError, json.JSONDecodeError):
+                    on_disk = None  # unreadable/foreign file: overwrite it
+                if on_disk is not None:
+                    for k, v in on_disk._entries.items():
+                        self._entries.setdefault(k, v)
+            payload = {
+                "schema_version": MEASURE_SCHEMA_VERSION,
+                "entries": {
+                    _key_str(k): times
+                    for k, times in sorted(self._entries.items())
+                },
+            }
+            # unique tmp per writer: a fixed sibling name would let two
+            # unlocked writers truncate each other's half-written file
+            fd, tmp = tempfile.mkstemp(
+                prefix=os.path.basename(path) + ".", dir=parent or "."
+            )
+            try:
+                with os.fdopen(fd, "w") as fh:
+                    json.dump(payload, fh)
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            if path == self.path:
+                self._synced_sig = _file_sig(path)
+
+    def get(self, key: MeasurementKey) -> Optional[Dict[str, float]]:
+        return self._entries.get(key)
+
+    def put(self, key: MeasurementKey, times: Dict[str, float]) -> None:
+        self._entries[key] = dict(times)
+
+    def records(self) -> Iterator[Tuple[MeasurementKey, Dict[str, float]]]:
+        """All (key, times) pairs, sorted for deterministic iteration."""
+        return iter(sorted(self._entries.items()))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: MeasurementKey) -> bool:
+        return key in self._entries
+
+    def __repr__(self):
+        return f"MeasurementCache({len(self)} shapes, path={self.path!r})"
+
+
+def _trace_state_clean() -> bool:
+    """True when no jax trace is active (eager context)."""
+    try:
+        from jax.core import trace_state_clean
+
+        return bool(trace_state_clean())
+    except ImportError:
+        return True  # no introspection available: assume eager
+
+
+def measurement_supported() -> bool:
+    """Whether eager wall-clock timing is possible right now.
+
+    Inside a trace, ``jax.ensure_compile_time_eval()`` is the escape hatch
+    that keeps measurement eager; without it (very old jax) measurement is
+    only safe when no trace is active.
+    """
+    import jax
+
+    return _trace_state_clean() or hasattr(jax, "ensure_compile_time_eval")
+
+
+def _eval_scope():
+    """Eager-execution scope for measurement: a no-op outside traces (where
+    plain jit works, Pallas included), ``ensure_compile_time_eval`` inside
+    one (the escape hatch that keeps timing off the traced program)."""
+    import jax
+
+    if not _trace_state_clean() and hasattr(jax, "ensure_compile_time_eval"):
+        return jax.ensure_compile_time_eval()
+    return contextlib.nullcontext()
+
+
+def bench_fn(fn, a, b, reps: int, warmup: int = 1, stat: str = "median") -> float:
+    """Warmup (incl. compile) then ``stat`` of ``reps`` wall-clock runs.
+
+    The one timing loop in the codebase: ``measure_candidates`` uses the
+    median (robust to scheduler noise in small-rep autotuning),
+    ``dataset.collect_measured`` the min (paper-style best-case).
+    """
+    import jax
+
+    jax.block_until_ready(fn(a, b))  # compile + first warmup
+    for _ in range(max(0, warmup - 1)):
+        jax.block_until_ready(fn(a, b))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        ts.append(time.perf_counter() - t0)
+    return float(statistics.median(ts) if stat == "median" else min(ts))
+
+
+def measure_candidates(
+    m: int,
+    n: int,
+    k: int,
+    dtype: str = "float32",
+    candidates: Optional[Sequence[str]] = None,
+    hardware: Optional[HardwareSpec] = None,
+    distributed: bool = False,
+    mem_budget_frac: float = 0.9,
+    warmup: int = 1,
+    reps: int = 3,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Time every admissible candidate for one shape on this backend.
+
+    Admissibility is the shared guard set from ``candidates.py`` — the
+    paper's OOM check (extra-memory candidates must fit the budget) plus
+    the distributed/platform filter — so an autotune run can never execute
+    a candidate the dispatch engine would refuse.  Inadmissible candidates
+    are skipped, not timed; the result may be empty.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    hw = hardware or host_spec()
+    names = tuple(candidates or CANDIDATES)
+    dt = jnp.dtype(dtype)
+    dsize = dt.itemsize
+    times: Dict[str, float] = {}
+    with _eval_scope():
+        ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(ka, (m, k), dtype=dt)
+        b = jax.random.normal(kb, (n, k), dtype=dt)
+        for name in names:
+            cand = get_candidate(name)
+            if not candidate_fits_memory(
+                cand, m, n, k, dsize, hw.mem_gib, mem_budget_frac
+            ):
+                continue  # OOM guard: do not even try to materialise B^T
+            if not candidate_allowed(cand, distributed):
+                continue
+            try:
+                times[name] = bench_fn(jax.jit(cand.fn), a, b, reps, warmup)
+            except Exception:
+                # a candidate that cannot run here (kernel unsupported under
+                # the eval trace, allocation failure, ...) is simply not a
+                # measurement — selection proceeds over the ones that ran
+                continue
+    return times

@@ -18,6 +18,9 @@ The policy zoo:
   FixedPolicy     force one candidate everywhere (baselines, A/B tests)
   AnalyticPolicy  roofline/cost-model argmin (no training data needed)
   CascadePolicy   ordered preference list with OOM + distributed fallback
+  AutotunePolicy  argmin of *on-device measurements* (core/measure.py);
+                  measures-and-caches cold shapes, analytic fallback when
+                  measurement is impossible (e.g. multi-device pjit)
 
 All selection runs at *trace* time under ``jit`` (JAX shapes are static),
 so every policy's compiled-step overhead is exactly zero — the paper's
@@ -36,9 +39,10 @@ from .candidates import (
     Candidate,
     candidate_allowed,
     candidate_fits_memory,
+    current_platform,
     get_candidate,
 )
-from .hardware import TPU_V5E, HardwareSpec
+from .hardware import TPU_V5E, HardwareSpec, host_spec
 
 __all__ = [
     "SelectionPolicy",
@@ -47,6 +51,7 @@ __all__ = [
     "FixedPolicy",
     "AnalyticPolicy",
     "CascadePolicy",
+    "AutotunePolicy",
     "use_policy",
     "current_policy",
     "default_policy",
@@ -159,12 +164,14 @@ class AnalyticPolicy(PolicyBase):
         for name in self.candidates:
             get_candidate(name)
         self.sigma = sigma
-        self._cache: Dict[Tuple[int, int, int, int], str] = {}
+        # keyed by platform too: admissibility depends on jax.default_backend(),
+        # so a decision cached under one backend must not replay on another
+        self._cache: Dict[Tuple[str, int, int, int, int], str] = {}
 
     def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
         from .simulate import simulate_time
 
-        key = (m, n, k, dsize)
+        key = (current_platform(), m, n, k, dsize)
         name = self._cache.get(key)
         if name is None:
             best_t = None
@@ -217,6 +224,157 @@ class CascadePolicy(PolicyBase):
 
     def __repr__(self):
         return f"CascadePolicy({list(self.names)!r})"
+
+
+class AutotunePolicy(PolicyBase):
+    """Measurement-backed selection: argmin of *on-device* timings.
+
+    ``select`` answers from a persistent ``MeasurementCache`` (warm hit);
+    on a cold shape it measures every admissible candidate right there at
+    trace time (``core/measure.py`` keeps the timing eager via
+    ``ensure_compile_time_eval``), stores the result, and persists the
+    cache.  When measurement is disabled or impossible — ``measure=False``,
+    ``distributed=True`` (multi-device pjit traces run on placeholder
+    devices), an unmeasurable dtype, or a shape over ``max_measure_flops``
+    — it falls back to ``AnalyticPolicy`` so dispatch always proceeds.
+
+    Cache keys include the jax platform and hardware name, so one file can
+    hold measurements from several backends without cross-talk.
+    """
+
+    def __init__(
+        self,
+        cache=None,
+        cache_path: Optional[str] = None,
+        hardware: Optional[HardwareSpec] = None,
+        candidates: Optional[Sequence[str]] = None,
+        measure: bool = True,
+        warmup: int = 1,
+        reps: int = 3,
+        max_measure_flops: float = 1e11,
+        **kw,
+    ):
+        from .measure import MeasurementCache
+
+        super().__init__(hardware=hardware or host_spec(), **kw)
+        if cache is None:
+            cache = (
+                MeasurementCache.load(cache_path)
+                if cache_path
+                else MeasurementCache()
+            )
+        elif cache_path is not None:
+            # a caller handing both means "use this cache, persist it here"
+            cache.path = cache_path
+        self.cache = cache
+        self.candidates = tuple(candidates or CANDIDATES)
+        for name in self.candidates:
+            get_candidate(name)
+        self.measure = measure
+        self.warmup = warmup
+        self.reps = reps
+        self.max_measure_flops = max_measure_flops
+        # the fallback honours the same candidate restriction, so a policy
+        # scoped to a subset can never dispatch outside it via the fallback
+        self.fallback = AnalyticPolicy(
+            hardware=self.hardware,
+            candidates=self.candidates,
+            distributed=self.distributed,
+            mem_budget_frac=self.mem_budget_frac,
+        )
+        # observability: cold shapes measured / warm hits / analytic fallbacks
+        self.n_measured = 0
+        self.n_cache_hits = 0
+        self.n_fallbacks = 0
+        # shapes where measurement produced nothing — don't retry them every
+        # select (in-memory only: a later session/platform may succeed)
+        self._unmeasurable: set = set()
+        # platform-keyed decision memo (same pattern as MTNNSelector /
+        # AnalyticPolicy): repeat selects skip the re-filter + argmin scan
+        self._decisions: Dict[Tuple[str, int, int, int, int], str] = {}
+
+    def _can_measure(self, dtype: Optional[str], flops: float) -> bool:
+        from .measure import measurement_supported
+
+        return (
+            self.measure
+            and not self.distributed
+            and dtype is not None
+            and flops <= self.max_measure_flops
+            and measurement_supported()
+        )
+
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+        from .measure import DTYPE_BY_DSIZE, measure_candidates
+
+        platform = current_platform()
+        memo_key = (platform, m, n, k, dsize)
+        hit = self._decisions.get(memo_key)
+        if hit is not None:
+            self.n_cache_hits += 1
+            self.stats.record(hit)
+            return hit
+        dtype = DTYPE_BY_DSIZE.get(dsize)
+        key = (
+            platform,
+            self.hardware.name,
+            dtype or f"{8 * dsize}-bit",
+            m,
+            n,
+            k,
+        )
+        times = self.cache.get(key)
+        if times is not None:
+            self.n_cache_hits += 1
+        elif key not in self._unmeasurable and self._can_measure(
+            dtype, 2.0 * m * n * k
+        ):
+            times = measure_candidates(
+                m, n, k,
+                dtype=dtype,
+                candidates=self.candidates,
+                hardware=self.hardware,
+                distributed=self.distributed,
+                mem_budget_frac=self.mem_budget_frac,
+                warmup=self.warmup,
+                reps=self.reps,
+            )
+            if times:
+                self.cache.put(key, times)
+                self.n_measured += 1
+                if self.cache.path:
+                    self.cache.save()
+            else:
+                self._unmeasurable.add(key)
+        name = None
+        if times:
+            # re-filter at use time: cached entries may predate a registry /
+            # distributed-mode / candidate-restriction change, and names the
+            # policy would not measure itself must never dispatch
+            best = None
+            for cand_name, t in times.items():
+                if cand_name not in self.candidates or cand_name not in CANDIDATES:
+                    continue
+                if not self._admissible(get_candidate(cand_name), m, n, k, dsize):
+                    continue
+                if best is None or t < best:
+                    best, name = t, cand_name
+        if name is not None:
+            self._decisions[memo_key] = name
+        else:
+            # fallback decisions are not memoized: AnalyticPolicy has its
+            # own platform-keyed memo, and a later measurement may succeed
+            self.n_fallbacks += 1
+            name = self.fallback.select(m, n, k, dsize)
+        self.stats.record(name)
+        return name
+
+    def __repr__(self):
+        return (
+            f"AutotunePolicy(hw={self.hardware.name!r}, "
+            f"cache={len(self.cache)} shapes, path={self.cache.path!r}, "
+            f"measure={self.measure})"
+        )
 
 
 # -- context scoping ----------------------------------------------------------

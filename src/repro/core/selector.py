@@ -35,6 +35,7 @@ from .candidates import (
     PAPER_PAIR,
     candidate_allowed,
     candidate_fits_memory,
+    current_platform,
 )
 from .features import make_features
 from .gbdt import GBDTClassifier
@@ -97,7 +98,9 @@ class MTNNSelector:
         self.distributed = distributed
         self.mem_budget_frac = mem_budget_frac
         self.stats = SelectorStats()
-        self._cache: Dict[Tuple[int, int, int, int], str] = {}
+        # keyed by platform too: admissibility depends on jax.default_backend(),
+        # so a decision cached under one backend must not replay on another
+        self._cache: Dict[Tuple[str, int, int, int, int], str] = {}
 
     # -- decision ----------------------------------------------------------
     def _fits(self, cand, m: int, n: int, k: int, dsize: int) -> bool:
@@ -108,9 +111,25 @@ class MTNNSelector:
     def _allowed(self, name: str) -> bool:
         return candidate_allowed(CANDIDATES[name], self.distributed)
 
+    def _admissible(self, name: str, m: int, n: int, k: int, dsize: int) -> bool:
+        return self._fits(CANDIDATES[name], m, n, k, dsize) and self._allowed(name)
+
+    def _fallback_candidate(self, m: int, n: int, k: int, dsize: int) -> str:
+        """The paper's NT fallback, hardened: prefer the pair's NT when it is
+        itself admissible, else the first admissible registered candidate
+        (NT can be platform-filtered or distributed-unsafe), else NT as the
+        terminal answer so dispatch always yields *something*."""
+        nt_name = self.binary_pair[0]
+        if self._admissible(nt_name, m, n, k, dsize):
+            return nt_name
+        for cand_name in CANDIDATES:
+            if self._admissible(cand_name, m, n, k, dsize):
+                return cand_name
+        return nt_name
+
     def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
         """Candidate name for this shape.  O(1) features, O(trees*depth) walk."""
-        key = (m, n, k, dsize)
+        key = (current_platform(), m, n, k, dsize)
         hit = self._cache.get(key)
         if hit is not None:
             self.stats.record(hit)
@@ -120,8 +139,8 @@ class MTNNSelector:
             nt_name, tnn_name = self.binary_pair
             label = int(self.model.predict(x)[0])
             name = nt_name if label == 1 else tnn_name
-            if not (self._fits(CANDIDATES[name], m, n, k, dsize) and self._allowed(name)):
-                name = nt_name  # paper's fallback: NT when B^T cannot fit
+            if not self._admissible(name, m, n, k, dsize):
+                name = self._fallback_candidate(m, n, k, dsize)
         else:  # k-way
             order = np.argsort(self.model.predict_times(x)[0])
             name = None
@@ -130,13 +149,11 @@ class MTNNSelector:
                 mapped = _sim_to_candidate(cand_name)
                 if mapped is None:
                     continue
-                if self._fits(CANDIDATES[mapped], m, n, k, dsize) and self._allowed(
-                    mapped
-                ):
+                if self._admissible(mapped, m, n, k, dsize):
                     name = mapped
                     break
             if name is None:
-                name = self.binary_pair[0]
+                name = self._fallback_candidate(m, n, k, dsize)
         self._cache[key] = name
         self.stats.record(name)
         return name

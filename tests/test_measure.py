@@ -1,0 +1,372 @@
+"""The on-device measurement subsystem: cache persistence + schema
+versioning, the timing harness' admissibility guards, AutotunePolicy
+cold-miss/warm-hit semantics with analytic fallback, the autotune policy
+spec, and retraining the paper's GBDT from autotune-collected records."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.hardware import HardwareSpec, host_spec
+from repro.core.measure import (
+    MEASURE_SCHEMA_VERSION,
+    MeasurementCache,
+    default_cache_path,
+    measure_candidates,
+    measurement_supported,
+)
+
+TINY_HW = HardwareSpec(
+    name="tiny_mem",
+    mem_gib=1e-6,  # nothing extra-memory fits
+    num_cores=1,
+    clock_mhz=1000.0,
+    mem_bw_gbps=100.0,
+    sram_kib=1024.0,
+    peak_tflops_bf16=1.0,
+    peak_tflops_f32=1.0,
+)
+
+
+# -- cache persistence --------------------------------------------------------
+
+
+class TestMeasurementCache:
+    def test_roundtrip(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        cache = MeasurementCache(p)
+        key = ("cpu", "host_cpu", "float32", 128, 256, 512)
+        cache.put(key, {"XLA_NT": 1.5e-4, "XLA_TNN": 2.5e-4})
+        cache.save()
+        cache2 = MeasurementCache.load(p)
+        assert len(cache2) == 1 and key in cache2
+        assert cache2.get(key) == {"XLA_NT": 1.5e-4, "XLA_TNN": 2.5e-4}
+
+    def test_missing_file_starts_empty(self, tmp_path):
+        cache = MeasurementCache.load(str(tmp_path / "absent.json"))
+        assert len(cache) == 0
+
+    def test_missing_file_strict(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            MeasurementCache.load(str(tmp_path / "absent.json"), missing_ok=False)
+
+    def test_carries_schema_version(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        cache = MeasurementCache(p)
+        cache.put(("cpu", "host_cpu", "float32", 8, 8, 8), {"XLA_NT": 1e-5})
+        cache.save()
+        with open(p) as fh:
+            payload = json.load(fh)
+        assert payload["schema_version"] == MEASURE_SCHEMA_VERSION
+
+    def test_future_schema_rejected(self, tmp_path):
+        p = str(tmp_path / "future.json")
+        with open(p, "w") as fh:
+            json.dump(
+                {"schema_version": MEASURE_SCHEMA_VERSION + 1, "entries": {}}, fh
+            )
+        with pytest.raises(ValueError, match="newer than supported"):
+            MeasurementCache.load(p)
+
+    def test_default_cache_path_env_override(self, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "/tmp/custom_cache.json")
+        assert default_cache_path() == "/tmp/custom_cache.json"
+
+    def test_hardware_name_with_separator_roundtrips(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        cache = MeasurementCache(p)
+        key = ("cpu", "gpu|a100-sxm", "float32", 8, 8, 8)
+        cache.put(key, {"XLA_NT": 1e-5})
+        cache.save()
+        assert MeasurementCache.load(p).get(key) == {"XLA_NT": 1e-5}
+
+    def test_save_merges_concurrent_writers(self, tmp_path):
+        """Two processes sharing one cache file must not clobber each
+        other's measurements (last-writer-wins data loss)."""
+        p = str(tmp_path / "shared.json")
+        a = MeasurementCache(p)
+        b = MeasurementCache(p)  # both loaded the same (empty) snapshot
+        ka = ("cpu", "host_cpu", "float32", 8, 8, 8)
+        kb = ("cpu", "host_cpu", "float32", 16, 16, 16)
+        a.put(ka, {"XLA_NT": 1e-5})
+        a.save()
+        b.put(kb, {"XLA_NT": 2e-5})
+        b.save()
+        merged = MeasurementCache.load(p)
+        assert ka in merged and kb in merged
+
+
+# -- timing harness -----------------------------------------------------------
+
+
+class TestMeasureHarness:
+    def test_measures_admissible_candidates(self):
+        times = measure_candidates(32, 24, 16, reps=1)
+        assert "XLA_NT" in times and "XLA_TNN" in times
+        assert all(t > 0.0 for t in times.values())
+        assert set(times) <= set(core.CANDIDATES)
+
+    def test_oom_guard_skips_extra_memory_candidates(self):
+        times = measure_candidates(32, 24, 16, hardware=TINY_HW, reps=1)
+        assert times, "non-extra-memory candidates must still be measured"
+        assert all(not core.get_candidate(n).extra_memory for n in times)
+
+    def test_distributed_filter(self):
+        times = measure_candidates(32, 24, 16, distributed=True, reps=1)
+        assert times
+        assert all(core.get_candidate(n).distributed_safe for n in times)
+
+    def test_supported_eagerly(self):
+        assert measurement_supported()
+
+
+# -- AutotunePolicy -----------------------------------------------------------
+
+
+class TestAutotunePolicy:
+    def test_cold_miss_measures_then_warm_hits(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        pol = core.AutotunePolicy(cache_path=p, reps=1)
+        name = pol.select(64, 48, 32)
+        assert name in core.CANDIDATES
+        assert (pol.n_measured, pol.n_cache_hits) == (1, 0)
+        assert pol.select(64, 48, 32) == name
+        assert (pol.n_measured, pol.n_cache_hits) == (1, 1)
+        # a fresh policy over the same file performs zero new measurements
+        pol2 = core.AutotunePolicy(cache_path=p)
+        assert pol2.select(64, 48, 32) == name
+        assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
+
+    def test_select_is_cached_argmin_of_admissible(self):
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(key, {"XLA_NT": 2.0, "XLA_TNN": 1.0, "NOT_REGISTERED": 0.1})
+        pol = core.AutotunePolicy(cache=cache)
+        # stale/unregistered names never dispatch; fastest admissible wins
+        assert pol.select(64, 64, 64) == "XLA_TNN"
+        assert pol.n_cache_hits == 1 and pol.n_measured == 0
+
+    def test_distributed_refilters_cached_entries(self):
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(key, {"PALLAS_NT": 1e-6, "XLA_NT": 2e-6})
+        pol = core.AutotunePolicy(cache=cache, distributed=True)
+        # fastest cached candidate is pjit-unsafe -> next admissible wins
+        assert pol.select(64, 64, 64) == "XLA_NT"
+
+    def test_candidate_restriction_respected_on_warm_hit_and_fallback(self):
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(key, {"XLA_TNN": 1e-6, "XLA_NT": 2e-6})
+        # warm hit: the fastest cached name is outside the restriction
+        pol = core.AutotunePolicy(cache=cache, candidates=("XLA_NT",))
+        assert pol.select(64, 64, 64) == "XLA_NT"
+        # fallback path: the analytic fallback is restricted the same way
+        pol2 = core.AutotunePolicy(measure=False, candidates=("XLA_TNN",))
+        assert pol2.select(256, 256, 256) == "XLA_TNN"
+
+    def test_cache_object_with_path_persists(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        pol = core.AutotunePolicy(cache=MeasurementCache(), cache_path=p, reps=1)
+        pol.select(16, 16, 16)
+        assert pol.n_measured == 1
+        assert len(MeasurementCache.load(p)) == 1
+
+    def test_measure_disabled_falls_back_to_analytic(self):
+        pol = core.AutotunePolicy(measure=False)
+        ana = core.AnalyticPolicy(hardware=pol.hardware)
+        assert pol.select(256, 256, 256) == ana.select(256, 256, 256)
+        assert pol.n_fallbacks == 1 and len(pol.cache) == 0
+
+    def test_distributed_disables_measurement(self):
+        pol = core.AutotunePolicy(distributed=True)
+        pol.select(128, 128, 128)
+        assert pol.n_measured == 0 and pol.n_fallbacks == 1
+
+    def test_flops_cap_disables_measurement(self):
+        pol = core.AutotunePolicy(max_measure_flops=1.0)
+        pol.select(64, 64, 64)
+        assert pol.n_measured == 0 and pol.n_fallbacks == 1
+
+    def test_measures_at_trace_time_inside_jit(self, tmp_path):
+        p = str(tmp_path / "trace_cache.json")
+        pol = core.AutotunePolicy(cache_path=p, reps=1)
+        a, b = jnp.ones((8, 16), jnp.float32), jnp.ones((4, 16), jnp.float32)
+        with core.use_policy(pol):
+            out = jax.jit(core.dispatch_nt)(a, b)
+        np.testing.assert_allclose(np.asarray(out), 16.0)
+        assert pol.n_measured == 1
+        # the measurement persisted: a later eager run warm-hits it
+        pol2 = core.AutotunePolicy(cache_path=p)
+        pol2.select(8, 4, 16)
+        assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
+
+    def test_is_selection_policy(self):
+        assert isinstance(core.AutotunePolicy(measure=False), core.SelectionPolicy)
+
+    def test_unmeasurable_shape_not_retried(self, monkeypatch):
+        """A shape where measurement yields nothing must fall back once and
+        be remembered, not re-attempt measurement on every select."""
+        calls = []
+
+        def empty_measurement(*a, **kw):
+            calls.append(a)
+            return {}
+
+        # select() imports measure_candidates lazily from the module
+        monkeypatch.setattr(
+            "repro.core.measure.measure_candidates", empty_measurement
+        )
+        pol = core.AutotunePolicy()
+        assert pol.select(8, 8, 8) in core.CANDIDATES  # analytic fallback
+        pol.select(8, 8, 8)
+        assert len(calls) == 1, "empty measurement must not be retried"
+        assert pol.n_fallbacks == 2 and len(pol.cache) == 0
+
+
+# -- spec parsing -------------------------------------------------------------
+
+
+class TestAutotuneSpec:
+    def test_autotune_spec_with_path(self, tmp_path):
+        p = str(tmp_path / "c.json")
+        pol = core.policy_from_spec(f"autotune:{p}")
+        assert isinstance(pol, core.AutotunePolicy)
+        assert pol.cache.path == p
+
+    def test_autotune_spec_default_path(self, monkeypatch, tmp_path):
+        p = str(tmp_path / "default.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", p)
+        pol = core.policy_from_spec("autotune")
+        assert pol.cache.path == p
+
+    def test_autotune_spec_distributed_disables_measurement(self, tmp_path):
+        pol = core.policy_from_spec(
+            f"autotune:{tmp_path / 'c.json'}", distributed=True
+        )
+        pol.select(64, 64, 64)
+        assert pol.n_measured == 0 and pol.n_fallbacks == 1
+
+    def test_spec_help_mentions_autotune(self):
+        from repro.core.engine import POLICY_SPEC_HELP
+
+        assert "autotune" in POLICY_SPEC_HELP
+
+
+# -- retraining from the cache ------------------------------------------------
+
+
+class TestDatasetFromMeasurements:
+    def _cache_from_dataset(self, ds) -> MeasurementCache:
+        """Rebuild the cache an autotune run over ds's shapes would hold."""
+        cache = MeasurementCache()
+        hw = host_spec()
+        for i, (m, n, k) in enumerate(np.asarray(ds.mnk)):
+            key = ("cpu", hw.name, "float32", int(m), int(n), int(k))
+            cache.put(
+                key,
+                {
+                    "XLA_NT": float(ds.times["NT"][i]),
+                    "XLA_TNN": float(ds.times["TNN"][i]),
+                },
+            )
+        return cache
+
+    def test_labels_agree_with_collect_measured(self):
+        ds_m = core.collect_measured(sizes=[16, 32], reps=1)
+        ds_c = core.dataset_from_measurements(self._cache_from_dataset(ds_m))
+        assert len(ds_c) == len(ds_m)
+        assert ds_c.source == "autotune-measured"
+        by_mnk = {tuple(mnk): y for mnk, y in zip(ds_c.mnk.tolist(), ds_c.y)}
+        for mnk, y in zip(ds_m.mnk.tolist(), ds_m.y):
+            assert by_mnk[tuple(mnk)] == y
+        # features rebuild identically from the hardware descriptor
+        np.testing.assert_allclose(
+            np.sort(ds_c.X, axis=0), np.sort(ds_m.X, axis=0)
+        )
+
+    def test_skips_records_missing_pair_member(self):
+        cache = MeasurementCache()
+        hw = host_spec()
+        cache.put(("cpu", hw.name, "float32", 8, 8, 8), {"XLA_NT": 1e-5})
+        cache.put(
+            ("cpu", hw.name, "float32", 16, 16, 16),
+            {"XLA_NT": 1e-5, "XLA_TNN": 2e-5},
+        )
+        ds = core.dataset_from_measurements(cache)
+        assert len(ds) == 1 and ds.y[0] == 1
+
+    def test_empty_cache_raises(self):
+        with pytest.raises(ValueError, match="no usable float32 records"):
+            core.dataset_from_measurements(MeasurementCache())
+
+    def test_mixed_platform_same_shape_raises(self):
+        """Same hw/dtype/shape under two jax backends would give identical
+        features with possibly contradictory labels — refuse unless the
+        caller filters to one platform."""
+        cache = MeasurementCache()
+        hw = host_spec()
+        cache.put(
+            ("cpu", hw.name, "float32", 8, 8, 8),
+            {"XLA_NT": 1e-5, "XLA_TNN": 2e-5},
+        )
+        cache.put(
+            ("gpu", hw.name, "float32", 8, 8, 8),
+            {"XLA_NT": 2e-5, "XLA_TNN": 1e-5},
+        )
+        with pytest.raises(ValueError, match="multiple.*platforms"):
+            core.dataset_from_measurements(cache)
+        ds = core.dataset_from_measurements(cache, platform="gpu")
+        assert len(ds) == 1 and ds.y[0] == -1
+
+    def test_unknown_hardware_named_in_error(self):
+        cache = MeasurementCache()
+        cache.put(
+            ("cpu", "some_future_chip", "float32", 8, 8, 8),
+            {"XLA_NT": 1e-5, "XLA_TNN": 2e-5},
+        )
+        with pytest.raises(ValueError, match="some_future_chip"):
+            core.dataset_from_measurements(cache)
+
+    def test_dtype_filter_keeps_features_unambiguous(self):
+        """bf16 and f32 timings of one shape would give the learner
+        identical 8-dim features with contradictory labels; the converter
+        keeps one dtype (default float32)."""
+        cache = MeasurementCache()
+        hw = host_spec()
+        cache.put(
+            ("cpu", hw.name, "float32", 8, 8, 8),
+            {"XLA_NT": 1e-5, "XLA_TNN": 2e-5},  # NT wins -> +1
+        )
+        cache.put(
+            ("cpu", hw.name, "bfloat16", 8, 8, 8),
+            {"XLA_NT": 2e-5, "XLA_TNN": 1e-5},  # TNN wins -> -1
+        )
+        ds = core.dataset_from_measurements(cache)
+        assert len(ds) == 1 and ds.y[0] == 1
+        ds_bf16 = core.dataset_from_measurements(cache, dtype="bfloat16")
+        assert len(ds_bf16) == 1 and ds_bf16.y[0] == -1
+        assert len(core.dataset_from_measurements(cache, dtype=None)) == 2
+
+    def test_trains_paper_model_end_to_end(self, tmp_path):
+        """The acceptance loop: autotune-measure shapes, convert, train,
+        save a versioned selector artifact, reload, select."""
+        p = str(tmp_path / "cache.json")
+        pol = core.AutotunePolicy(cache_path=p, reps=1)
+        for m in (16, 32):
+            for n in (16, 32):
+                for k in (16, 32):
+                    pol.select(m, n, k)
+        assert pol.n_measured == 8
+        ds = core.dataset_from_measurements(MeasurementCache.load(p))
+        assert len(ds) == 8
+        clf, report = core.train_paper_model(ds)
+        art = str(tmp_path / "selector.json")
+        core.MTNNSelector(clf).save(art)
+        sel = core.MTNNSelector.load(art)
+        assert sel.select(32, 32, 32) in core.CANDIDATES

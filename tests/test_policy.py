@@ -156,6 +156,26 @@ class TestPolicies:
         with pytest.raises(ValueError):
             core.policy_from_spec("bogus")
 
+    def test_policy_from_spec_strips_whitespace(self):
+        """Regression: '--policy "fixed: XLA_NT"' raised an opaque KeyError
+        because only cascade args were stripped."""
+        assert core.policy_from_spec("fixed: XLA_NT ").name == "XLA_NT"
+        assert core.policy_from_spec(" fixed:XLA_TNN").name == "XLA_TNN"
+        assert isinstance(core.policy_from_spec(" analytic "), core.AnalyticPolicy)
+        assert isinstance(core.policy_from_spec(" model "), core.ModelPolicy)
+        assert core.policy_from_spec("cascade: XLA_TNN , XLA_NT ,").names == (
+            "XLA_TNN",
+            "XLA_NT",
+        )
+
+    def test_policy_from_spec_errors_carry_help(self):
+        from repro.core.engine import POLICY_SPEC_HELP
+
+        for bad in ("bogus", "fixed:", "fixed:  ", "cascade:", "cascade: ,", ""):
+            with pytest.raises(ValueError) as ei:
+                core.policy_from_spec(bad)
+            assert POLICY_SPEC_HELP in str(ei.value), bad
+
     def test_policy_from_spec_distributed_restricts_candidates(self):
         """Launchers on a multi-device mesh pass distributed=True: guarded
         policies must then refuse pjit-unsafe (Pallas) candidates."""
@@ -165,6 +185,94 @@ class TestPolicies:
         assert pol.select(256, 256, 256) == "XLA_NT"
         ana = core.policy_from_spec("analytic", distributed=True)
         assert core.get_candidate(ana.select(1024, 1024, 1024)).distributed_safe
+
+
+# -- selector admissibility ---------------------------------------------------
+
+
+class _ConstModel:
+    """Stub predictor: always the same binary label."""
+
+    def __init__(self, label: int):
+        self.label = label
+
+    def predict(self, X):
+        return np.full(len(X), self.label)
+
+
+class _OneArmKWay:
+    """Stub k-way model with a single (inadmissible-by-test) arm."""
+
+    candidates = ("PALLAS_NT",)
+
+    def predict_times(self, X):
+        return np.ones((len(X), 1))
+
+
+class TestSelectorAdmissibility:
+    def test_binary_fallback_checks_nt_admissibility(self):
+        """Regression: the binary-mode fallback returned nt_name without
+        checking *its* admissibility — a distributed-unsafe NT could be
+        dispatched into a pjit program."""
+        sel = core.MTNNSelector(
+            _ConstModel(1), binary_pair=("PALLAS_NT", "XLA_TNN"), distributed=True
+        )
+        name = sel.select(64, 64, 64)
+        assert name == "XLA_NT"  # first admissible registered candidate
+        assert core.get_candidate(name).distributed_safe
+
+    def test_binary_fallback_oom_on_both_pair_members(self):
+        """Both pair members need B^T room; on a huge shape the fallback
+        must escape the pair entirely."""
+        sel = core.MTNNSelector(
+            _ConstModel(-1), binary_pair=("XLA_TNN", "PALLAS_TNN")
+        )
+        huge = 2**22
+        name = sel.select(huge, huge, 4096)
+        assert not core.get_candidate(name).extra_memory
+
+    def test_kway_fallback_checks_admissibility(self):
+        """Regression: the k-way fallback returned binary_pair[0] unchecked."""
+        sel = core.MTNNSelector(
+            _OneArmKWay(),
+            mode="kway",
+            binary_pair=("PALLAS_NT", "PALLAS_TNN"),
+            distributed=True,
+        )
+        name = sel.select(64, 64, 64)
+        assert name == "XLA_NT"
+        assert core.get_candidate(name).distributed_safe
+
+    def test_fallback_prefers_admissible_nt(self):
+        """When the paper's NT fallback is itself admissible it still wins."""
+        sel = core.MTNNSelector(_ConstModel(-1), binary_pair=("XLA_NT", "PALLAS_TNN"))
+        huge = 2**22
+        assert sel.select(huge, huge, 4096) == "XLA_NT"
+
+
+class TestPlatformCacheInvalidation:
+    """Regression: per-shape decision caches replayed a decision cached
+    under one jax backend on another, bypassing candidate_allowed."""
+
+    def _fake_platform(self, monkeypatch, platform: str):
+        for mod in ("candidates", "selector", "policy"):
+            monkeypatch.setattr(
+                f"repro.core.{mod}.current_platform", lambda: platform
+            )
+
+    def test_selector_cache_keyed_by_platform(self, monkeypatch):
+        sel = core.MTNNSelector(_ConstModel(1), binary_pair=("PALLAS_NT", "XLA_TNN"))
+        assert sel.select(32, 32, 32) == "PALLAS_NT"  # legal on cpu
+        self._fake_platform(monkeypatch, "gpu")
+        name = sel.select(32, 32, 32)
+        assert core.get_candidate(name).supports(platform="gpu")
+
+    def test_analytic_cache_keyed_by_platform(self, monkeypatch):
+        pol = core.AnalyticPolicy(candidates=("PALLAS_NT",))
+        assert pol.select(32, 32, 32) == "PALLAS_NT"
+        self._fake_platform(monkeypatch, "gpu")
+        name = pol.select(32, 32, 32)
+        assert core.get_candidate(name).supports(platform="gpu")
 
 
 # -- jit-trace behaviour ------------------------------------------------------

@@ -1,0 +1,204 @@
+"""Tile-config sweep over the Pallas kernel family — the perf trajectory
+tracker.
+
+For every (shape, candidate, tile config) cell this benchmark:
+
+  * validates the kernel output bit-for-bit-tolerably against the XLA
+    reference (a correctness mismatch fails the run — the CI ``tile-smoke``
+    job depends on this), and
+  * records the median wall-clock, achieved GFLOP/s and the roofline
+    GFLOP/s bound for the shape.
+
+``--json`` writes ``benchmarks/BENCH_kernels.json`` (committed per PR, so
+the kernel perf trajectory is diffable across PRs).  Numbers from this CPU
+container are interpret-mode Pallas — they track *tiling mechanics* (grid
+steps, padding waste), not MXU throughput; the recorded ``mode`` field says
+which kind of number you are looking at.
+
+  PYTHONPATH=src python -m benchmarks.kernel_sweep --json          # full grid
+  PYTHONPATH=src python -m benchmarks.kernel_sweep --json --quick  # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# The Pallas kernel family under sweep (XLA candidates are not tunable).
+PALLAS_FAMILY = ("PALLAS_NT", "PALLAS_TNN", "PALLAS_TNN_FUSED")
+
+# Ragged / adversarial shapes where the default tile is provably not
+# optimal, plus aligned controls.  --quick keeps the tiny ones.
+FULL_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (256, 256, 256),     # aligned control
+    (512, 512, 512),     # one default tile exactly
+    (1, 1000, 1000),     # degenerate m, ragged n/k
+    (129, 1000, 1000),   # just over one MXU tile in m
+    (127, 129, 1000),    # sub-tile m, ragged n, deep k
+    (1000, 127, 129),    # ragged m, thin n/k
+    (1000, 1000, 1000),  # ragged everything
+)
+QUICK_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (1, 256, 200),
+    (129, 257, 384),
+)
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+
+
+def _median_ms(fn, a, b, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(a, b))  # compile + warmup
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+
+def sweep(
+    shapes=FULL_SHAPES,
+    candidates=PALLAS_FAMILY,
+    max_tile_configs: int = 6,
+    reps: int = 3,
+    dtype: str = "float32",
+    cache_path: Optional[str] = None,
+    verbose: bool = True,
+) -> Dict:
+    """Measure the (shape x candidate x config) grid; returns the payload
+    ``--json`` writes.  Raises ``AssertionError`` on the first correctness
+    mismatch — a tile config must never change the computed function."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import core
+    from repro.core.hardware import host_spec
+    from repro.core.simulate import matmul_flops
+    from repro.kernels import DEFAULT_BLOCK, should_interpret
+    from repro.kernels.tiling import config_key, default_config
+
+    hw = host_spec()
+    mode = "interpret" if should_interpret() else "compiled"
+    dt = jnp.dtype(dtype)
+    rng = np.random.RandomState(0)
+    rows: List[Dict] = []
+    cache = core.MeasurementCache(cache_path) if cache_path else None
+
+    for (m, n, k) in shapes:
+        a = jnp.asarray(rng.randn(m, k), dt)
+        b = jnp.asarray(rng.randn(n, k), dt)
+        want = np.asarray(a, np.float64) @ np.asarray(b, np.float64).T
+        flops = matmul_flops(m, n, k)
+        # roofline bound for this shape on the host descriptor
+        peak = (hw.peak_tflops_bf16 if dt.itemsize <= 2 else hw.peak_tflops_f32)
+        roofline_gflops = min(
+            peak * 1e3,
+            hw.mem_bw_gbps * flops / ((m * k + n * k + m * n) * dt.itemsize),
+        )
+        dflt = default_config(m, n, k)
+        shape_rows: List[Dict] = []
+        nested: Dict[str, Dict[str, float]] = {}
+        for name in candidates:
+            cand = core.get_candidate(name)
+            configs = list(
+                cand.config_space(
+                    m, n, k, dt.itemsize,
+                    max_configs=max_tile_configs, hardware=hw,
+                )
+            ) or [None]
+            for cfg in configs:
+                # Candidate.run is the dispatch engine's own invocation
+                # path — benchmark exactly what dispatch would execute
+                fn = functools.partial(cand.run, config=cfg)
+                got = np.asarray(jax.jit(fn)(a, b), np.float64)
+                err = np.max(np.abs(got - want)) / max(1.0, np.max(np.abs(want)))
+                assert err < 1e-4, (
+                    f"correctness mismatch: {name} @ {config_key(cfg)} on "
+                    f"({m},{n},{k}) rel-err {err:.2e}"
+                )
+                ms = _median_ms(jax.jit(fn), a, b, reps)
+                ck = config_key(cfg)
+                nested.setdefault(name, {})[ck] = ms / 1e3
+                shape_rows.append(
+                    {
+                        "m": m, "n": n, "k": k,
+                        "candidate": name,
+                        "config": ck,
+                        "is_default_config": cfg is None or tuple(cfg) == dflt,
+                        "median_ms": round(ms, 4),
+                        "gflops": round(flops / ms / 1e6, 3),
+                        "roofline_gflops": round(roofline_gflops, 3),
+                    }
+                )
+        best = min(shape_rows, key=lambda r: r["median_ms"])
+        for r in shape_rows:
+            r["best"] = r is best
+        rows.extend(shape_rows)
+        if cache is not None:
+            # same key layout AutotunePolicy uses, so a sweep warms dispatch
+            cache.put((jax.default_backend(), hw.name, dtype, m, n, k), nested)
+        if verbose:
+            tag = "" if best["is_default_config"] else "  <- non-default tile wins"
+            print(
+                f"  ({m:>4d},{n:>4d},{k:>4d})  best {best['candidate']}"
+                f"@{best['config']}  {best['median_ms']:.2f} ms  "
+                f"{best['gflops']:.2f} GF/s{tag}"
+            )
+
+    if cache is not None:
+        cache.save()
+    return {
+        "mode": mode,
+        "dtype": dtype,
+        "hardware": hw.name,
+        "backend": __import__("jax").default_backend(),
+        "default_block": list(DEFAULT_BLOCK),
+        "results": rows,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help=f"write {os.path.basename(BENCH_PATH)}")
+    ap.add_argument("--out", default=BENCH_PATH, help="json output path")
+    ap.add_argument("--quick", action="store_true", help="tiny CI grid")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--max-configs", type=int, default=6)
+    ap.add_argument("--cache", default=None,
+                    help="also persist timings into this autotune cache file")
+    args = ap.parse_args(argv)
+
+    shapes = QUICK_SHAPES if args.quick else FULL_SHAPES
+    print(f"kernel tile-config sweep over {len(shapes)} shapes "
+          f"x {len(PALLAS_FAMILY)} Pallas candidates")
+    payload = sweep(
+        shapes=shapes,
+        reps=args.reps,
+        max_tile_configs=args.max_configs,
+        cache_path=args.cache,
+    )
+    n_nondefault = sum(
+        1 for r in payload["results"] if r["best"] and not r["is_default_config"]
+    )
+    print(f"  {n_nondefault}/{len(shapes)} shapes won by a non-default tile "
+          f"({payload['mode']} mode)")
+    if args.json:
+        with open(args.out, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"  wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,16 +22,23 @@ from repro import core
 from repro.core.selector import DEFAULT_ARTIFACT
 
 
-def build_dataset(args) -> "core.SelectionDataset":
+def build_dataset(args):
+    """Returns (dataset, tile_configs) — the learned per-candidate tiles
+    are non-empty only for --from-cache builds (v2 artifacts)."""
     if args.from_cache:
         print(f"[1/3] loading autotune measurement cache {args.from_cache}...")
         cache = core.MeasurementCache.load(args.from_cache, missing_ok=False)
         ds = core.dataset_from_measurements(
             cache, dtype=args.dtype, platform=args.platform
         )
+        tiles = core.top_configs_by_candidate(
+            cache, dtype=args.dtype, platform=args.platform
+        )
         print(f"      {len(cache)} cached shapes -> {len(ds)} samples "
               f"{ds.class_counts()}")
-        return ds
+        if tiles:
+            print(f"      learned tile configs: {tiles}")
+        return ds, tiles
 
     hi = 12 if args.fast else 16
     print(f"[1/3] analytic-TPU dataset (grid 2^7..2^{hi}, 3 chips)...")
@@ -42,7 +49,7 @@ def build_dataset(args) -> "core.SelectionDataset":
     sizes = [2**i for i in range(5, 9 if args.fast else 11)]
     ds_m = core.collect_measured(sizes=sizes, reps=3)
     print(f"      {len(ds_m)} samples {ds_m.class_counts()}")
-    return core.SelectionDataset.concat([ds_a, ds_m])
+    return core.SelectionDataset.concat([ds_a, ds_m]), {}
 
 
 def main():
@@ -69,7 +76,7 @@ def main():
     )
     args = ap.parse_args()
 
-    ds = build_dataset(args)
+    ds, tiles = build_dataset(args)
     print(f"[2/3] train on {len(ds)} samples ({ds.source})")
     # 5-fold CV needs enough rows per fold; small autotune caches skip it
     if len(ds) >= 25:
@@ -85,7 +92,7 @@ def main():
     print(f"[3/3] saving artifact (schema v{core.SCHEMA_VERSION}) -> {args.out}")
     out_dir = os.path.dirname(args.out) or "."
     os.makedirs(out_dir, exist_ok=True)
-    sel = core.MTNNSelector(clf)
+    sel = core.MTNNSelector(clf, tile_configs=tiles)
     sel.save(args.out)
     # reload check
     sel2 = core.MTNNSelector.load(args.out)

@@ -40,7 +40,7 @@ def main():
     rng = np.random.RandomState(0)
     for (m_, n_, k_) in [(128, 128, 128), (8192, 8192, 8192), (512, 65536, 256)]:
         choice = policy.select(m_, n_, k_)
-        print(f"   C[{m_},{n_}] = A[{m_},{k_}] @ B[{n_},{k_}]^T -> {choice}")
+        print(f"   C[{m_},{n_}] = A[{m_},{k_}] @ B[{n_},{k_}]^T -> {choice.label()}")
     a = jnp.asarray(rng.randn(64, 32), jnp.float32)
     b = jnp.asarray(rng.randn(16, 32), jnp.float32)
     with core.use_policy(policy):  # every NT op in scope uses this policy

@@ -23,13 +23,16 @@ from .hardware import SIMULATED_CHIPS, TPU_V4, TPU_V5E, TPU_V5P, HardwareSpec, h
 from .measure import (
     MEASURE_SCHEMA_VERSION,
     MeasurementCache,
+    best_times,
     measure_candidates,
     measurement_supported,
+    top_configs_by_candidate,
 )
 from .policy import (
     AnalyticPolicy,
     AutotunePolicy,
     CascadePolicy,
+    Decision,
     FixedPolicy,
     ModelPolicy,
     SelectionPolicy,
@@ -42,7 +45,6 @@ from .selector import (
     MTNNSelector,
     SelectorStats,
     default_selector,
-    select_matmul,
     set_default_selector,
 )
 from .svm import SVMClassifier
@@ -66,6 +68,7 @@ __all__ = [
     "candidate_names",
     "candidates_for",
     "SelectionPolicy",
+    "Decision",
     "ModelPolicy",
     "FixedPolicy",
     "AnalyticPolicy",
@@ -75,6 +78,8 @@ __all__ = [
     "MEASURE_SCHEMA_VERSION",
     "measure_candidates",
     "measurement_supported",
+    "best_times",
+    "top_configs_by_candidate",
     "use_policy",
     "current_policy",
     "default_policy",
@@ -100,7 +105,6 @@ __all__ = [
     "TPU_V5P",
     "host_spec",
     "MTNNSelector",
-    "select_matmul",
     "default_selector",
     "set_default_selector",
     "KWayModel",

@@ -26,6 +26,12 @@ marks the candidates that are legal inside pjit-partitioned programs
 without a shard_map wrapper; ``extra_memory`` marks the ones needing room
 for a materialised B^T (the paper's OOM guard); ``platforms``/``dtypes``
 bound where a candidate may be enumerated (per-hardware registries).
+
+``tunable`` candidates additionally accept a ``block=(bm, bn, bk)`` tile
+config keyword (the Pallas kernels); ``Candidate.config_space`` enumerates
+the admissible tiles for a shape (``kernels/tiling.py``) and
+``Candidate.run`` dispatches with one — the *(algorithm x config)* widening
+of the paper's selection space.
 """
 
 from __future__ import annotations
@@ -56,19 +62,64 @@ ALL_PLATFORMS: Tuple[str, ...] = ("tpu", "cpu", "gpu")
 @dataclass(frozen=True)
 class Candidate:
     name: str
-    fn: Callable[[jax.Array, jax.Array], jax.Array]
+    fn: Callable[..., jax.Array]
     sim_algo: str  # which analytic-cost-model arm describes it
     distributed_safe: bool  # usable directly under pjit partitioning
     extra_memory: bool  # needs room for B^T (paper's OOM guard)
     platforms: Tuple[str, ...] = ALL_PLATFORMS  # backends it may run on
     dtypes: Optional[Tuple[str, ...]] = None  # None => any dtype
+    tunable: bool = False  # fn accepts a block=(bm, bn, bk) tile config
 
-    def supports(self, platform: Optional[str] = None, dtype=None) -> bool:
+    def supports(
+        self, platform: Optional[str] = None, dtype=None, config=None
+    ) -> bool:
+        """Platform/dtype bounds, plus — config-aware — whether this
+        candidate can honour an explicit tile config at all (``None``
+        means "the candidate's own default" and every candidate supports
+        it)."""
         if platform is not None and platform not in self.platforms:
             return False
         if dtype is not None and self.dtypes is not None:
-            return jnp.dtype(dtype).name in self.dtypes
+            if jnp.dtype(dtype).name not in self.dtypes:
+                return False
+        if config is not None:
+            if not self.tunable:
+                return False
+            from repro.kernels.tiling import validate_config
+
+            try:
+                validate_config(config)
+            except ValueError:
+                return False
         return True
+
+    def config_space(
+        self,
+        m: int,
+        n: int,
+        k: int,
+        dsize: int = 4,
+        max_configs: int = 4,
+        hardware=None,
+    ) -> Tuple[Tuple[int, int, int], ...]:
+        """Admissible tile configs for this shape (empty for non-tunable
+        candidates) — the autotune sweep list, pruned by the roofline of
+        ``hardware`` (the *measuring* policy's descriptor, so the
+        shortlist is ranked for the machine actually being timed)."""
+        if not self.tunable:
+            return ()
+        from repro.kernels.tiling import shortlist_tile_configs
+
+        return shortlist_tile_configs(
+            m, n, k, dsize, max_configs=max_configs, hardware=hardware
+        )
+
+    def run(self, a: jax.Array, b: jax.Array, config=None) -> jax.Array:
+        """Execute the candidate, at an explicit tile config when one is
+        given (tunable candidates only — the kernel validates/clamps)."""
+        if config is None or not self.tunable:
+            return self.fn(a, b)
+        return self.fn(a, b, block=tuple(config))
 
 
 # The registry.  ``CANDIDATES`` is the same dict object (kept under its
@@ -85,15 +136,20 @@ def register_candidate(
     extra_memory: bool = False,
     platforms: Tuple[str, ...] = ALL_PLATFORMS,
     dtypes: Optional[Tuple[str, ...]] = None,
+    tunable: bool = False,
 ):
     """Decorator registering ``fn(a, b) -> c`` as a dispatch candidate.
+
+    ``tunable=True`` declares that ``fn`` also accepts a
+    ``block=(bm, bn, bk)`` keyword, opening the candidate to per-shape
+    tile-config autotuning.
 
     Raises ``ValueError`` on a duplicate name: candidates are identified by
     name in persisted selector artifacts, so silent replacement would make
     old artifacts dispatch to different code.
     """
 
-    def deco(fn: Callable[[jax.Array, jax.Array], jax.Array]):
+    def deco(fn: Callable[..., jax.Array]):
         if name in _REGISTRY:
             raise ValueError(
                 f"candidate {name!r} is already registered; "
@@ -107,6 +163,7 @@ def register_candidate(
             extra_memory=extra_memory,
             platforms=tuple(platforms),
             dtypes=tuple(dtypes) if dtypes is not None else None,
+            tunable=tunable,
         )
         return fn
 
@@ -158,10 +215,21 @@ def current_platform() -> str:
 
 def candidate_fits_memory(
     cand: Candidate, m: int, n: int, k: int, dsize: int, mem_gib: float,
-    budget_frac: float = 0.9,
+    budget_frac: float = 0.9, config=None,
 ) -> bool:
-    """Paper's OOM guard: extra-memory candidates must fit A, B, C *and*
-    the materialised B^T inside the budget."""
+    """Paper's OOM guard, config-aware: extra-memory candidates must fit
+    A, B, C *and* the materialised B^T inside the HBM budget; an explicit
+    tile config must additionally fit the VMEM budget (double-buffered
+    operand blocks + f32 accumulator, ``kernels/tiling.py``)."""
+    if config is not None and cand.tunable:
+        from repro.kernels.tiling import fits_vmem, validate_config
+
+        try:
+            validate_config(config)
+        except ValueError:
+            return False
+        if not fits_vmem(config, dsize):
+            return False
     if not cand.extra_memory:
         return True
     budget = mem_gib * (1024**3) * budget_frac
@@ -169,11 +237,11 @@ def candidate_fits_memory(
     return resident <= budget
 
 
-def candidate_allowed(cand: Candidate, distributed: bool) -> bool:
-    """Distributed-safety + runtime-platform filter."""
+def candidate_allowed(cand: Candidate, distributed: bool, config=None) -> bool:
+    """Distributed-safety + runtime-platform (+ tile-config) filter."""
     if distributed and not cand.distributed_safe:
         return False
-    return cand.supports(platform=current_platform())
+    return cand.supports(platform=current_platform(), config=config)
 
 
 # -- built-in candidates ------------------------------------------------------
@@ -200,27 +268,38 @@ def xla_tnn(a: jax.Array, b: jax.Array) -> jax.Array:
     ).astype(a.dtype)
 
 
-@register_candidate("PALLAS_NT", sim_algo="NT_DIRECT", platforms=("tpu", "cpu"))
-def _pallas_nt(a, b):
+@register_candidate(
+    "PALLAS_NT", sim_algo="NT_DIRECT", platforms=("tpu", "cpu"), tunable=True
+)
+def _pallas_nt(a, b, block=None):
     from repro.kernels import ops
 
-    return ops.matmul_nt(a, b)
+    return ops.matmul_nt(a, b, block=block)
 
 
 @register_candidate(
-    "PALLAS_TNN", sim_algo="TNN", extra_memory=True, platforms=("tpu", "cpu")
+    "PALLAS_TNN",
+    sim_algo="TNN",
+    extra_memory=True,
+    platforms=("tpu", "cpu"),
+    tunable=True,
 )
-def _pallas_tnn(a, b):
+def _pallas_tnn(a, b, block=None):
     from repro.kernels import ops
 
-    return ops.matmul_tnn(a, b)
+    return ops.matmul_tnn(a, b, block=block)
 
 
-@register_candidate("PALLAS_TNN_FUSED", sim_algo="TNN_FUSED", platforms=("tpu", "cpu"))
-def _pallas_tnn_fused(a, b):
+@register_candidate(
+    "PALLAS_TNN_FUSED",
+    sim_algo="TNN_FUSED",
+    platforms=("tpu", "cpu"),
+    tunable=True,
+)
+def _pallas_tnn_fused(a, b, block=None):
     from repro.kernels import ops
 
-    return ops.matmul_tnn_fused(a, b)
+    return ops.matmul_tnn_fused(a, b, block=block)
 
 
 # the paper's binary setting

@@ -228,6 +228,14 @@ def dataset_from_measurements(
     GBDT (measure -> retrain -> ``ModelPolicy``).  Labels follow the same
     rule as ``collect_measured``: +1 (choose NT) iff t_NT <= t_TNN.
 
+    v2 caches time each candidate at several tile configs; the *top config
+    per candidate* is folded in here (each candidate's time is its
+    best-config time), so the GBDT learns over the widened
+    (algorithm x config) label space while the paper's 8-dim feature schema
+    stays intact — the learned per-candidate tiles travel separately in the
+    v2 selector artifact (``measure.top_configs_by_candidate`` ->
+    ``MTNNSelector(tile_configs=...)``).
+
     ``dtype`` selects which cache records to use: the paper's 8-dim feature
     vector has no dtype component, so mixing e.g. bfloat16 and float32
     timings of one shape would feed the learner identical features with
@@ -242,6 +250,8 @@ def dataset_from_measurements(
     the paper's dataset filter).  ``times`` carries the canonical 'NT'/'TNN'
     keys plus every candidate timed in *all* kept records.
     """
+    from .measure import best_times
+
     nt_name, tnn_name = pair
     host = host_spec()
     specs = dict(SIMULATED_CHIPS)
@@ -250,12 +260,14 @@ def dataset_from_measurements(
     unknown_hw: Dict[str, int] = {}
     other_dtypes: Dict[str, int] = {}
     seen_platform: Dict[Tuple[str, str, int, int, int], str] = {}
-    for (rec_platform, hw_name, rec_dtype, m, n, k), times in cache.records():
+    for (rec_platform, hw_name, rec_dtype, m, n, k), nested in cache.records():
         if platform is not None and rec_platform != platform:
             continue
         if dtype is not None and rec_dtype != dtype:
             other_dtypes[rec_dtype] = other_dtypes.get(rec_dtype, 0) + 1
             continue
+        # top-config fold: each candidate enters at its best measured tile
+        times = {name: t for name, (_ck, t) in best_times(nested).items()}
         if nt_name not in times or tnn_name not in times:
             continue
         hw = specs.get(hw_name)

@@ -1,14 +1,15 @@
 """The dispatch engine: every NT op in the model layer lands here.
 
-``dispatch_nt(a, b)`` computes ``a @ b^T`` through whichever candidate the
-*scoped* policy picks (``policy.current_policy()``) — model code never
-threads a selector argument.  Because JAX shapes are static under ``jit``,
-the policy runs once per distinct shape at trace time and contributes
-nothing to the compiled step.
+``dispatch_nt(a, b)`` computes ``a @ b^T`` through whichever
+*(candidate, tile config)* the scoped policy picks
+(``policy.current_policy()``) — model code never threads a selector
+argument.  Because JAX shapes are static under ``jit``, the policy runs
+once per distinct shape at trace time and contributes nothing to the
+compiled step.
 
-``dispatch_report()`` renders the per-candidate decision counts of the
-scoped policy — surfaced at the end of train/serve runs so dispatch stays
-observable in production.
+``dispatch_report()`` renders the per-(candidate, config) decision counts
+of the scoped policy — surfaced at the end of train/serve runs so dispatch
+stays observable in production.
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ from .policy import (
     AnalyticPolicy,
     AutotunePolicy,
     CascadePolicy,
+    Decision,
     FixedPolicy,
     ModelPolicy,
     SelectionPolicy,
@@ -39,8 +41,8 @@ __all__ = [
 ]
 
 POLICY_SPEC_HELP = (
-    "NT-dispatch policy: model[:artifact.json] | fixed:<NAME> | analytic | "
-    "cascade:<A,B,...> | autotune[:cache.json]"
+    "NT-dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
+    "analytic | cascade:<A,B,...> | autotune[:cache.json]"
 )
 
 
@@ -50,7 +52,7 @@ def _spec_error(msg: str) -> ValueError:
 
 
 def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
-    """Compute ``a @ b^T`` through the policy-selected candidate.
+    """Compute ``a @ b^T`` through the policy-selected (candidate, config).
 
     ``a``: (..., m, k) activations; ``b``: (n, k) weights in the paper's
     row-major (out, in) convention — the forward pass of a dense layer is
@@ -65,24 +67,32 @@ def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
     m = 1
     for d in lead:
         m *= int(d)
-    name = pol.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
+    decision = pol.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
+    if isinstance(decision, str):  # legacy/third-party policy: bare name
+        decision = Decision(decision, None)
     a2 = a.reshape((m, k))
-    out = get_candidate(name).fn(a2, b)
+    out = get_candidate(decision.name).run(a2, b, decision.config)
     return out.reshape(lead + (n,))
 
 
 def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
-    """Pretty-print per-candidate decision counts for ``policy`` (default:
-    the scoped policy).  Returns the rendered table; callers print it."""
+    """Pretty-print per-(candidate, tile-config) decision counts for
+    ``policy`` (default: the scoped policy).  Rows are keyed
+    ``NAME@BMxBNxBK`` for decisions that carried an explicit tile and
+    ``NAME`` for kernel-default ones.  Returns the rendered table; callers
+    print it."""
     pol = policy if policy is not None else current_policy()
     stats = pol.stats
     lines = [f"dispatch report — {pol!r}"]
     if not stats.calls:
         lines.append("  (no dispatches recorded)")
         return "\n".join(lines)
-    width = max(len(n) for n in stats.by_candidate)
-    lines.append(f"  {'candidate':<{width}s} {'calls':>8s} {'share':>7s}")
-    for name, count in sorted(stats.by_candidate.items(), key=lambda kv: -kv[1]):
+    # by_decision carries the (candidate, config) split; fall back to the
+    # plain per-candidate counts for stats objects that lack it
+    rows = getattr(stats, "by_decision", None) or stats.by_candidate
+    width = max(len("candidate[@tile]"), max(len(n) for n in rows))
+    lines.append(f"  {'candidate[@tile]':<{width}s} {'calls':>8s} {'share':>7s}")
+    for name, count in sorted(rows.items(), key=lambda kv: -kv[1]):
         lines.append(
             f"  {name:<{width}s} {count:8d} {100.0 * count / stats.calls:6.1f}%"
         )
@@ -95,9 +105,11 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
 
       model[:path]              learned selector (default artifact or path)
       fixed:XLA_TNN             FixedPolicy
+      fixed:PALLAS_NT@256x256x512   FixedPolicy with a forced tile config
       analytic                  AnalyticPolicy on the default hardware
       cascade:A,B,C             CascadePolicy over the named candidates
-      autotune[:cache.json]     AutotunePolicy over the measurement cache
+      autotune[:cache.json]     AutotunePolicy over the (candidate, tile)
+                                measurement cache
                                 (default: core.measure.default_cache_path())
 
     Whitespace around the kind and its argument is ignored, so quoted CLI
@@ -119,7 +131,16 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
     if kind == "fixed":
         if not arg:
             raise _spec_error("fixed policy needs a candidate: fixed:<NAME>")
-        return FixedPolicy(arg)
+        name, _, cfg = arg.partition("@")
+        config = None
+        if cfg.strip():
+            from repro.kernels.tiling import parse_config_key
+
+            try:
+                config = parse_config_key(cfg.strip())
+            except ValueError as e:
+                raise _spec_error(str(e))
+        return FixedPolicy(name.strip(), config=config)
     if kind == "analytic":
         return AnalyticPolicy(distributed=distributed)
     if kind == "autotune":

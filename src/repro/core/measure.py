@@ -3,9 +3,12 @@
 The paper's pipeline is *measure NT vs TNN on real hardware -> train a
 selector -> dispatch*.  This module closes the measurement end of that loop
 for dispatch itself (AutoTVM-style): a timing harness that benchmarks every
-admissible candidate for one (m, n, k) shape on the *current* backend, and
-a persistent, versioned JSON cache of those timings keyed by
-``(platform, hardware, dtype, m, n, k)``.
+admissible *(candidate, tile config)* pair for one (m, n, k) shape on the
+*current* backend, and a persistent, versioned JSON cache of those timings
+keyed by ``(platform, hardware, dtype, m, n, k)``.  Tunable (Pallas)
+candidates are swept over their roofline-pruned config shortlist
+(``kernels/tiling.py``); non-tunable (XLA) candidates are timed once under
+the ``"default"`` config key.
 
 ``AutotunePolicy`` (core/policy.py) answers ``select()`` from the cache and
 measures-and-caches cold shapes; ``dataset_from_measurements``
@@ -44,12 +47,17 @@ __all__ = [
     "measure_candidates",
     "measurement_supported",
     "default_cache_path",
+    "best_times",
+    "top_configs_by_candidate",
     "DTYPE_BY_DSIZE",
 ]
 
 # Cache schema history:
 #   v1: {"schema_version": 1, "entries": {"plat|hw|dtype|m|n|k": {name: s}}}
-MEASURE_SCHEMA_VERSION = 1
+#   v2: entry values gain a tile-config level:
+#       {"plat|hw|dtype|m|n|k": {name: {"default"|"BMxBNxBK": s}}}
+#       v1 records migrate on load as {name: {"default": s}}.
+MEASURE_SCHEMA_VERSION = 2
 
 # select() receives an element size, not a dtype; measurement needs a real
 # dtype to build operands.  Sizes outside this map are not measurable (the
@@ -114,18 +122,48 @@ def _parse_key(s: str) -> MeasurementKey:
     return (platform, hardware, dtype, int(m), int(n), int(k))
 
 
-class MeasurementCache:
-    """Persistent ``(platform, hardware, dtype, m, n, k) -> {name: seconds}``.
+def _normalize_times(times: Dict) -> Dict[str, Dict[str, float]]:
+    """Canonical nested form ``{name: {config_key: seconds}}``.
 
-    Versioned like selector artifacts: files newer than
-    ``MEASURE_SCHEMA_VERSION`` are rejected rather than misread.  ``save``
-    writes atomically (tmp + rename) so a crash mid-write cannot corrupt a
-    warm cache.
+    Accepts the v1 flat form ``{name: seconds}`` (migrated under the
+    ``"default"`` config key) so old files and hand-built dicts keep
+    working.
+    """
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY
+
+    out: Dict[str, Dict[str, float]] = {}
+    for name, val in times.items():
+        if isinstance(val, dict):
+            out[str(name)] = {str(c): float(t) for c, t in val.items()}
+        else:
+            out[str(name)] = {DEFAULT_CONFIG_KEY: float(val)}
+    return out
+
+
+def best_times(times: Dict[str, Dict[str, float]]) -> Dict[str, Tuple[str, float]]:
+    """Per candidate, the winning ``(config_key, seconds)`` — the top-config
+    fold used by selection and by ``dataset_from_measurements``."""
+    out: Dict[str, Tuple[str, float]] = {}
+    for name, cfgs in times.items():
+        if cfgs:
+            ck = min(cfgs, key=cfgs.get)
+            out[name] = (ck, cfgs[ck])
+    return out
+
+
+class MeasurementCache:
+    """Persistent ``(platform, hardware, dtype, m, n, k) ->
+    {candidate: {config_key: seconds}}``.
+
+    Versioned like selector artifacts: v1 files (flat per-candidate
+    timings) migrate on load; files newer than ``MEASURE_SCHEMA_VERSION``
+    are rejected rather than misread.  ``save`` writes atomically (tmp +
+    rename) so a crash mid-write cannot corrupt a warm cache.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
-        self._entries: Dict[MeasurementKey, Dict[str, float]] = {}
+        self._entries: Dict[MeasurementKey, Dict[str, Dict[str, float]]] = {}
         # (mtime_ns, size) of the file state we last loaded/wrote
         self._synced_sig: Optional[Tuple[int, int]] = None
 
@@ -145,10 +183,11 @@ class MeasurementCache:
                 f"measurement cache schema v{version} is newer than supported "
                 f"v{MEASURE_SCHEMA_VERSION}; upgrade the code or re-measure"
             )
+        # v1 (and unversioned v0-era) entries hold flat {name: seconds}
+        # values; _normalize_times folds them under the "default" config
+        # key — a v1 cache keeps answering warm hits after the upgrade.
         for ks, times in payload.get("entries", {}).items():
-            cache._entries[_parse_key(ks)] = {
-                str(c): float(t) for c, t in times.items()
-            }
+            cache._entries[_parse_key(ks)] = _normalize_times(times)
         return cache
 
     def save(self, path: Optional[str] = None) -> None:
@@ -201,13 +240,17 @@ class MeasurementCache:
             if path == self.path:
                 self._synced_sig = _file_sig(path)
 
-    def get(self, key: MeasurementKey) -> Optional[Dict[str, float]]:
+    def get(self, key: MeasurementKey) -> Optional[Dict[str, Dict[str, float]]]:
         return self._entries.get(key)
 
-    def put(self, key: MeasurementKey, times: Dict[str, float]) -> None:
-        self._entries[key] = dict(times)
+    def put(self, key: MeasurementKey, times: Dict) -> None:
+        """Store timings for one shape.  Accepts the canonical nested form
+        or the flat v1 form (normalised under ``"default"``)."""
+        self._entries[key] = _normalize_times(times)
 
-    def records(self) -> Iterator[Tuple[MeasurementKey, Dict[str, float]]]:
+    def records(
+        self,
+    ) -> Iterator[Tuple[MeasurementKey, Dict[str, Dict[str, float]]]]:
         """All (key, times) pairs, sorted for deterministic iteration."""
         return iter(sorted(self._entries.items()))
 
@@ -286,23 +329,34 @@ def measure_candidates(
     warmup: int = 1,
     reps: int = 3,
     seed: int = 0,
-) -> Dict[str, float]:
-    """Time every admissible candidate for one shape on this backend.
+    tune: bool = True,
+    max_tile_configs: int = 4,
+) -> Dict[str, Dict[str, float]]:
+    """Time every admissible (candidate, tile config) for one shape on this
+    backend; returns ``{name: {config_key: seconds}}``.
 
+    Tunable candidates are swept over their roofline-pruned config
+    shortlist (``tune=False`` restricts them to the default tiling);
+    non-tunable candidates are timed once under ``"default"``.
     Admissibility is the shared guard set from ``candidates.py`` — the
-    paper's OOM check (extra-memory candidates must fit the budget) plus
-    the distributed/platform filter — so an autotune run can never execute
-    a candidate the dispatch engine would refuse.  Inadmissible candidates
-    are skipped, not timed; the result may be empty.
+    paper's OOM check (extra-memory candidates must fit the budget), the
+    distributed/platform filter, and the VMEM budget per config — so an
+    autotune run can never execute a pair the dispatch engine would
+    refuse.  Inadmissible pairs are skipped, not timed; the result may be
+    empty.
     """
+    import functools
+
     import jax
     import jax.numpy as jnp
+
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
 
     hw = hardware or host_spec()
     names = tuple(candidates or CANDIDATES)
     dt = jnp.dtype(dtype)
     dsize = dt.itemsize
-    times: Dict[str, float] = {}
+    times: Dict[str, Dict[str, float]] = {}
     with _eval_scope():
         ka, kb = jax.random.split(jax.random.PRNGKey(seed))
         a = jax.random.normal(ka, (m, k), dtype=dt)
@@ -315,11 +369,60 @@ def measure_candidates(
                 continue  # OOM guard: do not even try to materialise B^T
             if not candidate_allowed(cand, distributed):
                 continue
-            try:
-                times[name] = bench_fn(jax.jit(cand.fn), a, b, reps, warmup)
-            except Exception:
-                # a candidate that cannot run here (kernel unsupported under
-                # the eval trace, allocation failure, ...) is simply not a
-                # measurement — selection proceeds over the ones that ran
-                continue
+            if cand.tunable and tune:
+                sweep = [
+                    (config_key(cfg), cfg)
+                    for cfg in cand.config_space(
+                        m, n, k, dsize, max_configs=max_tile_configs, hardware=hw
+                    )
+                ]
+            else:
+                sweep = [(DEFAULT_CONFIG_KEY, None)]
+            entry: Dict[str, float] = {}
+            for ck, cfg in sweep:
+                # Candidate.run is the dispatch engine's invocation path —
+                # time exactly what a dispatch at this config would execute
+                fn = functools.partial(cand.run, config=cfg)
+                try:
+                    entry[ck] = bench_fn(jax.jit(fn), a, b, reps, warmup)
+                except Exception:
+                    # a pair that cannot run here (kernel unsupported under
+                    # the eval trace, allocation failure, ...) is simply not
+                    # a measurement — selection proceeds over those that ran
+                    continue
+            if entry:
+                times[name] = entry
     return times
+
+
+def top_configs_by_candidate(
+    cache: "MeasurementCache",
+    dtype: Optional[str] = None,
+    platform: Optional[str] = None,
+) -> Dict[str, str]:
+    """Per candidate, the *modal* winning config key across all matching
+    cache records — the shape-independent tile summary a retrained
+    ``MTNNSelector`` carries in its v2 artifact (``tile_configs``), so a
+    ``ModelPolicy`` built from autotune data dispatches tuned tiles even
+    on shapes the cache never saw.  Only explicit tiles count: candidates
+    whose wins are all at the ``"default"`` tiling (non-tunable XLA arms,
+    ``tune=False`` sweeps) carry no entry — an artifact should list
+    *learned* tiles, not restate the default."""
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY
+
+    wins: Dict[str, Dict[str, int]] = {}
+    for (rec_platform, _hw, rec_dtype, *_mnk), times in cache.records():
+        if platform is not None and rec_platform != platform:
+            continue
+        if dtype is not None and rec_dtype != dtype:
+            continue
+        for name, (ck, _t) in best_times(times).items():
+            if ck == DEFAULT_CONFIG_KEY:
+                continue
+            wins.setdefault(name, {})
+            wins[name][ck] = wins[name].get(ck, 0) + 1
+    # deterministic tie-break: highest count, then lexicographic key
+    return {
+        name: min(counts, key=lambda ck: (-counts[ck], ck))
+        for name, counts in wins.items()
+    }

@@ -7,6 +7,11 @@ policy instead of a module-global selector threaded through every layer:
     with use_policy(FixedPolicy("XLA_TNN")):
         logits = lm.lm_forward(params, cfg, batch)   # every NT op -> XLA_TNN
 
+and widens it from *algorithm* to *(algorithm x tile config)*: every
+policy's ``select`` returns a ``Decision(name, config)`` — the candidate to
+run and, for tunable (Pallas) candidates, the ``(bm, bn, bk)`` VMEM tile to
+run it at (``config=None`` means the kernel's built-in default tiling).
+
 Policies implement the ``SelectionPolicy`` protocol (``select`` + ``stats``)
 and are scoped with a ``contextvars.ContextVar``, so nested ``with`` blocks
 restore the outer policy on exit and concurrent threads / asyncio tasks see
@@ -14,11 +19,14 @@ independent policies — the prerequisite for per-request policies in serving.
 
 The policy zoo:
 
-  ModelPolicy     the paper's learned selector (GBDT binary or k-way)
-  FixedPolicy     force one candidate everywhere (baselines, A/B tests)
-  AnalyticPolicy  roofline/cost-model argmin (no training data needed)
+  ModelPolicy     the paper's learned selector (GBDT binary or k-way);
+                  tile from the artifact's learned per-candidate config
+  FixedPolicy     force one candidate (and optionally one tile) everywhere
+  AnalyticPolicy  roofline/cost-model argmin over candidates, then over
+                  tiles (``simulate.tile_time``) — no training data needed
   CascadePolicy   ordered preference list with OOM + distributed fallback
-  AutotunePolicy  argmin of *on-device measurements* (core/measure.py);
+  AutotunePolicy  argmin of *on-device measurements* over the full
+                  (candidate x config) space (core/measure.py);
                   measures-and-caches cold shapes, analytic fallback when
                   measurement is impossible (e.g. multi-device pjit)
 
@@ -32,7 +40,16 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Dict, Iterator, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import (
+    Dict,
+    Iterator,
+    NamedTuple,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    runtime_checkable,
+)
 
 from .candidates import (
     CANDIDATES,
@@ -45,6 +62,7 @@ from .candidates import (
 from .hardware import TPU_V5E, HardwareSpec, host_spec
 
 __all__ = [
+    "Decision",
     "SelectionPolicy",
     "PolicyBase",
     "ModelPolicy",
@@ -58,9 +76,28 @@ __all__ = [
 ]
 
 
+class Decision(NamedTuple):
+    """One dispatch decision: the candidate to run and the tile config to
+    run it at.  ``config=None`` means the candidate's default tiling (the
+    only option for non-tunable candidates)."""
+
+    name: str
+    config: Optional[Tuple[int, int, int]] = None
+
+    def label(self) -> str:
+        """Report form: ``NAME`` or ``NAME@BMxBNxBK``."""
+        if self.config is None:
+            return self.name
+        from repro.kernels.tiling import config_key
+
+        return f"{self.name}@{config_key(self.config)}"
+
+
 @runtime_checkable
 class SelectionPolicy(Protocol):
-    """Anything that can pick a candidate name for an (m, n, k) shape.
+    """Anything that can pick a (candidate, tile config) for an (m, n, k)
+    shape.  ``select`` returns a ``Decision`` (legacy policies returning a
+    bare name string are normalised by the dispatch engine).
 
     ``stats`` must expose ``calls: int`` and ``by_candidate: Dict[str, int]``
     (see ``selector.SelectorStats``) so dispatch decisions stay observable.
@@ -68,7 +105,7 @@ class SelectionPolicy(Protocol):
 
     stats: "object"
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> "Decision":
         ...
 
 
@@ -88,28 +125,49 @@ class PolicyBase:
         self.mem_budget_frac = mem_budget_frac
         self.stats = SelectorStats()
 
-    def _admissible(self, cand: Candidate, m: int, n: int, k: int, dsize: int) -> bool:
+    def _admissible(
+        self, cand: Candidate, m: int, n: int, k: int, dsize: int, config=None
+    ) -> bool:
         return candidate_fits_memory(
-            cand, m, n, k, dsize, self.hardware.mem_gib, self.mem_budget_frac
-        ) and candidate_allowed(cand, self.distributed)
+            cand, m, n, k, dsize, self.hardware.mem_gib, self.mem_budget_frac,
+            config=config,
+        ) and candidate_allowed(cand, self.distributed, config=config)
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
         raise NotImplementedError
 
 
 class FixedPolicy(PolicyBase):
-    """Always run one candidate — baselines and forced A/B arms."""
+    """Always run one candidate — baselines and forced A/B arms.
 
-    def __init__(self, name: str, **kw):
+    An optional ``config`` forces one tile too (tunable candidates only):
+    ``FixedPolicy("PALLAS_NT", config=(256, 256, 512))`` is the forced arm
+    of a tile A/B test.
+    """
+
+    def __init__(self, name: str, config: Optional[Tuple[int, int, int]] = None, **kw):
         super().__init__(**kw)
-        get_candidate(name)  # fail fast on unknown names
-        self.name = name
+        cand = get_candidate(name)  # fail fast on unknown names
+        if config is not None:
+            from repro.kernels.tiling import validate_config
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
-        self.stats.record(self.name)
-        return self.name
+            config = validate_config(config)
+            if not cand.tunable:
+                raise ValueError(
+                    f"candidate {name!r} is not tunable; it cannot take a "
+                    f"forced tile config {config}"
+                )
+        self.name = name
+        self.config = config
+
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+        decision = Decision(self.name, self.config)
+        self.stats.record(self.name, self.config)
+        return decision
 
     def __repr__(self):
+        if self.config is not None:
+            return f"FixedPolicy({self.name!r}, config={self.config})"
         return f"FixedPolicy({self.name!r})"
 
 
@@ -119,7 +177,9 @@ class ModelPolicy:
     Thin adapter over ``MTNNSelector`` (which already implements the GBDT /
     k-way decision, shape cache, OOM guard and distributed filter); stats
     are the selector's own, so a report covers dispatches made through
-    either API.
+    either API.  The tile config comes from the selector's learned
+    per-candidate ``tile_configs`` (v2 artifacts trained from autotune
+    caches carry one; otherwise the kernel default applies).
     """
 
     def __init__(self, selector=None):
@@ -139,8 +199,12 @@ class ModelPolicy:
     def stats(self):
         return self.selector.stats
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
-        return self.selector.select(m, n, k, dsize=dsize)
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+        name = self.selector.select(m, n, k, dsize=dsize)
+        # tile_config_for validates the learned tile for *this* dispatch
+        # (tunability + VMEM at this dsize): an infeasible artifact entry
+        # degrades to the kernel default, never to a VMEM bust
+        return Decision(name, self.selector.tile_config_for(name, dsize))
 
     def __repr__(self):
         return f"ModelPolicy(mode={self.selector.mode!r}, hw={self.selector.hardware.name!r})"
@@ -148,8 +212,12 @@ class ModelPolicy:
 
 class AnalyticPolicy(PolicyBase):
     """Roofline argmin: pick the candidate whose analytic-cost-model arm
-    (``core/simulate.py``) predicts the lowest time.  Needs no training
-    data — the zero-shot fallback for hardware with no measured dataset.
+    (``core/simulate.py``) predicts the lowest time, then rank its tile
+    configs with the roofline tile model (``simulate.tile_time``:
+    arithmetic intensity of the padded problem vs VMEM residency of the
+    blocks) and attach the winner.  Needs no training data — the zero-shot
+    fallback for hardware with no measured dataset, and the reason the
+    autotune fallback is not blind to tiling.
     """
 
     def __init__(
@@ -166,15 +234,34 @@ class AnalyticPolicy(PolicyBase):
         self.sigma = sigma
         # keyed by platform too: admissibility depends on jax.default_backend(),
         # so a decision cached under one backend must not replay on another
-        self._cache: Dict[Tuple[str, int, int, int, int], str] = {}
+        self._cache: Dict[Tuple[str, int, int, int, int], Decision] = {}
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+    def _best_config(self, cand: Candidate, m: int, n: int, k: int, dsize: int):
+        """Roofline-ranked tile for a tunable candidate (None otherwise)."""
+        from repro.kernels.tiling import enumerate_tile_configs
+
+        from .simulate import tile_time
+
+        if not cand.tunable:
+            return None
+        best_cfg, best_t = None, None
+        # the raw enumeration, not the shortlist: ranking happens right
+        # here on self.hardware, so a pre-sorted list would be wasted work
+        for cfg in enumerate_tile_configs(m, n, k, dsize):
+            if not self._admissible(cand, m, n, k, dsize, config=cfg):
+                continue
+            t = tile_time(self.hardware, m, n, k, dsize, cfg)
+            if best_t is None or t < best_t:
+                best_t, best_cfg = t, cfg
+        return best_cfg
+
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
         from .simulate import simulate_time
 
         key = (current_platform(), m, n, k, dsize)
-        name = self._cache.get(key)
-        if name is None:
-            best_t = None
+        decision = self._cache.get(key)
+        if decision is None:
+            best_t, name = None, None
             for cand_name in self.candidates:
                 cand = get_candidate(cand_name)
                 if not self._admissible(cand, m, n, k, dsize):
@@ -185,10 +272,14 @@ class AnalyticPolicy(PolicyBase):
                 if best_t is None or t < best_t:
                     best_t, name = t, cand_name
             if name is None:  # nothing admissible: paper's NT fallback
-                name = "XLA_NT"
-            self._cache[key] = name
-        self.stats.record(name)
-        return name
+                decision = Decision("XLA_NT", None)
+            else:
+                decision = Decision(
+                    name, self._best_config(get_candidate(name), m, n, k, dsize)
+                )
+            self._cache[key] = decision
+        self.stats.record(decision.name, decision.config)
+        return decision
 
     def __repr__(self):
         return f"AnalyticPolicy(hw={self.hardware.name!r}, candidates={self.candidates})"
@@ -213,30 +304,33 @@ class CascadePolicy(PolicyBase):
             get_candidate(name)
         self.names = names
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
         chosen = self.names[-1]
         for name in self.names:
             if self._admissible(get_candidate(name), m, n, k, dsize):
                 chosen = name
                 break
         self.stats.record(chosen)
-        return chosen
+        return Decision(chosen, None)
 
     def __repr__(self):
         return f"CascadePolicy({list(self.names)!r})"
 
 
 class AutotunePolicy(PolicyBase):
-    """Measurement-backed selection: argmin of *on-device* timings.
+    """Measurement-backed selection: argmin of *on-device* timings over the
+    two-level (candidate x tile config) space.
 
     ``select`` answers from a persistent ``MeasurementCache`` (warm hit);
-    on a cold shape it measures every admissible candidate right there at
-    trace time (``core/measure.py`` keeps the timing eager via
-    ``ensure_compile_time_eval``), stores the result, and persists the
-    cache.  When measurement is disabled or impossible — ``measure=False``,
-    ``distributed=True`` (multi-device pjit traces run on placeholder
-    devices), an unmeasurable dtype, or a shape over ``max_measure_flops``
-    — it falls back to ``AnalyticPolicy`` so dispatch always proceeds.
+    on a cold shape it measures every admissible candidate — tunable ones
+    across their roofline-pruned config shortlist (``max_tile_configs``
+    wide) — right there at trace time (``core/measure.py`` keeps the
+    timing eager via ``ensure_compile_time_eval``), stores the result, and
+    persists the cache.  When measurement is disabled or impossible —
+    ``measure=False``, ``distributed=True`` (multi-device pjit traces run
+    on placeholder devices), an unmeasurable dtype, or a shape over
+    ``max_measure_flops`` — it falls back to ``AnalyticPolicy`` (which
+    ranks tiles by the roofline model) so dispatch always proceeds, tiled.
 
     Cache keys include the jax platform and hardware name, so one file can
     hold measurements from several backends without cross-talk.
@@ -252,6 +346,8 @@ class AutotunePolicy(PolicyBase):
         warmup: int = 1,
         reps: int = 3,
         max_measure_flops: float = 1e11,
+        tune: bool = True,
+        max_tile_configs: int = 4,
         **kw,
     ):
         from .measure import MeasurementCache
@@ -274,6 +370,8 @@ class AutotunePolicy(PolicyBase):
         self.warmup = warmup
         self.reps = reps
         self.max_measure_flops = max_measure_flops
+        self.tune = tune
+        self.max_tile_configs = max_tile_configs
         # the fallback honours the same candidate restriction, so a policy
         # scoped to a subset can never dispatch outside it via the fallback
         self.fallback = AnalyticPolicy(
@@ -291,7 +389,7 @@ class AutotunePolicy(PolicyBase):
         self._unmeasurable: set = set()
         # platform-keyed decision memo (same pattern as MTNNSelector /
         # AnalyticPolicy): repeat selects skip the re-filter + argmin scan
-        self._decisions: Dict[Tuple[str, int, int, int, int], str] = {}
+        self._decisions: Dict[Tuple[str, int, int, int, int], Decision] = {}
 
     def _can_measure(self, dtype: Optional[str], flops: float) -> bool:
         from .measure import measurement_supported
@@ -304,7 +402,9 @@ class AutotunePolicy(PolicyBase):
             and measurement_supported()
         )
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
+    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+        from repro.kernels.tiling import parse_config_key
+
         from .measure import DTYPE_BY_DSIZE, measure_candidates
 
         platform = current_platform()
@@ -312,7 +412,7 @@ class AutotunePolicy(PolicyBase):
         hit = self._decisions.get(memo_key)
         if hit is not None:
             self.n_cache_hits += 1
-            self.stats.record(hit)
+            self.stats.record(hit.name, hit.config)
             return hit
         dtype = DTYPE_BY_DSIZE.get(dsize)
         key = (
@@ -338,6 +438,8 @@ class AutotunePolicy(PolicyBase):
                 mem_budget_frac=self.mem_budget_frac,
                 warmup=self.warmup,
                 reps=self.reps,
+                tune=self.tune,
+                max_tile_configs=self.max_tile_configs,
             )
             if times:
                 self.cache.put(key, times)
@@ -346,28 +448,35 @@ class AutotunePolicy(PolicyBase):
                     self.cache.save()
             else:
                 self._unmeasurable.add(key)
-        name = None
+        decision = None
         if times:
             # re-filter at use time: cached entries may predate a registry /
-            # distributed-mode / candidate-restriction change, and names the
-            # policy would not measure itself must never dispatch
+            # distributed-mode / candidate-restriction change, and pairs the
+            # policy would not measure itself must never dispatch — the
+            # admissibility check is config-aware (VMEM budget included)
             best = None
-            for cand_name, t in times.items():
+            for cand_name, cfgs in times.items():
                 if cand_name not in self.candidates or cand_name not in CANDIDATES:
                     continue
-                if not self._admissible(get_candidate(cand_name), m, n, k, dsize):
-                    continue
-                if best is None or t < best:
-                    best, name = t, cand_name
-        if name is not None:
-            self._decisions[memo_key] = name
+                cand = get_candidate(cand_name)
+                for cfg_key, t in cfgs.items():
+                    try:
+                        cfg = parse_config_key(cfg_key)
+                    except ValueError:
+                        continue  # corrupt/foreign key: never dispatch it
+                    if not self._admissible(cand, m, n, k, dsize, config=cfg):
+                        continue
+                    if best is None or t < best:
+                        best, decision = t, Decision(cand_name, cfg)
+        if decision is not None:
+            self._decisions[memo_key] = decision
         else:
             # fallback decisions are not memoized: AnalyticPolicy has its
             # own platform-keyed memo, and a later measurement may succeed
             self.n_fallbacks += 1
-            name = self.fallback.select(m, n, k, dsize)
-        self.stats.record(name)
-        return name
+            decision = self.fallback.select(m, n, k, dsize)
+        self.stats.record(decision.name, decision.config)
+        return decision
 
     def __repr__(self):
         return (

@@ -10,13 +10,13 @@ Differences from the paper's runtime flow (and why):
   * Binary (paper-faithful) and k-way (beyond-paper) modes share this API.
 
 Dispatch now goes through ``core.engine`` + ``core.policy`` (the selector
-is wrapped by ``ModelPolicy``); ``select_matmul`` below remains as a
-deprecated shim for one release.
+is wrapped by ``ModelPolicy``; the ``select_matmul`` shim was removed
+after its deprecation release).
 
 The default artifact shipped in ``core/artifacts/`` is trained on the
 analytic-TPU dataset; ``examples/collect_and_train_selector.py`` rebuilds
 it (optionally from measured data).  Artifacts carry a ``schema_version``
-field; unversioned (v0) files from earlier builds are migrated on load.
+field; older files from earlier builds are migrated on load.
 """
 
 from __future__ import annotations
@@ -24,7 +24,6 @@ from __future__ import annotations
 import functools
 import json
 import os
-import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -45,7 +44,6 @@ from .train_model import KWayModel
 __all__ = [
     "MTNNSelector",
     "SelectorStats",
-    "select_matmul",
     "default_selector",
     "set_default_selector",
     "SCHEMA_VERSION",
@@ -57,26 +55,42 @@ DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
 # Artifact schema history:
 #   v0 (unversioned): {mode, binary_pair, hardware, model}
 #   v1: + schema_version; otherwise identical payload layout.
-SCHEMA_VERSION = 1
+#   v2: + tile_configs — per-candidate learned tile config ("BMxBNxBK"
+#       strings, from autotune-cache training); v0/v1 migrate with an
+#       empty table (kernel-default tiling).
+SCHEMA_VERSION = 2
 
 
 @dataclass
 class SelectorStats:
+    """Per-candidate (and per-(candidate, tile-config)) decision counts."""
+
     calls: int = 0
     by_candidate: Dict[str, int] = None
+    by_decision: Dict[str, int] = None  # "NAME" or "NAME@BMxBNxBK"
 
     def __post_init__(self):
         if self.by_candidate is None:
             self.by_candidate = {}
+        if self.by_decision is None:
+            self.by_decision = {}
 
-    def record(self, name: str):
+    def record(self, name: str, config: Optional[Tuple[int, int, int]] = None):
         self.calls += 1
         self.by_candidate[name] = self.by_candidate.get(name, 0) + 1
+        if config is None:
+            label = name
+        else:
+            from repro.kernels.tiling import config_key
+
+            label = f"{name}@{config_key(config)}"
+        self.by_decision[label] = self.by_decision.get(label, 0) + 1
 
     def reset(self) -> None:
         """Zero the counters (between serve requests / benchmark phases)."""
         self.calls = 0
         self.by_candidate = {}
+        self.by_decision = {}
 
 
 class MTNNSelector:
@@ -90,6 +104,7 @@ class MTNNSelector:
         binary_pair: Tuple[str, str] = PAPER_PAIR,
         distributed: bool = False,
         mem_budget_frac: float = 0.9,
+        tile_configs: Optional[Dict[str, str]] = None,
     ):
         self.model = model
         self.hardware = hardware or TPU_V5E
@@ -97,10 +112,41 @@ class MTNNSelector:
         self.binary_pair = binary_pair
         self.distributed = distributed
         self.mem_budget_frac = mem_budget_frac
+        # per-candidate learned tile config ("BMxBNxBK"), e.g. the modal
+        # autotune winner (measure.top_configs_by_candidate); ModelPolicy
+        # attaches it to decisions so a selector trained from measurements
+        # dispatches tuned tiles, not just tuned algorithms
+        self.tile_configs: Dict[str, str] = dict(tile_configs or {})
         self.stats = SelectorStats()
         # keyed by platform too: admissibility depends on jax.default_backend(),
         # so a decision cached under one backend must not replay on another
         self._cache: Dict[Tuple[str, int, int, int, int], str] = {}
+
+    def tile_config_for(
+        self, name: str, dsize: int = 4
+    ) -> Optional[Tuple[int, int, int]]:
+        """The learned tile for a candidate, parsed and feasibility-checked
+        for a dispatch at ``dsize``; None when the artifact carries none
+        (kernel default), the entry is malformed, the candidate is no
+        longer tunable, or the tile — measured at training dtype — would
+        bust the VMEM budget at this element size."""
+        key = self.tile_configs.get(name)
+        if not key:
+            return None
+        from repro.kernels.tiling import fits_vmem, parse_config_key
+
+        try:
+            config = parse_config_key(key)
+        except ValueError:
+            return None
+        if config is None:
+            return None
+        cand = CANDIDATES.get(name)
+        if cand is None or not cand.supports(config=config):
+            return None
+        if not fits_vmem(config, dsize):
+            return None
+        return config
 
     # -- decision ----------------------------------------------------------
     def _fits(self, cand, m: int, n: int, k: int, dsize: int) -> bool:
@@ -132,7 +178,7 @@ class MTNNSelector:
         key = (current_platform(), m, n, k, dsize)
         hit = self._cache.get(key)
         if hit is not None:
-            self.stats.record(hit)
+            self.stats.record(hit, self.tile_config_for(hit, dsize))
             return hit
         x = make_features(self.hardware, m, n, k)[None, :]
         if self.mode == "binary":
@@ -155,7 +201,9 @@ class MTNNSelector:
             if name is None:
                 name = self._fallback_candidate(m, n, k, dsize)
         self._cache[key] = name
-        self.stats.record(name)
+        # record with the learned tile the wrapping ModelPolicy will attach,
+        # so dispatch_report shows `NAME@BMxBNxBK` rows for tiled dispatches
+        self.stats.record(name, self.tile_config_for(name, dsize))
         return name
 
     def reset_stats(self) -> None:
@@ -172,6 +220,7 @@ class MTNNSelector:
             "binary_pair": list(self.binary_pair),
             "hardware": self.hardware.name,
             "model": self.model.to_dict(),
+            "tile_configs": dict(self.tile_configs),
         }
         with open(path, "w") as fh:
             json.dump(payload, fh)
@@ -197,6 +246,7 @@ class MTNNSelector:
             mode=payload.get("mode", "binary"),
             binary_pair=tuple(payload.get("binary_pair", PAPER_PAIR)),
             distributed=distributed,
+            tile_configs=payload.get("tile_configs", {}),
         )
 
 
@@ -205,8 +255,10 @@ def _migrate_payload(payload: Dict) -> Dict:
 
     v0 artifacts predate the ``schema_version`` field; their layout is
     otherwise the v1 layout, so migration stamps the version (and fills the
-    fields v0 writers were allowed to omit).  Unknown *newer* versions are
-    rejected rather than misread.
+    fields v0 writers were allowed to omit).  v1 artifacts predate the
+    tile-config label space; they migrate with an empty ``tile_configs``
+    table (kernel-default tiling — exactly how a v1 build dispatched).
+    Unknown *newer* versions are rejected rather than misread.
     """
     version = payload.get("schema_version", 0)
     if version > SCHEMA_VERSION:
@@ -219,6 +271,10 @@ def _migrate_payload(payload: Dict) -> Dict:
         payload.setdefault("mode", "binary")
         payload.setdefault("binary_pair", list(PAPER_PAIR))
         payload["schema_version"] = 1
+    if payload["schema_version"] < 2:
+        payload = dict(payload)
+        payload.setdefault("tile_configs", {})
+        payload["schema_version"] = 2
     return payload
 
 
@@ -260,34 +316,3 @@ def _builtin_selector() -> MTNNSelector:
 
 def default_selector() -> MTNNSelector:
     return _DEFAULT if _DEFAULT is not None else _builtin_selector()
-
-
-def select_matmul(
-    a,
-    b,
-    selector: Optional[MTNNSelector] = None,
-    force: Optional[str] = None,
-):
-    """DEPRECATED shim over ``engine.dispatch_nt`` — one release of grace.
-
-    ``selector=`` maps onto a scoped ``ModelPolicy``; ``force=`` onto
-    ``FixedPolicy``.  New code should call ``engine.dispatch_nt`` inside a
-    ``use_policy(...)`` scope instead.
-    """
-    from .engine import dispatch_nt
-    from .policy import FixedPolicy, ModelPolicy
-
-    warnings.warn(
-        "select_matmul() is deprecated; use engine.dispatch_nt() under a "
-        "use_policy(...) scope (FixedPolicy replaces force=, ModelPolicy "
-        "replaces selector=)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    if force is not None:
-        policy = FixedPolicy(force)
-    elif selector is not None:
-        policy = ModelPolicy(selector)
-    else:
-        policy = None  # scoped/default policy
-    return dispatch_nt(a, b, policy=policy)

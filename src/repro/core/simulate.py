@@ -41,6 +41,7 @@ __all__ = [
     "blocked_matmul_bytes",
     "mxu_efficiency",
     "simulate_time",
+    "tile_time",
     "SIM_ALGOS",
 ]
 
@@ -142,6 +143,43 @@ def simulate_time(
         return t * _noise(hw.name, algo, m, n, k, sigma)
 
     raise ValueError(f"unknown simulated algorithm: {algo!r}")
+
+
+def tile_time(
+    hw: HardwareSpec,
+    m: int,
+    n: int,
+    k: int,
+    dsize: int,
+    block: Tuple[int, int, int],
+    step_overhead_us: float = 0.1,
+) -> float:
+    """Roofline estimate of one blocked matmul at a specific (bm, bn, bk).
+
+    Deliberately *relative*, not absolute — it ranks tile configs for one
+    fixed (shape, candidate), so only the block-dependent terms matter:
+
+      * compute on the *padded* extents (a 256 tile on a 300-long axis pads
+        to 512 and doubles the MAC work; a 384 tile pads to 384);
+      * HBM traffic from VMEM residency (``blocked_matmul_bytes``: bigger
+        tiles revisit A/B strips fewer times);
+      * a per-grid-step overhead charging tiny tiles for their step count
+        (accumulator flushes, grid bookkeeping, prologue/epilogue DMAs).
+
+    Used by ``AnalyticPolicy`` to attach a tile to its decisions and by
+    ``kernels.tiling.shortlist_tile_configs`` to prune autotune sweeps.
+    """
+    bm, bn, bk = block
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    kp = math.ceil(k / bk) * bk
+    peak = (hw.peak_tflops_bf16 if dsize <= 2 else hw.peak_tflops_f32) * 1e12
+    t_compute = matmul_flops(mp, np_, kp) / (peak * mxu_efficiency(mp, np_, kp))
+    t_memory = blocked_matmul_bytes(mp, np_, kp, dsize, block) / (
+        hw.mem_bw_gbps * 1e9
+    )
+    steps = (mp // bm) * (np_ // bn) * (kp // bk)
+    return max(t_compute, t_memory) + steps * step_overhead_us * 1e-6
 
 
 def fits_memory(hw: HardwareSpec, m: int, n: int, k: int, dsize: int, tnn: bool) -> bool:

@@ -4,7 +4,7 @@
 the jit'd wrappers, ``ref.py`` the pure-jnp oracles.
 """
 
-from . import ops, ref
+from . import ops, ref, tiling
 from .common import DEFAULT_BLOCK, should_interpret
 
-__all__ = ["ops", "ref", "DEFAULT_BLOCK", "should_interpret"]
+__all__ = ["ops", "ref", "tiling", "DEFAULT_BLOCK", "should_interpret"]

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import CompilerParams, DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+from .common import CompilerParams, DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret
 
 __all__ = ["matmul_nt"]
 
@@ -50,8 +50,7 @@ def matmul_nt(
     m, k = a.shape
     n, k2 = b.shape
     assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}^T"
-    bm, bn, bk = block or DEFAULT_BLOCK
-    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
     mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
     ap, bp = pad2(a, mp, kp), pad2(b, np_, kp)
     n_k = cdiv(kp, bk)

@@ -43,6 +43,12 @@ def matmul_tnn(
     Two kernel launches; B^T round-trips through HBM.  Wins when the
     one-off transpose cost amortises over a large m grid (Eq. 3).
     """
-    tb = None if block is None else (block[1], block[2])
+    if block is not None:
+        from .tiling import validate_config
+
+        block = validate_config(block)  # same ValueError contract as the
+        tb = (block[1], block[2])       # single-kernel family members
+    else:
+        tb = None
     bt = transpose(b, block=tb, interpret=interpret)
     return matmul_nn(a, bt, block=block, interpret=interpret)

@@ -1,0 +1,183 @@
+"""Tile-config space for the Pallas matmul family.
+
+The paper selects an *algorithm* per shape; this module widens the space to
+*(algorithm x tile config)*: every tunable kernel exposes a set of
+admissible ``(bm, bn, bk)`` VMEM tiles, enumerated per shape/dtype under an
+explicit VMEM budget, and the dispatch policies (``core/policy.py``) pick
+one per decision.  AutoTVM-style configuration selection, scoped to the
+three knobs our kernels actually have.
+
+Admissibility of a tile:
+
+  * every edge is a positive multiple of the MXU edge (128), so the
+    systolic tiles stay full;
+  * no edge exceeds the padded extent of its axis (a sub-128 dim gets one
+    128-wide tile, never a 512 tile that is 3/4 padding);
+  * the VMEM working set fits the budget: double-buffered A and B operand
+    blocks + the f32 accumulator scratch + the staged output block.
+
+``shortlist_tile_configs`` prunes the full space with the roofline tile
+model (``core.simulate.tile_time``) so an autotune sweep measures a
+handful of promising tiles instead of the whole cross product.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from .common import DEFAULT_BLOCK, MXU_EDGE, pick_block, round_up
+
+__all__ = [
+    "TileConfig",
+    "TILE_EDGES_MN",
+    "TILE_EDGES_K",
+    "DEFAULT_VMEM_BUDGET_BYTES",
+    "DEFAULT_CONFIG_KEY",
+    "config_key",
+    "parse_config_key",
+    "tile_vmem_bytes",
+    "fits_vmem",
+    "validate_config",
+    "default_config",
+    "enumerate_tile_configs",
+    "shortlist_tile_configs",
+]
+
+TileConfig = Tuple[int, int, int]
+
+# Candidate tile edges per axis.  bk may go deeper than the MN edges: a
+# longer contraction strip costs VMEM linearly but halves the number of
+# sequential k steps (accumulator flushes + grid overhead).
+TILE_EDGES_MN: Tuple[int, ...] = (128, 256, 512)
+TILE_EDGES_K: Tuple[int, ...] = (128, 256, 512, 1024)
+
+# ~16 MiB of VMEM per core (TPU architecture guide); the budget covers the
+# double-buffered operand blocks, the f32 accumulator and the output block.
+DEFAULT_VMEM_BUDGET_BYTES: int = 16 * 1024 * 1024
+
+# Cache/report key for "the candidate ran at its built-in tiling" — used
+# for non-tunable candidates (XLA picks its own layout).
+DEFAULT_CONFIG_KEY = "default"
+
+
+def config_key(config: Optional[TileConfig]) -> str:
+    """Stable string form used in measurement-cache entries and reports."""
+    if config is None:
+        return DEFAULT_CONFIG_KEY
+    return "x".join(str(int(b)) for b in config)
+
+
+def parse_config_key(key: str) -> Optional[TileConfig]:
+    """Inverse of ``config_key``; ``'default'`` maps to None."""
+    if key == DEFAULT_CONFIG_KEY:
+        return None
+    try:
+        parts = tuple(int(p) for p in key.split("x"))
+    except ValueError:
+        raise ValueError(f"malformed tile-config key {key!r}") from None
+    if len(parts) != 3 or any(p <= 0 for p in parts):
+        raise ValueError(f"malformed tile-config key {key!r}")
+    return parts
+
+
+def validate_config(config: Sequence[int]) -> TileConfig:
+    """A well-formed (bm, bn, bk) triple of positive ints, or ValueError."""
+    config = tuple(config)
+    if len(config) != 3:
+        raise ValueError(f"tile config {config} must be (bm, bn, bk)")
+    for b in config:
+        if not isinstance(b, int) or isinstance(b, bool) or b <= 0:
+            raise ValueError(f"tile config {config} must be positive ints")
+    return config
+
+
+def tile_vmem_bytes(config: TileConfig, dsize: int) -> int:
+    """VMEM working set of one grid step of the blocked matmul kernels:
+    double-buffered A (bm, bk) and B (bn, bk) operand blocks, the f32
+    accumulator scratch, and the staged output block."""
+    bm, bn, bk = config
+    operands = 2 * (bm * bk + bn * bk) * dsize  # x2: double buffering
+    accumulator = bm * bn * 4  # f32 scratch
+    out_block = bm * bn * dsize
+    return operands + accumulator + out_block
+
+
+def fits_vmem(
+    config: TileConfig, dsize: int, budget: int = DEFAULT_VMEM_BUDGET_BYTES
+) -> bool:
+    return tile_vmem_bytes(config, dsize) <= budget
+
+
+def default_config(m: int, n: int, k: int) -> TileConfig:
+    """``DEFAULT_BLOCK`` clamped to this shape — what a kernel runs when no
+    config is supplied (the pre-autotuning behaviour)."""
+    return (
+        pick_block(m, DEFAULT_BLOCK[0]),
+        pick_block(n, DEFAULT_BLOCK[1]),
+        pick_block(k, DEFAULT_BLOCK[2]),
+    )
+
+
+def _axis_tiles(dim: int, edges: Sequence[int]) -> Tuple[int, ...]:
+    """Distinct admissible tile widths for one axis: each candidate edge,
+    clamped to the axis' padded extent (so sub-128 dims collapse to one
+    128-wide option)."""
+    padded = round_up(max(dim, 1), MXU_EDGE)
+    return tuple(sorted({min(int(e), padded) for e in edges}))
+
+
+def enumerate_tile_configs(
+    m: int,
+    n: int,
+    k: int,
+    dsize: int = 4,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+    edges_mn: Sequence[int] = TILE_EDGES_MN,
+    edges_k: Sequence[int] = TILE_EDGES_K,
+) -> Tuple[TileConfig, ...]:
+    """Every admissible (bm, bn, bk) for this shape/dtype, deterministic
+    order.  The clamped default config is a member whenever it fits the
+    budget (under the standard budget it always does)."""
+    configs = {
+        (bm, bn, bk)
+        for bm in _axis_tiles(m, edges_mn)
+        for bn in _axis_tiles(n, edges_mn)
+        for bk in _axis_tiles(k, edges_k)
+        if fits_vmem((bm, bn, bk), dsize, vmem_budget)
+    }
+    dflt = default_config(m, n, k)
+    if fits_vmem(dflt, dsize, vmem_budget):
+        configs.add(dflt)
+    return tuple(sorted(configs))
+
+
+def shortlist_tile_configs(
+    m: int,
+    n: int,
+    k: int,
+    dsize: int = 4,
+    max_configs: int = 4,
+    hardware=None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> Tuple[TileConfig, ...]:
+    """The autotune sweep list: the full admissible space ranked by the
+    roofline tile model, truncated to ``max_configs`` — always including
+    the clamped default so a sweep can never regress below the status quo.
+    ``max_configs <= 0`` means no truncation."""
+    from repro.core.simulate import tile_time
+
+    if hardware is None:
+        from repro.core.hardware import TPU_V5E
+
+        hardware = TPU_V5E
+    configs = enumerate_tile_configs(m, n, k, dsize, vmem_budget)
+    ranked = sorted(configs, key=lambda c: tile_time(hardware, m, n, k, dsize, c))
+    if 0 < max_configs < len(ranked):
+        keep = ranked[:max_configs]
+        dflt = default_config(m, n, k)
+        # keep the (budget-admissible) default so a sweep can never
+        # regress below the status quo; an over-budget default stays out
+        if dflt not in keep and dflt in configs:
+            keep = keep[:-1] + [dflt]
+        ranked = keep
+    return tuple(ranked)

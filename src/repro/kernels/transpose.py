@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import DEFAULT_BLOCK, cdiv, pad2, pick_block, round_up, should_interpret
+from .common import DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret
 
 __all__ = ["transpose_kernel", "transpose"]
 
@@ -40,8 +40,7 @@ def transpose(
 ) -> jax.Array:
     """B:(n,k) -> B^T:(k,n) via one bandwidth-bound Pallas kernel."""
     n, k = b.shape
-    bn = pick_block(n, block[0] if block else DEFAULT_BLOCK[1])
-    bk = pick_block(k, block[1] if block else DEFAULT_BLOCK[2])
+    bn, bk = normalize_block((n, k), block, (DEFAULT_BLOCK[1], DEFAULT_BLOCK[2]))
     np_, kp = round_up(n, bn), round_up(k, bk)
     bp = pad2(b, np_, kp)
     interp = should_interpret() if interpret is None else interpret

@@ -159,11 +159,10 @@ class TestSelector:
         assert self.sel.stats.calls == n0 + 1  # cached, still counted
 
     def test_dispatch_correctness(self):
-        import jax
-
         a = jnp.asarray(np.random.RandomState(0).randn(33, 20), jnp.float32)
         b = jnp.asarray(np.random.RandomState(1).randn(17, 20), jnp.float32)
-        out = core.select_matmul(a, b, selector=self.sel)
+        with core.use_policy(core.ModelPolicy(self.sel)):
+            out = core.dispatch_nt(a, b)
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(a) @ np.asarray(b).T, rtol=1e-5, atol=1e-5
         )
@@ -171,13 +170,15 @@ class TestSelector:
     def test_dispatch_leading_dims(self):
         a = jnp.ones((2, 3, 8), jnp.float32)
         b = jnp.ones((5, 8), jnp.float32)
-        out = core.select_matmul(a, b, selector=self.sel)
+        with core.use_policy(core.ModelPolicy(self.sel)):
+            out = core.dispatch_nt(a, b)
         assert out.shape == (2, 3, 5)
 
     def test_force_override(self):
         a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
         for name in core.CANDIDATES:
-            out = core.select_matmul(a, b, selector=self.sel, force=name)
+            with core.use_policy(core.FixedPolicy(name)):
+                out = core.dispatch_nt(a, b)
             np.testing.assert_allclose(np.asarray(out), 8.0)
 
     def test_selector_persistence(self, tmp_path):

@@ -86,6 +86,123 @@ def test_block_override(rng):
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
 
+# -- ragged/adversarial shapes x non-default tiles ---------------------------
+#
+# The tile-autotuning selection space must be bit-correct everywhere: every
+# admissible config computes the same function, or a "fast" tile is a wrong
+# tile.  Dims cross {1, 127, 129, 1000}: degenerate, one-under-tile,
+# one-over-tile, and ragged multi-tile.
+
+ADVERSARIAL_DIMS = (1, 127, 129, 1000)
+ADVERSARIAL_SHAPES = [
+    (m, n, k)
+    for m in ADVERSARIAL_DIMS
+    for n in ADVERSARIAL_DIMS
+    for k in ADVERSARIAL_DIMS
+]
+NONDEFAULT_TILE = (256, 128, 256)
+MATMUL_FNS = ("matmul_nn", "matmul_nt", "matmul_tnn", "matmul_tnn_fused")
+
+
+@pytest.mark.parametrize("fn_name", MATMUL_FNS)
+@pytest.mark.parametrize("shape", ADVERSARIAL_SHAPES, ids=str)
+def test_adversarial_shapes_nondefault_tile(rng, fn_name, shape):
+    m, n, k = shape
+    if fn_name == "matmul_nn":
+        a, b = _mk(rng, (m, k), jnp.float32), _mk(rng, (k, n), jnp.float32)
+        want = np.asarray(ref.matmul_nn(a, b), np.float32)
+    else:
+        a, b = _mk(rng, (m, k), jnp.float32), _mk(rng, (n, k), jnp.float32)
+        want = np.asarray(ref.matmul_nt(a, b), np.float32)
+    got = np.asarray(
+        getattr(ops, fn_name)(a, b, block=NONDEFAULT_TILE), np.float32
+    )
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32, k))
+
+
+@pytest.mark.parametrize(
+    "block", [(128, 128, 128), (128, 256, 512), (512, 512, 1024)], ids=str
+)
+@pytest.mark.parametrize(
+    "shape", [(1, 1000, 127), (129, 1, 1000), (127, 129, 1000)], ids=str
+)
+def test_nasty_shapes_cross_tiles(rng, shape, block):
+    """A smaller shape set crossed with several tiles, all four kernels."""
+    m, n, k = shape
+    a, b = _mk(rng, (m, k), jnp.float32), _mk(rng, (n, k), jnp.float32)
+    want = np.asarray(ref.matmul_nt(a, b), np.float32)
+    for fn_name in ("matmul_nt", "matmul_tnn", "matmul_tnn_fused"):
+        got = np.asarray(getattr(ops, fn_name)(a, b, block=block), np.float32)
+        np.testing.assert_allclose(
+            got, want, err_msg=fn_name, **_tol(jnp.float32, k)
+        )
+    got_t = np.asarray(ops.transpose(b, block=(block[1], block[2])), np.float32)
+    np.testing.assert_allclose(got_t, np.asarray(ref.transpose(b)), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("dims", [(1, 1000), (127, 129), (1000, 1)], ids=str)
+def test_transpose_adversarial_nondefault_tile(rng, dims):
+    n, k = dims
+    b = _mk(rng, (n, k), jnp.float32)
+    got = np.asarray(ops.transpose(b, block=(256, 128)))
+    np.testing.assert_allclose(got, np.asarray(ref.transpose(b)), rtol=0, atol=0)
+
+
+# -- pick_block / normalize_block regressions --------------------------------
+
+
+class TestPickBlock:
+    def test_sub_128_dim_never_exceeds_padded_extent(self):
+        """Regression: a length-1 axis pads to 128, so its tile must be
+        exactly 128 — not the 512 default (3/4 padding in VMEM)."""
+        from repro.kernels.common import pick_block
+
+        assert pick_block(1, 512) == 128
+        for dim in (1, 2, 64, 127):
+            assert pick_block(dim, 512) == 128
+
+    def test_result_is_aligned_and_bounded(self):
+        from repro.kernels.common import MXU_EDGE, pick_block, round_up
+
+        for dim in (1, 127, 128, 129, 300, 1000, 4096):
+            for default in (64, 100, 128, 200, 512, 1024):
+                blk = pick_block(dim, default)
+                assert blk % MXU_EDGE == 0, (dim, default, blk)
+                assert blk <= round_up(dim, MXU_EDGE), (dim, default, blk)
+                assert blk >= MXU_EDGE
+
+    def test_unaligned_default_is_rounded_up(self):
+        """Regression: pick_block(1000, 100) used to return an unaligned
+        100-wide tile; caller-supplied defaults are now MXU-aligned."""
+        from repro.kernels.common import pick_block
+
+        assert pick_block(1000, 100) == 128
+
+    def test_normalize_block_validates(self):
+        from repro.kernels.common import DEFAULT_BLOCK, normalize_block
+
+        assert normalize_block((1, 1000, 1000), None, DEFAULT_BLOCK) == (
+            128, 512, 512,
+        )
+        with pytest.raises(ValueError, match="3 axes"):
+            normalize_block((8, 8, 8), (128, 128), DEFAULT_BLOCK)
+        with pytest.raises(ValueError, match="positive ints"):
+            normalize_block((8, 8, 8), (128, -1, 128), DEFAULT_BLOCK)
+        with pytest.raises(ValueError, match="positive ints"):
+            normalize_block((8, 8, 8), (128, 128.0, 128), DEFAULT_BLOCK)
+
+    def test_kernels_reject_malformed_blocks(self, rng):
+        a = _mk(rng, (8, 8), jnp.float32)
+        b = _mk(rng, (8, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            ops.matmul_nt(a, b, block=(128, 128))
+        with pytest.raises(ValueError):
+            # regression: used to IndexError before reaching validation
+            ops.matmul_tnn(a, b, block=(128, 128))
+        with pytest.raises(ValueError):
+            ops.transpose(b, block=(128, 0))
+
+
 def test_gradients_flow_through_candidates(rng):
     """Selected candidates are differentiable (backward of a Dense layer)."""
     from repro.core.candidates import xla_nt, xla_tnn

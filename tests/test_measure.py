@@ -1,5 +1,6 @@
 """The on-device measurement subsystem: cache persistence + schema
-versioning, the timing harness' admissibility guards, AutotunePolicy
+versioning (v1 -> v2 migration), the timing harness' per-(candidate, tile
+config) sweep and admissibility guards, AutotunePolicy two-level
 cold-miss/warm-hit semantics with analytic fallback, the autotune policy
 spec, and retraining the paper's GBDT from autotune-collected records."""
 
@@ -16,9 +17,11 @@ from repro.core.hardware import HardwareSpec, host_spec
 from repro.core.measure import (
     MEASURE_SCHEMA_VERSION,
     MeasurementCache,
+    best_times,
     default_cache_path,
     measure_candidates,
     measurement_supported,
+    top_configs_by_candidate,
 )
 
 TINY_HW = HardwareSpec(
@@ -41,11 +44,54 @@ class TestMeasurementCache:
         p = str(tmp_path / "cache.json")
         cache = MeasurementCache(p)
         key = ("cpu", "host_cpu", "float32", 128, 256, 512)
-        cache.put(key, {"XLA_NT": 1.5e-4, "XLA_TNN": 2.5e-4})
+        cache.put(
+            key,
+            {
+                "XLA_NT": {"default": 1.5e-4},
+                "PALLAS_NT": {"128x128x128": 2.5e-4, "256x256x256": 2.0e-4},
+            },
+        )
         cache.save()
         cache2 = MeasurementCache.load(p)
         assert len(cache2) == 1 and key in cache2
-        assert cache2.get(key) == {"XLA_NT": 1.5e-4, "XLA_TNN": 2.5e-4}
+        assert cache2.get(key) == {
+            "XLA_NT": {"default": 1.5e-4},
+            "PALLAS_NT": {"128x128x128": 2.5e-4, "256x256x256": 2.0e-4},
+        }
+
+    def test_flat_put_normalises_under_default_config(self):
+        """v1-style flat {name: seconds} dicts keep working (hand-built
+        caches, old call sites): they land under the 'default' config."""
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 8, 8, 8)
+        cache.put(key, {"XLA_NT": 1e-5})
+        assert cache.get(key) == {"XLA_NT": {"default": 1e-5}}
+
+    def test_v1_file_migrates_on_load(self, tmp_path):
+        """A v1 cache (flat per-candidate timings) must keep answering warm
+        hits after the schema bump — no silent misread, no data loss."""
+        p = str(tmp_path / "v1.json")
+        with open(p, "w") as fh:
+            json.dump(
+                {
+                    "schema_version": 1,
+                    "entries": {
+                        "cpu|host_cpu|float32|64|64|64": {
+                            "XLA_NT": 2.0e-5, "XLA_TNN": 1.0e-5,
+                        }
+                    },
+                },
+                fh,
+            )
+        cache = MeasurementCache.load(p)
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        assert cache.get(key) == {
+            "XLA_NT": {"default": 2.0e-5},
+            "XLA_TNN": {"default": 1.0e-5},
+        }
+        # and the migrated cache drives selection
+        pol = core.AutotunePolicy(cache=cache, measure=False)
+        assert pol.select(64, 64, 64) == core.Decision("XLA_TNN", None)
 
     def test_missing_file_starts_empty(self, tmp_path):
         cache = MeasurementCache.load(str(tmp_path / "absent.json"))
@@ -83,7 +129,7 @@ class TestMeasurementCache:
         key = ("cpu", "gpu|a100-sxm", "float32", 8, 8, 8)
         cache.put(key, {"XLA_NT": 1e-5})
         cache.save()
-        assert MeasurementCache.load(p).get(key) == {"XLA_NT": 1e-5}
+        assert MeasurementCache.load(p).get(key) == {"XLA_NT": {"default": 1e-5}}
 
     def test_save_merges_concurrent_writers(self, tmp_path):
         """Two processes sharing one cache file must not clobber each
@@ -108,8 +154,61 @@ class TestMeasureHarness:
     def test_measures_admissible_candidates(self):
         times = measure_candidates(32, 24, 16, reps=1)
         assert "XLA_NT" in times and "XLA_TNN" in times
-        assert all(t > 0.0 for t in times.values())
+        assert all(
+            t > 0.0 for cfgs in times.values() for t in cfgs.values()
+        )
         assert set(times) <= set(core.CANDIDATES)
+        # non-tunable candidates are timed once, under the default key
+        assert set(times["XLA_NT"]) == {"default"}
+
+    def test_tunable_candidates_swept_over_configs(self):
+        """A shape with real tile choice: every tunable candidate gets
+        several explicit config timings, each key parseable."""
+        from repro.kernels.tiling import parse_config_key
+
+        times = measure_candidates(256, 256, 256, reps=1, max_tile_configs=3)
+        assert "PALLAS_NT" in times
+        cfgs = times["PALLAS_NT"]
+        assert len(cfgs) > 1
+        for ck in cfgs:
+            cfg = parse_config_key(ck)
+            assert cfg is not None and len(cfg) == 3
+
+    def test_tune_false_restricts_to_default_tiling(self):
+        times = measure_candidates(256, 256, 256, reps=1, tune=False)
+        assert set(times["PALLAS_NT"]) == {"default"}
+
+    def test_best_times_folds_top_config(self):
+        nested = {
+            "PALLAS_NT": {"128x128x128": 3.0, "256x256x256": 1.0},
+            "XLA_NT": {"default": 2.0},
+        }
+        assert best_times(nested) == {
+            "PALLAS_NT": ("256x256x256", 1.0),
+            "XLA_NT": ("default", 2.0),
+        }
+
+    def test_top_configs_by_candidate_is_modal(self):
+        cache = MeasurementCache()
+        for i, winner in enumerate(["256x256x256", "256x256x256", "128x128x128"]):
+            cache.put(
+                ("cpu", "host_cpu", "float32", 8 * (i + 1), 8, 8),
+                {"PALLAS_NT": {winner: 1.0, "512x512x512": 2.0}},
+            )
+        assert top_configs_by_candidate(cache) == {"PALLAS_NT": "256x256x256"}
+
+    def test_top_configs_skip_default_pseudo_tiles(self):
+        """Non-tunable candidates always 'win' at 'default'; that is not a
+        learned tile and must not pollute v2 artifacts."""
+        cache = MeasurementCache()
+        cache.put(
+            ("cpu", "host_cpu", "float32", 8, 8, 8),
+            {
+                "XLA_NT": {"default": 1.0},
+                "PALLAS_NT": {"128x128x128": 2.0},
+            },
+        )
+        assert top_configs_by_candidate(cache) == {"PALLAS_NT": "128x128x128"}
 
     def test_oom_guard_skips_extra_memory_candidates(self):
         times = measure_candidates(32, 24, 16, hardware=TINY_HW, reps=1)
@@ -132,14 +231,14 @@ class TestAutotunePolicy:
     def test_cold_miss_measures_then_warm_hits(self, tmp_path):
         p = str(tmp_path / "cache.json")
         pol = core.AutotunePolicy(cache_path=p, reps=1)
-        name = pol.select(64, 48, 32)
-        assert name in core.CANDIDATES
+        decision = pol.select(64, 48, 32)
+        assert decision.name in core.CANDIDATES
         assert (pol.n_measured, pol.n_cache_hits) == (1, 0)
-        assert pol.select(64, 48, 32) == name
+        assert pol.select(64, 48, 32) == decision
         assert (pol.n_measured, pol.n_cache_hits) == (1, 1)
         # a fresh policy over the same file performs zero new measurements
         pol2 = core.AutotunePolicy(cache_path=p)
-        assert pol2.select(64, 48, 32) == name
+        assert pol2.select(64, 48, 32) == decision
         assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
 
     def test_select_is_cached_argmin_of_admissible(self):
@@ -148,8 +247,52 @@ class TestAutotunePolicy:
         cache.put(key, {"XLA_NT": 2.0, "XLA_TNN": 1.0, "NOT_REGISTERED": 0.1})
         pol = core.AutotunePolicy(cache=cache)
         # stale/unregistered names never dispatch; fastest admissible wins
-        assert pol.select(64, 64, 64) == "XLA_TNN"
+        assert pol.select(64, 64, 64) == core.Decision("XLA_TNN", None)
         assert pol.n_cache_hits == 1 and pol.n_measured == 0
+
+    def test_select_is_two_level_argmin_over_configs(self):
+        """The decision space is (candidate x tile config): the winning
+        pair wins even when another *candidate* has a better default."""
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(
+            key,
+            {
+                "XLA_NT": {"default": 2.0},
+                "PALLAS_NT": {"128x128x128": 3.0, "256x256x512": 1.0},
+            },
+        )
+        pol = core.AutotunePolicy(cache=cache)
+        assert pol.select(64, 64, 64) == core.Decision(
+            "PALLAS_NT", (256, 256, 512)
+        )
+
+    def test_vmem_infeasible_cached_config_refiltered(self):
+        """A cached config that busts the VMEM budget (foreign cache,
+        changed budget) must never dispatch — config-aware admissibility."""
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(
+            key,
+            {
+                "PALLAS_NT": {"8192x8192x8192": 0.1, "128x128x128": 1.0},
+                "XLA_NT": {"default": 2.0},
+            },
+        )
+        pol = core.AutotunePolicy(cache=cache)
+        assert pol.select(64, 64, 64) == core.Decision(
+            "PALLAS_NT", (128, 128, 128)
+        )
+
+    def test_malformed_config_key_never_dispatches(self):
+        cache = MeasurementCache()
+        key = ("cpu", "host_cpu", "float32", 64, 64, 64)
+        cache.put(
+            key,
+            {"PALLAS_NT": {"garbage": 0.1}, "XLA_NT": {"default": 2.0}},
+        )
+        pol = core.AutotunePolicy(cache=cache)
+        assert pol.select(64, 64, 64) == core.Decision("XLA_NT", None)
 
     def test_distributed_refilters_cached_entries(self):
         cache = MeasurementCache()
@@ -157,7 +300,7 @@ class TestAutotunePolicy:
         cache.put(key, {"PALLAS_NT": 1e-6, "XLA_NT": 2e-6})
         pol = core.AutotunePolicy(cache=cache, distributed=True)
         # fastest cached candidate is pjit-unsafe -> next admissible wins
-        assert pol.select(64, 64, 64) == "XLA_NT"
+        assert pol.select(64, 64, 64).name == "XLA_NT"
 
     def test_candidate_restriction_respected_on_warm_hit_and_fallback(self):
         cache = MeasurementCache()
@@ -165,10 +308,10 @@ class TestAutotunePolicy:
         cache.put(key, {"XLA_TNN": 1e-6, "XLA_NT": 2e-6})
         # warm hit: the fastest cached name is outside the restriction
         pol = core.AutotunePolicy(cache=cache, candidates=("XLA_NT",))
-        assert pol.select(64, 64, 64) == "XLA_NT"
+        assert pol.select(64, 64, 64).name == "XLA_NT"
         # fallback path: the analytic fallback is restricted the same way
         pol2 = core.AutotunePolicy(measure=False, candidates=("XLA_TNN",))
-        assert pol2.select(256, 256, 256) == "XLA_TNN"
+        assert pol2.select(256, 256, 256).name == "XLA_TNN"
 
     def test_cache_object_with_path_persists(self, tmp_path):
         p = str(tmp_path / "cache.json")
@@ -182,6 +325,17 @@ class TestAutotunePolicy:
         ana = core.AnalyticPolicy(hardware=pol.hardware)
         assert pol.select(256, 256, 256) == ana.select(256, 256, 256)
         assert pol.n_fallbacks == 1 and len(pol.cache) == 0
+
+    def test_analytic_fallback_is_not_blind_to_tiling(self):
+        """The fallback attaches a roofline-ranked tile for tunable
+        candidates instead of always running the default block."""
+        pol = core.AutotunePolicy(measure=False, candidates=("PALLAS_NT",))
+        decision = pol.select(129, 1000, 1000)
+        assert decision.name == "PALLAS_NT"
+        assert decision.config is not None
+        from repro.kernels.tiling import enumerate_tile_configs
+
+        assert decision.config in enumerate_tile_configs(129, 1000, 1000, 4)
 
     def test_distributed_disables_measurement(self):
         pol = core.AutotunePolicy(distributed=True)
@@ -223,7 +377,7 @@ class TestAutotunePolicy:
             "repro.core.measure.measure_candidates", empty_measurement
         )
         pol = core.AutotunePolicy()
-        assert pol.select(8, 8, 8) in core.CANDIDATES  # analytic fallback
+        assert pol.select(8, 8, 8).name in core.CANDIDATES  # analytic fallback
         pol.select(8, 8, 8)
         assert len(calls) == 1, "empty measurement must not be retried"
         assert pol.n_fallbacks == 2 and len(pol.cache) == 0
@@ -355,7 +509,8 @@ class TestDatasetFromMeasurements:
 
     def test_trains_paper_model_end_to_end(self, tmp_path):
         """The acceptance loop: autotune-measure shapes, convert, train,
-        save a versioned selector artifact, reload, select."""
+        save a versioned selector artifact (with the learned tiles),
+        reload, select."""
         p = str(tmp_path / "cache.json")
         pol = core.AutotunePolicy(cache_path=p, reps=1)
         for m in (16, 32):
@@ -363,10 +518,17 @@ class TestDatasetFromMeasurements:
                 for k in (16, 32):
                     pol.select(m, n, k)
         assert pol.n_measured == 8
-        ds = core.dataset_from_measurements(MeasurementCache.load(p))
+        cache = MeasurementCache.load(p)
+        ds = core.dataset_from_measurements(cache)
         assert len(ds) == 8
         clf, report = core.train_paper_model(ds)
         art = str(tmp_path / "selector.json")
-        core.MTNNSelector(clf).save(art)
+        tiles = core.top_configs_by_candidate(cache, dtype="float32")
+        core.MTNNSelector(clf, tile_configs=tiles).save(art)
         sel = core.MTNNSelector.load(art)
         assert sel.select(32, 32, 32) in core.CANDIDATES
+        assert sel.tile_configs == tiles
+        # ModelPolicy attaches the learned tile to its decisions
+        mp = core.ModelPolicy(sel)
+        decision = mp.select(32, 32, 32)
+        assert decision.config == sel.tile_config_for(decision.name)

@@ -1,6 +1,7 @@
-"""The policy-scoped dispatch engine: policy zoo semantics, contextvar
-scoping (nesting / thread isolation), the candidate registry, artifact
-schema migration, and the deprecated select_matmul shim."""
+"""The policy-scoped dispatch engine: policy zoo semantics (every policy
+returns a (candidate, tile-config) Decision), contextvar scoping
+(nesting / thread isolation), the candidate registry, and artifact schema
+migration."""
 
 import json
 import threading
@@ -89,13 +90,28 @@ class TestPolicies:
     def test_model_policy_matches_selector(self, trained_selector):
         pol = core.ModelPolicy(trained_selector)
         for mnk in [(128, 128, 128), (4096, 4096, 4096), (512, 65536, 256)]:
-            assert pol.select(*mnk) == trained_selector.select(*mnk)
+            assert pol.select(*mnk).name == trained_selector.select(*mnk)
+
+    def test_every_policy_returns_a_decision(self, trained_selector):
+        zoo = [
+            core.FixedPolicy("XLA_NT"),
+            core.ModelPolicy(trained_selector),
+            core.AnalyticPolicy(),
+            core.CascadePolicy(["XLA_NT"]),
+            core.AutotunePolicy(measure=False),
+        ]
+        for pol in zoo:
+            decision = pol.select(256, 256, 256)
+            assert isinstance(decision, core.Decision)
+            name, config = decision  # unpacks as (candidate, config)
+            assert name in core.CANDIDATES
+            assert config is None or len(config) == 3
 
     def test_analytic_policy_selects_argmin_arm(self):
         from repro.core.simulate import simulate_time
 
         pol = core.AnalyticPolicy(hardware=TPU_V5E)
-        name = pol.select(1024, 1024, 1024)
+        name = pol.select(1024, 1024, 1024).name
         cand = core.get_candidate(name)
         t_chosen = simulate_time(TPU_V5E, cand.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
         for other in pol.candidates:
@@ -106,31 +122,46 @@ class TestPolicies:
     def test_analytic_policy_oom_guard(self):
         pol = core.AnalyticPolicy(hardware=TPU_V5E)
         huge = 2**22
-        assert not core.get_candidate(pol.select(huge, huge, 4096)).extra_memory
+        assert not core.get_candidate(
+            pol.select(huge, huge, 4096).name
+        ).extra_memory
+
+    def test_analytic_policy_attaches_roofline_ranked_tile(self):
+        from repro.core.simulate import tile_time
+        from repro.kernels.tiling import enumerate_tile_configs
+
+        pol = core.AnalyticPolicy(hardware=TPU_V5E, candidates=("PALLAS_NT",))
+        decision = pol.select(129, 1000, 1000)
+        assert decision.name == "PALLAS_NT" and decision.config is not None
+        configs = enumerate_tile_configs(129, 1000, 1000, 4)
+        assert decision.config in configs
+        t_chosen = tile_time(TPU_V5E, 129, 1000, 1000, 4, decision.config)
+        for cfg in configs:
+            assert t_chosen <= tile_time(TPU_V5E, 129, 1000, 1000, 4, cfg) + 1e-12
 
     def test_cascade_order_and_fallback(self):
         pol = core.CascadePolicy(["PALLAS_TNN_FUSED", "XLA_TNN", "XLA_NT"])
         # all admissible at small sizes: first preference wins
-        assert pol.select(128, 128, 128) == "PALLAS_TNN_FUSED"
+        assert pol.select(128, 128, 128).name == "PALLAS_TNN_FUSED"
 
     def test_cascade_oom_skips_extra_memory_candidates(self):
         pol = core.CascadePolicy(["XLA_TNN", "XLA_NT"], hardware=TPU_V5E)
         huge = 2**22
         # XLA_TNN needs room for B^T -> OOM guard skips it, NT wins
-        assert pol.select(huge, huge, 4096, dsize=4) == "XLA_NT"
+        assert pol.select(huge, huge, 4096, dsize=4).name == "XLA_NT"
 
     def test_cascade_distributed_filter(self):
         pol = core.CascadePolicy(
             ["PALLAS_TNN_FUSED", "PALLAS_NT", "XLA_NT"], distributed=True
         )
         # Pallas candidates are not distributed_safe -> fall through to XLA
-        assert pol.select(256, 256, 256) == "XLA_NT"
+        assert pol.select(256, 256, 256).name == "XLA_NT"
 
     def test_cascade_last_entry_is_unconditional_fallback(self):
         huge = 2**22
         pol = core.CascadePolicy(["XLA_TNN"], hardware=TPU_V5E)
         # even though the lone entry fails its own OOM guard, it is returned
-        assert pol.select(huge, huge, 4096, dsize=4) == "XLA_TNN"
+        assert pol.select(huge, huge, 4096, dsize=4).name == "XLA_TNN"
 
     def test_cascade_empty_rejected(self):
         with pytest.raises(ValueError):
@@ -147,6 +178,15 @@ class TestPolicies:
 
     def test_policy_from_spec(self):
         assert core.policy_from_spec("fixed:XLA_TNN").name == "XLA_TNN"
+        tiled = core.policy_from_spec("fixed:PALLAS_NT@256x256x512")
+        assert (tiled.name, tiled.config) == ("PALLAS_NT", (256, 256, 512))
+        assert tiled.select(64, 64, 64) == core.Decision(
+            "PALLAS_NT", (256, 256, 512)
+        )
+        with pytest.raises(ValueError, match="malformed tile-config"):
+            core.policy_from_spec("fixed:PALLAS_NT@bogus")
+        with pytest.raises(ValueError, match="not tunable"):
+            core.policy_from_spec("fixed:XLA_NT@128x128x128")
         assert isinstance(core.policy_from_spec("analytic"), core.AnalyticPolicy)
         assert core.policy_from_spec("cascade:XLA_TNN,XLA_NT").names == (
             "XLA_TNN",
@@ -182,9 +222,11 @@ class TestPolicies:
         pol = core.policy_from_spec(
             "cascade:PALLAS_TNN_FUSED,XLA_NT", distributed=True
         )
-        assert pol.select(256, 256, 256) == "XLA_NT"
+        assert pol.select(256, 256, 256).name == "XLA_NT"
         ana = core.policy_from_spec("analytic", distributed=True)
-        assert core.get_candidate(ana.select(1024, 1024, 1024)).distributed_safe
+        assert core.get_candidate(
+            ana.select(1024, 1024, 1024).name
+        ).distributed_safe
 
 
 # -- selector admissibility ---------------------------------------------------
@@ -269,9 +311,9 @@ class TestPlatformCacheInvalidation:
 
     def test_analytic_cache_keyed_by_platform(self, monkeypatch):
         pol = core.AnalyticPolicy(candidates=("PALLAS_NT",))
-        assert pol.select(32, 32, 32) == "PALLAS_NT"
+        assert pol.select(32, 32, 32).name == "PALLAS_NT"
         self._fake_platform(monkeypatch, "gpu")
-        name = pol.select(32, 32, 32)
+        name = pol.select(32, 32, 32).name
         assert core.get_candidate(name).supports(platform="gpu")
 
 
@@ -420,9 +462,82 @@ class TestArtifacts:
         p = str(tmp_path / "sel.json")
         trained_selector.save(p)
         pol = core.ModelPolicy.from_artifact(p)
-        assert pol.select(2048, 2048, 2048) == trained_selector.select(
+        assert pol.select(2048, 2048, 2048).name == trained_selector.select(
             2048, 2048, 2048
         )
+
+    def test_v2_artifact_roundtrips_tile_configs(self, trained_selector, tmp_path):
+        p = str(tmp_path / "tiled.json")
+        sel = core.MTNNSelector(
+            trained_selector.model,
+            tile_configs={"PALLAS_NT": "256x256x512"},
+        )
+        sel.save(p)
+        with open(p) as fh:
+            payload = json.load(fh)
+        assert payload["schema_version"] == core.SCHEMA_VERSION
+        assert payload["tile_configs"] == {"PALLAS_NT": "256x256x512"}
+        sel2 = core.MTNNSelector.load(p)
+        assert sel2.tile_config_for("PALLAS_NT") == (256, 256, 512)
+        assert sel2.tile_config_for("XLA_NT") is None
+
+    def test_model_policy_drops_learned_tile_that_busts_vmem(
+        self, trained_selector
+    ):
+        """The artifact's tile was measured at one dtype; at a wider dsize
+        the same tile can exceed the VMEM budget — it must degrade to the
+        kernel default, not dispatch an infeasible tiling."""
+        from repro.kernels.tiling import fits_vmem
+
+        sel = core.MTNNSelector(
+            trained_selector.model,
+            binary_pair=("PALLAS_NT", "PALLAS_TNN"),
+            tile_configs={
+                "PALLAS_NT": "512x512x1024",
+                "PALLAS_TNN": "512x512x1024",
+            },
+        )
+        pol = core.ModelPolicy(sel)
+        assert fits_vmem((512, 512, 1024), 4)
+        assert not fits_vmem((512, 512, 1024), 8)
+        assert pol.select(256, 256, 256, dsize=4).config == (512, 512, 1024)
+        assert pol.select(256, 256, 256, dsize=8).config is None
+
+    def test_model_policy_stats_show_learned_tile(self, trained_selector):
+        """Regression: the selector recorded bare names, so dispatch_report
+        for the production-default policy never showed tiled rows."""
+        sel = core.MTNNSelector(
+            trained_selector.model,
+            binary_pair=("PALLAS_NT", "PALLAS_TNN"),
+            tile_configs={"PALLAS_NT": "256x256x512",
+                          "PALLAS_TNN": "256x256x512"},
+        )
+        pol = core.ModelPolicy(sel)
+        decision = pol.select(256, 256, 256)
+        assert decision.config == (256, 256, 512)
+        assert sel.stats.by_decision == {decision.label(): 1}
+        assert "@256x256x512" in core.dispatch_report(pol)
+
+    def test_v1_artifact_migrates_with_empty_tile_table(
+        self, trained_selector, tmp_path
+    ):
+        """A v1 artifact (pre tile-config label space) must load and
+        dispatch with kernel-default tiling — not be misread or rejected."""
+        p = str(tmp_path / "v1.json")
+        v1 = {
+            "schema_version": 1,
+            "mode": "binary",
+            "binary_pair": list(trained_selector.binary_pair),
+            "hardware": trained_selector.hardware.name,
+            "model": trained_selector.model.to_dict(),
+        }
+        with open(p, "w") as fh:
+            json.dump(v1, fh)
+        sel2 = core.MTNNSelector.load(p)
+        assert sel2.tile_configs == {}
+        decision = core.ModelPolicy(sel2).select(1024, 1024, 1024)
+        assert decision.config is None
+        assert decision.name == trained_selector.select(1024, 1024, 1024)
 
 
 # -- stats & report -----------------------------------------------------------
@@ -450,27 +565,75 @@ class TestObservability:
         assert "no dispatches" in report
 
 
-# -- deprecated shim ----------------------------------------------------------
+# -- (candidate, config) dispatch ---------------------------------------------
 
 
-class TestDeprecatedShim:
-    def test_select_matmul_warns(self, trained_selector):
+class TestDecisionDispatch:
+    def test_select_matmul_shim_is_gone(self):
+        """The deprecated selector=/force= shim was removed after its one
+        release of grace (ROADMAP): use_policy + dispatch_nt is the API."""
+        assert not hasattr(core, "select_matmul")
+
+    def test_fixed_policy_with_config_dispatches_that_tile(self):
         a = jnp.ones((4, 8), jnp.float32)
         b = jnp.ones((3, 8), jnp.float32)
-        with pytest.warns(DeprecationWarning, match="select_matmul"):
-            out = core.select_matmul(a, b, selector=trained_selector)
+        pol = core.FixedPolicy("PALLAS_NT", config=(128, 128, 128))
+        with core.use_policy(pol):
+            out = core.dispatch_nt(a, b)
         np.testing.assert_allclose(np.asarray(out), 8.0)
+        assert pol.stats.by_decision == {"PALLAS_NT@128x128x128": 1}
+        assert pol.stats.by_candidate == {"PALLAS_NT": 1}
 
-    def test_select_matmul_force_maps_to_fixed_policy(self):
+    def test_fixed_policy_rejects_config_on_non_tunable(self):
+        with pytest.raises(ValueError, match="not tunable"):
+            core.FixedPolicy("XLA_NT", config=(128, 128, 128))
+
+    def test_fixed_policy_rejects_malformed_config(self):
+        with pytest.raises(ValueError):
+            core.FixedPolicy("PALLAS_NT", config=(128, 128))
+
+    def test_legacy_string_policy_still_dispatches(self):
+        """Third-party policies returning a bare candidate name are
+        normalised by the engine (one release of tolerance)."""
+
+        class LegacyPolicy:
+            stats = core.SelectorStats()
+
+            def select(self, m, n, k, dsize=4):
+                return "XLA_NT"
+
         a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
-        with pytest.warns(DeprecationWarning):
-            out = core.select_matmul(a, b, force="XLA_TNN")
+        out = core.dispatch_nt(a, b, policy=LegacyPolicy())
         np.testing.assert_allclose(np.asarray(out), 8.0)
 
-    def test_select_matmul_records_on_legacy_selector(self, trained_selector):
-        a = jnp.ones((4, 8), jnp.float32)
-        b = jnp.ones((3, 8), jnp.float32)
-        n0 = trained_selector.stats.calls
-        with pytest.warns(DeprecationWarning):
-            core.select_matmul(a, b, selector=trained_selector)
-        assert trained_selector.stats.calls == n0 + 1
+    def test_dispatch_report_shows_tile_configs(self):
+        pol = core.FixedPolicy("PALLAS_NT", config=(256, 256, 256))
+        a, b = jnp.ones((4, 8), jnp.float32), jnp.ones((3, 8), jnp.float32)
+        with core.use_policy(pol):
+            core.dispatch_nt(a, b)
+        report = core.dispatch_report(pol)
+        assert "PALLAS_NT@256x256x256" in report and "100.0%" in report
+
+    def test_autotuned_dispatch_correct_at_nondefault_tile(self, tmp_path):
+        """End to end: a cache that makes a non-default tile win must both
+        dispatch that tile and compute the right answer."""
+        from repro.core.measure import MeasurementCache
+
+        cache = MeasurementCache()
+        cache.put(
+            ("cpu", "host_cpu", "float32", 33, 17, 20),
+            {
+                "XLA_NT": {"default": 5.0},
+                "PALLAS_NT": {"128x128x128": 1.0},
+            },
+        )
+        pol = core.AutotunePolicy(cache=cache, hardware=None)
+        rng = np.random.RandomState(0)
+        a = jnp.asarray(rng.randn(33, 20), jnp.float32)
+        b = jnp.asarray(rng.randn(17, 20), jnp.float32)
+        with core.use_policy(pol):
+            out = core.dispatch_nt(a, b)
+        assert pol.stats.by_decision == {"PALLAS_NT@128x128x128": 1}
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(a) @ np.asarray(b).T, rtol=1e-5, atol=1e-5
+        )

@@ -1,0 +1,205 @@
+"""The tile-config space (kernels/tiling.py), the config-aware candidate
+registry, and the roofline tile model — the (algorithm x config) widening
+of the selection space."""
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.hardware import TPU_V5E
+from repro.core.simulate import tile_time
+from repro.kernels.common import MXU_EDGE, round_up
+from repro.kernels.tiling import (
+    DEFAULT_VMEM_BUDGET_BYTES,
+    config_key,
+    default_config,
+    enumerate_tile_configs,
+    fits_vmem,
+    parse_config_key,
+    shortlist_tile_configs,
+    tile_vmem_bytes,
+    validate_config,
+)
+
+
+class TestConfigKeys:
+    def test_roundtrip(self):
+        for cfg in [(128, 128, 128), (512, 256, 1024)]:
+            assert parse_config_key(config_key(cfg)) == cfg
+
+    def test_default_key(self):
+        assert config_key(None) == "default"
+        assert parse_config_key("default") is None
+
+    def test_malformed_keys_raise(self):
+        for bad in ("", "128", "128x128", "axbxc", "128x128x-1", "0x128x128"):
+            with pytest.raises(ValueError, match="malformed"):
+                parse_config_key(bad)
+
+    def test_validate_config(self):
+        assert validate_config((128, 256, 512)) == (128, 256, 512)
+        for bad in [(128, 256), (128, 256, 0), (128, 256, 512.0), (128,)]:
+            with pytest.raises(ValueError):
+                validate_config(bad)
+
+
+class TestVmemBudget:
+    def test_accounting_is_double_buffered_with_f32_acc(self):
+        # (bm, bn, bk) = (256, 128, 512) at bf16: 2*(256*512 + 128*512)*2
+        # operands + 256*128*4 acc + 256*128*2 out
+        got = tile_vmem_bytes((256, 128, 512), 2)
+        want = 2 * (256 * 512 + 128 * 512) * 2 + 256 * 128 * 4 + 256 * 128 * 2
+        assert got == want
+
+    def test_default_block_fits_default_budget(self):
+        for dsize in (2, 4):
+            assert fits_vmem((512, 512, 512), dsize)
+
+    def test_oversized_tile_does_not_fit(self):
+        assert not fits_vmem((8192, 8192, 8192), 4)
+
+
+class TestEnumerate:
+    def test_every_config_is_aligned_bounded_and_fits(self):
+        for (m, n, k) in [(1, 1000, 127), (129, 300, 4096), (64, 64, 64)]:
+            configs = enumerate_tile_configs(m, n, k, dsize=4)
+            assert configs, (m, n, k)
+            for (bm, bn, bk) in configs:
+                for b, dim in ((bm, m), (bn, n), (bk, k)):
+                    assert b % MXU_EDGE == 0
+                    assert b <= round_up(dim, MXU_EDGE)
+                assert fits_vmem((bm, bn, bk), 4)
+
+    def test_sub_128_dims_collapse_the_axis(self):
+        configs = enumerate_tile_configs(1, 64, 127, dsize=4)
+        assert configs == ((128, 128, 128),)
+
+    def test_includes_clamped_default(self):
+        for (m, n, k) in [(1000, 1000, 1000), (1, 256, 513)]:
+            assert default_config(m, n, k) in enumerate_tile_configs(m, n, k)
+
+    def test_deep_k_edge_available(self):
+        assert (512, 512, 1024) in enumerate_tile_configs(1000, 1000, 1000)
+
+    def test_over_budget_default_is_not_smuggled_in(self):
+        """Regression: the clamped default was force-added even when it
+        busted the caller's VMEM budget, so sweeps timed a config the
+        dispatch admissibility filter would refuse."""
+        tiny = tile_vmem_bytes((128, 128, 128), 4)
+        configs = enumerate_tile_configs(1000, 1000, 1000, 4, vmem_budget=tiny)
+        assert default_config(1000, 1000, 1000) not in configs
+        assert all(fits_vmem(c, 4, tiny) for c in configs)
+        short = shortlist_tile_configs(
+            1000, 1000, 1000, 4, max_configs=2, vmem_budget=tiny
+        )
+        assert all(fits_vmem(c, 4, tiny) for c in short)
+
+
+class TestShortlist:
+    def test_truncates_and_keeps_default(self):
+        full = enumerate_tile_configs(1000, 1000, 1000, dsize=4)
+        short = shortlist_tile_configs(1000, 1000, 1000, dsize=4, max_configs=3)
+        assert len(short) == 3 < len(full)
+        assert set(short) <= set(full)
+        assert default_config(1000, 1000, 1000) in short
+
+    def test_ranked_by_tile_time(self):
+        short = shortlist_tile_configs(
+            1000, 1000, 1000, dsize=4, max_configs=0, hardware=TPU_V5E
+        )
+        ts = [tile_time(TPU_V5E, 1000, 1000, 1000, 4, c) for c in short]
+        assert ts == sorted(ts)
+
+    def test_tile_time_penalises_padding_waste(self):
+        # a 256 tile on a 300-long axis pads it to 512 (1.7x the work and
+        # traffic); the clamped 384 tile pads to 384 — an exact fit
+        t_pad = tile_time(TPU_V5E, 300, 2048, 2048, 4, (256, 512, 512))
+        t_fit = tile_time(TPU_V5E, 300, 2048, 2048, 4, (384, 512, 512))
+        assert t_fit < t_pad
+
+
+class TestConfigAwareRegistry:
+    def test_pallas_candidates_are_tunable(self):
+        for name in ("PALLAS_NT", "PALLAS_TNN", "PALLAS_TNN_FUSED"):
+            assert core.get_candidate(name).tunable
+        for name in ("XLA_NT", "XLA_TNN"):
+            assert not core.get_candidate(name).tunable
+
+    def test_config_space_empty_for_non_tunable(self):
+        assert core.get_candidate("XLA_NT").config_space(256, 256, 256) == ()
+
+    def test_config_space_is_shortlist(self):
+        cand = core.get_candidate("PALLAS_NT")
+        assert cand.config_space(256, 256, 256, 4, max_configs=2) == (
+            shortlist_tile_configs(256, 256, 256, 4, max_configs=2)
+        )
+
+    def test_supports_config(self):
+        pallas = core.get_candidate("PALLAS_NT")
+        xla = core.get_candidate("XLA_NT")
+        assert pallas.supports(config=(128, 128, 128))
+        assert pallas.supports(config=None)
+        assert not pallas.supports(config=(128, 128))  # malformed
+        assert not xla.supports(config=(128, 128, 128))  # not tunable
+        assert xla.supports(config=None)
+
+    def test_run_with_config_matches_default(self):
+        rng = np.random.RandomState(0)
+        import jax.numpy as jnp
+
+        a = jnp.asarray(rng.randn(129, 200), jnp.float32)
+        b = jnp.asarray(rng.randn(65, 200), jnp.float32)
+        cand = core.get_candidate("PALLAS_NT")
+        np.testing.assert_allclose(
+            np.asarray(cand.run(a, b, (128, 128, 128))),
+            np.asarray(cand.run(a, b)),
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+    def test_fits_memory_is_config_aware(self):
+        from repro.core.candidates import candidate_fits_memory
+
+        cand = core.get_candidate("PALLAS_NT")
+        ok = candidate_fits_memory(cand, 256, 256, 256, 4, 16.0)
+        assert ok
+        # a VMEM-busting tile fails even though HBM fit is fine
+        assert not candidate_fits_memory(
+            cand, 256, 256, 256, 4, 16.0, config=(8192, 8192, 8192)
+        )
+        assert candidate_fits_memory(
+            cand, 256, 256, 256, 4, 16.0, config=(128, 128, 128)
+        )
+
+    def test_register_tunable_plugin(self):
+        calls = []
+        try:
+            @core.register_candidate(
+                "TEST_TUNABLE", sim_algo="NT_DIRECT", tunable=True
+            )
+            def tunable_nt(a, b, block=None):
+                calls.append(block)
+                return a @ b.T
+
+            cand = core.get_candidate("TEST_TUNABLE")
+            import jax.numpy as jnp
+
+            a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
+            cand.run(a, b, (128, 128, 128))
+            assert calls == [(128, 128, 128)]
+        finally:
+            core.unregister_candidate("TEST_TUNABLE")
+
+
+class TestDecisionLabel:
+    def test_label_formats(self):
+        assert core.Decision("XLA_NT").label() == "XLA_NT"
+        assert (
+            core.Decision("PALLAS_NT", (512, 256, 128)).label()
+            == "PALLAS_NT@512x256x128"
+        )
+
+    def test_vmem_budget_is_sixteen_mib(self):
+        # the guide's VMEM figure; the budget constant is load-bearing for
+        # every admissibility decision, so pin it
+        assert DEFAULT_VMEM_BUDGET_BYTES == 16 * 1024 * 1024

@@ -1,7 +1,11 @@
 """Tile-config sweep over the Pallas kernel family — the perf trajectory
 tracker.
 
-For every (shape, candidate, tile config) cell this benchmark:
+The grid spans the op space (``core/opkey.py``): the forward NT family
+plus the backward NN (data-gradient) and TN (weight-gradient) Pallas
+candidates, each against its op's XLA reference.
+
+For every (op, shape, candidate, tile config) cell this benchmark:
 
   * validates the kernel output bit-for-bit-tolerably against the XLA
     reference (a correctness mismatch fails the run — the CI ``tile-smoke``
@@ -30,8 +34,14 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-# The Pallas kernel family under sweep (XLA candidates are not tunable).
+# The Pallas kernel family under sweep, per op (XLA candidates are not
+# tunable).  NN/TN are the backward GEMMs the op-space dispatch routes.
 PALLAS_FAMILY = ("PALLAS_NT", "PALLAS_TNN", "PALLAS_TNN_FUSED")
+FAMILY_BY_OP = {
+    "NT": PALLAS_FAMILY,
+    "NN": ("PALLAS_NN",),
+    "TN": ("PALLAS_TN",),
+}
 
 # Ragged / adversarial shapes where the default tile is provably not
 # optimal, plus aligned controls.  --quick keeps the tiny ones.
@@ -68,21 +78,23 @@ def _median_ms(fn, a, b, reps: int) -> float:
 
 def sweep(
     shapes=FULL_SHAPES,
-    candidates=PALLAS_FAMILY,
+    family_by_op: Optional[Dict[str, Tuple[str, ...]]] = None,
     max_tile_configs: int = 6,
     reps: int = 3,
     dtype: str = "float32",
     cache_path: Optional[str] = None,
     verbose: bool = True,
 ) -> Dict:
-    """Measure the (shape x candidate x config) grid; returns the payload
-    ``--json`` writes.  Raises ``AssertionError`` on the first correctness
-    mismatch — a tile config must never change the computed function."""
+    """Measure the (op x shape x candidate x config) grid; returns the
+    payload ``--json`` writes.  Raises ``AssertionError`` on the first
+    correctness mismatch — a tile config must never change the computed
+    function (each op is checked against its own reference)."""
     import jax
     import jax.numpy as jnp
 
     from repro import core
     from repro.core.hardware import host_spec
+    from repro.core.measure import operand_shapes
     from repro.core.simulate import matmul_flops
     from repro.kernels import DEFAULT_BLOCK, should_interpret
     from repro.kernels.tiling import config_key, default_config
@@ -93,67 +105,79 @@ def sweep(
     rng = np.random.RandomState(0)
     rows: List[Dict] = []
     cache = core.MeasurementCache(cache_path) if cache_path else None
+    family_by_op = family_by_op or FAMILY_BY_OP
 
     for (m, n, k) in shapes:
-        a = jnp.asarray(rng.randn(m, k), dt)
-        b = jnp.asarray(rng.randn(n, k), dt)
-        want = np.asarray(a, np.float64) @ np.asarray(b, np.float64).T
-        flops = matmul_flops(m, n, k)
-        # roofline bound for this shape on the host descriptor
-        peak = (hw.peak_tflops_bf16 if dt.itemsize <= 2 else hw.peak_tflops_f32)
-        roofline_gflops = min(
-            peak * 1e3,
-            hw.mem_bw_gbps * flops / ((m * k + n * k + m * n) * dt.itemsize),
-        )
-        dflt = default_config(m, n, k)
-        shape_rows: List[Dict] = []
-        nested: Dict[str, Dict[str, float]] = {}
-        for name in candidates:
-            cand = core.get_candidate(name)
-            configs = list(
-                cand.config_space(
-                    m, n, k, dt.itemsize,
-                    max_configs=max_tile_configs, hardware=hw,
-                )
-            ) or [None]
-            for cfg in configs:
-                # Candidate.run is the dispatch engine's own invocation
-                # path — benchmark exactly what dispatch would execute
-                fn = functools.partial(cand.run, config=cfg)
-                got = np.asarray(jax.jit(fn)(a, b), np.float64)
-                err = np.max(np.abs(got - want)) / max(1.0, np.max(np.abs(want)))
-                assert err < 1e-4, (
-                    f"correctness mismatch: {name} @ {config_key(cfg)} on "
-                    f"({m},{n},{k}) rel-err {err:.2e}"
-                )
-                ms = _median_ms(jax.jit(fn), a, b, reps)
-                ck = config_key(cfg)
-                nested.setdefault(name, {})[ck] = ms / 1e3
-                shape_rows.append(
-                    {
-                        "m": m, "n": n, "k": k,
-                        "candidate": name,
-                        "config": ck,
-                        "is_default_config": cfg is None or tuple(cfg) == dflt,
-                        "median_ms": round(ms, 4),
-                        "gflops": round(flops / ms / 1e6, 3),
-                        "roofline_gflops": round(roofline_gflops, 3),
-                    }
-                )
-        best = min(shape_rows, key=lambda r: r["median_ms"])
-        for r in shape_rows:
-            r["best"] = r is best
-        rows.extend(shape_rows)
-        if cache is not None:
-            # same key layout AutotunePolicy uses, so a sweep warms dispatch
-            cache.put((jax.default_backend(), hw.name, dtype, m, n, k), nested)
-        if verbose:
-            tag = "" if best["is_default_config"] else "  <- non-default tile wins"
-            print(
-                f"  ({m:>4d},{n:>4d},{k:>4d})  best {best['candidate']}"
-                f"@{best['config']}  {best['median_ms']:.2f} ms  "
-                f"{best['gflops']:.2f} GF/s{tag}"
+        for op, candidates in family_by_op.items():
+            a_shape, b_shape = operand_shapes(op, m, n, k)
+            a = jnp.asarray(rng.randn(*a_shape), dt)
+            b = jnp.asarray(rng.randn(*b_shape), dt)
+            a64, b64 = np.asarray(a, np.float64), np.asarray(b, np.float64)
+            if op == "NT":
+                want = a64 @ b64.T
+            elif op == "NN":
+                want = a64 @ b64
+            else:
+                want = a64.T @ b64
+            flops = matmul_flops(m, n, k)
+            # roofline bound for this shape on the host descriptor
+            peak = (hw.peak_tflops_bf16 if dt.itemsize <= 2 else hw.peak_tflops_f32)
+            roofline_gflops = min(
+                peak * 1e3,
+                hw.mem_bw_gbps * flops / ((m * k + n * k + m * n) * dt.itemsize),
             )
+            dflt = default_config(m, n, k)
+            shape_rows: List[Dict] = []
+            nested: Dict[str, Dict[str, float]] = {}
+            for name in candidates:
+                cand = core.get_candidate(name)
+                configs = list(
+                    cand.config_space(
+                        m, n, k, dt.itemsize,
+                        max_configs=max_tile_configs, hardware=hw,
+                    )
+                ) or [None]
+                for cfg in configs:
+                    # Candidate.run is the dispatch engine's own invocation
+                    # path — benchmark exactly what dispatch would execute
+                    fn = functools.partial(cand.run, config=cfg)
+                    got = np.asarray(jax.jit(fn)(a, b), np.float64)
+                    err = np.max(np.abs(got - want)) / max(1.0, np.max(np.abs(want)))
+                    assert err < 1e-4, (
+                        f"correctness mismatch: {op}:{name} @ {config_key(cfg)} "
+                        f"on ({m},{n},{k}) rel-err {err:.2e}"
+                    )
+                    ms = _median_ms(jax.jit(fn), a, b, reps)
+                    ck = config_key(cfg)
+                    nested.setdefault(name, {})[ck] = ms / 1e3
+                    shape_rows.append(
+                        {
+                            "op": op,
+                            "m": m, "n": n, "k": k,
+                            "candidate": name,
+                            "config": ck,
+                            "is_default_config": cfg is None or tuple(cfg) == dflt,
+                            "median_ms": round(ms, 4),
+                            "gflops": round(flops / ms / 1e6, 3),
+                            "roofline_gflops": round(roofline_gflops, 3),
+                        }
+                    )
+            best = min(shape_rows, key=lambda r: r["median_ms"])
+            for r in shape_rows:
+                r["best"] = r is best
+            rows.extend(shape_rows)
+            if cache is not None:
+                # same key layout AutotunePolicy uses, so a sweep warms dispatch
+                cache.put(
+                    (jax.default_backend(), hw.name, dtype, op, m, n, k), nested
+                )
+            if verbose:
+                tag = "" if best["is_default_config"] else "  <- non-default tile wins"
+                print(
+                    f"  {op} ({m:>4d},{n:>4d},{k:>4d})  best {best['candidate']}"
+                    f"@{best['config']}  {best['median_ms']:.2f} ms  "
+                    f"{best['gflops']:.2f} GF/s{tag}"
+                )
 
     if cache is not None:
         cache.save()
@@ -180,19 +204,21 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     shapes = QUICK_SHAPES if args.quick else FULL_SHAPES
+    n_cands = sum(len(v) for v in FAMILY_BY_OP.values())
     print(f"kernel tile-config sweep over {len(shapes)} shapes "
-          f"x {len(PALLAS_FAMILY)} Pallas candidates")
+          f"x {len(FAMILY_BY_OP)} ops ({n_cands} Pallas candidates)")
     payload = sweep(
         shapes=shapes,
         reps=args.reps,
         max_tile_configs=args.max_configs,
         cache_path=args.cache,
     )
+    n_cells = sum(1 for r in payload["results"] if r["best"])
     n_nondefault = sum(
         1 for r in payload["results"] if r["best"] and not r["is_default_config"]
     )
-    print(f"  {n_nondefault}/{len(shapes)} shapes won by a non-default tile "
-          f"({payload['mode']} mode)")
+    print(f"  {n_nondefault}/{n_cells} (op, shape) cells won by a "
+          f"non-default tile ({payload['mode']} mode)")
     if args.json:
         with open(args.out, "w") as fh:
             json.dump(payload, fh, indent=1)

@@ -66,6 +66,36 @@ def policy_overhead(full: bool = False):
         print(f"  {name:<22s} {r['cold_ms']:13.4f} {r['warm_ms']:13.4f}")
     print(f"  (paper's in-loop predictor: 0.005 ms/call, every call)")
 
+    # -- op-space dispatch cost -------------------------------------------
+    # The redesigned entry path builds an OpKey per select; the acceptance
+    # bar is per-dispatch overhead within 2x of the pre-redesign single-op
+    # (positional) path — which still exists as the legacy shim, so both
+    # are measurable side by side.  Backward NN/TN keys must cost the same
+    # as forward NT ones (it is one code path).
+    pol = core.AnalyticPolicy()
+    op_keys = {
+        op: [core.OpKey(op, m, n, k) for (m, n, k) in shapes]
+        for op in core.OPS
+    }
+    for op, keys in op_keys.items():
+        for key in keys:  # warm the per-key decision cache
+            pol.select(key)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for key in keys:
+                pol.select(key)
+        warm = (time.perf_counter() - t0) / (reps * len(keys))
+        out[f"AnalyticPolicy[{op}]"] = {"warm_ms": warm * 1e3}
+        print(f"  {'Analytic op=' + op:<22s} {'':>13s} {warm * 1e3:13.4f}")
+    legacy_pol = core.AnalyticPolicy()
+    r_legacy = _select_latency(legacy_pol, shapes, reps)  # positional path
+    ratio = (
+        out["AnalyticPolicy[NT]"]["warm_ms"] / max(r_legacy["warm_ms"], 1e-9)
+    )
+    out["_op_key_vs_positional_ratio"] = ratio
+    print(f"  op-key vs positional (pre-redesign) warm select: {ratio:.2f}x "
+          f"(acceptance bar: <= 2x)")
+
     # autotune: a cold select runs real on-device measurements (expensive,
     # once per shape per cache lifetime); a warm select is a cache lookup.
     # Smaller shape grid — cold selects execute every candidate for real.
@@ -98,7 +128,7 @@ def policy_overhead(full: bool = False):
         ("FixedPolicy", zoo["FixedPolicy"]),
     ):
         with core.use_policy(pol):
-            f = jax.jit(lambda a: core.dispatch_nt(a, w))
+            f = jax.jit(lambda a: core.dispatch("NT", a, w))
             jax.block_until_ready(f(x))  # trace + compile inside the scope
         best = min(
             _timed(lambda: jax.block_until_ready(f(x))) for _ in range(10)

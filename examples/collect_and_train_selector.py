@@ -23,22 +23,25 @@ from repro.core.selector import DEFAULT_ARTIFACT
 
 
 def build_dataset(args):
-    """Returns (dataset, tile_configs) — the learned per-candidate tiles
-    are non-empty only for --from-cache builds (v2 artifacts)."""
+    """Returns (dataset, tile_tables) — the learned per-op, per-shape tile
+    tables are non-empty only for --from-cache builds (v3 artifacts)."""
     if args.from_cache:
         print(f"[1/3] loading autotune measurement cache {args.from_cache}...")
         cache = core.MeasurementCache.load(args.from_cache, missing_ok=False)
         ds = core.dataset_from_measurements(
             cache, dtype=args.dtype, platform=args.platform
         )
-        tiles = core.top_configs_by_candidate(
+        tables = core.tile_tables_from_cache(
             cache, dtype=args.dtype, platform=args.platform
         )
-        print(f"      {len(cache)} cached shapes -> {len(ds)} samples "
-              f"{ds.class_counts()}")
-        if tiles:
-            print(f"      learned tile configs: {tiles}")
-        return ds, tiles
+        print(f"      {len(cache)} cached (op, shape) keys -> {len(ds)} "
+              f"samples {ds.class_counts()}")
+        for op, table in tables.items():
+            modal = {name: e["modal"] for name, e in table.items()}
+            n_shapes = sum(len(e["by_shape"]) for e in table.values())
+            print(f"      learned {op} tiles: modal {modal}, "
+                  f"{n_shapes} per-shape entries")
+        return ds, tables
 
     hi = 12 if args.fast else 16
     print(f"[1/3] analytic-TPU dataset (grid 2^7..2^{hi}, 3 chips)...")
@@ -76,7 +79,7 @@ def main():
     )
     args = ap.parse_args()
 
-    ds, tiles = build_dataset(args)
+    ds, tables = build_dataset(args)
     print(f"[2/3] train on {len(ds)} samples ({ds.source})")
     # 5-fold CV needs enough rows per fold; small autotune caches skip it
     if len(ds) >= 25:
@@ -92,7 +95,7 @@ def main():
     print(f"[3/3] saving artifact (schema v{core.SCHEMA_VERSION}) -> {args.out}")
     out_dir = os.path.dirname(args.out) or "."
     os.makedirs(out_dir, exist_ok=True)
-    sel = core.MTNNSelector(clf, tile_configs=tiles)
+    sel = core.MTNNSelector(clf, tile_tables=tables)
     sel.save(args.out)
     # reload check
     sel2 = core.MTNNSelector.load(args.out)

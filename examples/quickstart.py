@@ -35,20 +35,24 @@ def main():
     print(f"   GOW avg {m['gow_avg']:.1f}%  LUB avg {m['lub_avg']:.2f}% "
           f"(paper: 76.23% / -0.28%)")
 
-    print("\n== 4. dispatch (policy API) ==")
+    print("\n== 4. dispatch (op-space policy API) ==")
     policy = core.ModelPolicy(core.MTNNSelector(clf))
     rng = np.random.RandomState(0)
     for (m_, n_, k_) in [(128, 128, 128), (8192, 8192, 8192), (512, 65536, 256)]:
-        choice = policy.select(m_, n_, k_)
+        choice = policy.select(core.OpKey("NT", m_, n_, k_))
         print(f"   C[{m_},{n_}] = A[{m_},{k_}] @ B[{n_},{k_}]^T -> {choice.label()}")
     a = jnp.asarray(rng.randn(64, 32), jnp.float32)
     b = jnp.asarray(rng.randn(16, 32), jnp.float32)
-    with core.use_policy(policy):  # every NT op in scope uses this policy
-        out = core.dispatch_nt(a, b)
+    with core.use_policy(policy):  # every GEMM in scope uses this policy
+        out = core.dispatch("NT", a, b)
+        # jax.grad re-enters dispatch for the backward NN/TN gradient GEMMs
+        ga = jax.grad(lambda a: jnp.sum(core.dispatch("NT", a, b) ** 2))(a)
     err = float(jnp.max(jnp.abs(out - a @ b.T)))
-    print(f"   dispatch_nt correctness: max|err| = {err:.2e}")
+    err_g = float(jnp.max(jnp.abs(ga - 2.0 * (a @ b.T) @ b)))
+    print(f"   dispatch('NT') correctness: max|err| = {err:.2e} "
+          f"(grad: {err_g:.2e})")
     with core.use_policy(core.FixedPolicy("XLA_TNN")):  # forced baseline arm
-        out_tnn = core.dispatch_nt(a, b)
+        out_tnn = core.dispatch("NT", a, b)
     print(f"   forced XLA_TNN agrees: {bool(jnp.allclose(out, out_tnn, atol=1e-5))}")
     print("\n" + core.dispatch_report(policy))
     print("\nDone.  See examples/collect_and_train_selector.py for the full "

@@ -6,6 +6,7 @@ Defaults: 100M params (4096-4096x5-4096), synthetic regression-to-
 classification data, 200 steps.  On this CPU container ~1-2 s/step.
 
   PYTHONPATH=src python examples/train_fcn.py [--steps 200] [--tiny]
+  PYTHONPATH=src python examples/train_fcn.py --smoke --policy autotune
 """
 
 import argparse
@@ -17,6 +18,7 @@ import numpy as np
 
 from repro import core
 from repro.checkpoint import CheckpointManager
+from repro.core.engine import POLICY_SPEC_HELP
 from repro.models.fcn import FCNConfig, fcn_loss, init_fcn
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
 
@@ -27,12 +29,18 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--tiny", action="store_true", help="1M-param variant")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny model, few steps")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_fcn_ckpt")
     ap.add_argument("--always-nt", action="store_true",
                     help="disable MTNN (the CaffeNT baseline)")
+    ap.add_argument("--policy", default=None,
+                    help=f"override the trained-here selector; {POLICY_SPEC_HELP}")
     args = ap.parse_args()
 
-    if args.tiny:
+    if args.smoke:
+        args.steps = min(args.steps, 5)
+    if args.tiny or args.smoke:
         cfg = FCNConfig("fcn-1m", 256, 64, (512, 512, 512))
     else:
         cfg = FCNConfig("fcn-100m", 4096, 4096, (4096,) * 5)
@@ -41,8 +49,12 @@ def main():
     )
     print(f"[fcn] {cfg.name}: dims {cfg.dims}, {n_params/1e6:.1f}M params")
 
-    # policy: learned on measured host data, or the forced-NT baseline
-    if args.always_nt:
+    # policy: an explicit spec, the forced-NT baseline, or one learned on
+    # measured host data right here
+    if args.policy:
+        policy = core.policy_from_spec(args.policy)
+        print(f"[fcn] policy: {policy!r}")
+    elif args.always_nt:
         policy = core.FixedPolicy("XLA_NT")
         print("[fcn] MTNN disabled (always XLA_NT)")
     else:

@@ -1,31 +1,43 @@
-"""Pluggable registry of candidate implementations of  C = A @ B^T.
+"""Pluggable registry of candidate implementations of the dense-layer GEMMs.
 
-The paper's candidate set is {NT, TNN}.  Ours (beyond-paper) is wider, and
-— since this registry is the extension surface every later backend rides on
-— candidates are added with a registration decorator rather than by editing
-a hardcoded dict:
+The paper's candidate set is {NT, TNN} for the forward op.  Ours
+(beyond-paper) spans the whole *op space* of a dense layer's training step
+— forward NT plus the backward NN (data gradient) and TN (weight gradient)
+matmuls (``core/opkey.py``) — and, since this registry is the extension
+surface every later backend rides on, candidates are added with a
+registration decorator rather than by editing a hardcoded dict:
 
     @register_candidate(
-        "MY_BACKEND_NT", sim_algo="NT_DIRECT",
+        "MY_BACKEND_NT", sim_algo="NT_DIRECT", ops=("NT",),
         distributed_safe=True, platforms=("gpu",),
     )
     def my_backend_nt(a, b):
         ...
 
-Built-in candidates:
+Built-in candidates, by op kind:
 
-  XLA_NT      lax.dot_general contracting (1, 1)      — the "cuBLAS NT" analogue
-  XLA_TNN     explicit transpose then NN dot          — the paper's TNN on XLA
-  PALLAS_NT   Pallas kernel, direct NT dim numbers    — TPU target
-  PALLAS_TNN  Pallas transpose kernel + Pallas NN     — TPU target
-  PALLAS_TNN_FUSED  Pallas NT with in-VMEM transpose  — beyond-paper
+  NT (C = A @ B^T, A:(m,k), B:(n,k)):
+    XLA_NT      lax.dot_general contracting (1, 1)    — the "cuBLAS NT" analogue
+    XLA_TNN     explicit transpose then NN dot        — the paper's TNN on XLA
+    PALLAS_NT   Pallas kernel, direct NT dim numbers  — TPU target
+    PALLAS_TNN  Pallas transpose kernel + Pallas NN   — TPU target
+    PALLAS_TNN_FUSED  Pallas NT with in-VMEM transpose — beyond-paper
+  NN (C = A @ B, A:(m,k), B:(k,n) — the backward data gradient):
+    XLA_NN      lax.dot_general contracting (1, 0)
+    PALLAS_NN   the blocked Pallas NN kernel
+  TN (C = A^T @ B, A:(k,m), B:(k,n) — the backward weight gradient):
+    XLA_TN      lax.dot_general contracting (0, 0), no materialised A^T
+    PALLAS_TN   Pallas transpose of A + Pallas NN (the TNN move, applied
+                to the gradient op)
 
-All candidates share the signature ``f(a, b) -> c`` with ``a:(m,k)``,
-``b:(n,k)``, ``c:(m,n)``, and are pure and jit-safe.  ``distributed_safe``
-marks the candidates that are legal inside pjit-partitioned programs
-without a shard_map wrapper; ``extra_memory`` marks the ones needing room
-for a materialised B^T (the paper's OOM guard); ``platforms``/``dtypes``
-bound where a candidate may be enumerated (per-hardware registries).
+All candidates share the signature ``f(a, b) -> c`` with operands in their
+op's storage layout (above), and are pure and jit-safe.  ``ops`` names the
+op kinds a candidate implements — dispatch never hands an op to a
+candidate outside its set.  ``distributed_safe`` marks the candidates that
+are legal inside pjit-partitioned programs without a shard_map wrapper;
+``extra_memory`` marks the ones needing room for a materialised transpose
+(the paper's OOM guard); ``platforms``/``dtypes`` bound where a candidate
+may be enumerated (per-hardware registries).
 
 ``tunable`` candidates additionally accept a ``block=(bm, bn, bk)`` tile
 config keyword (the Pallas kernels); ``Candidate.config_space`` enumerates
@@ -42,6 +54,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .opkey import OPS, check_op
+
 __all__ = [
     "Candidate",
     "CANDIDATES",
@@ -54,6 +68,8 @@ __all__ = [
     "candidate_fits_memory",
     "candidate_allowed",
     "PAPER_PAIR",
+    "DEFAULT_BY_OP",
+    "BINARY_PAIRS_BY_OP",
 ]
 
 ALL_PLATFORMS: Tuple[str, ...] = ("tpu", "cpu", "gpu")
@@ -69,14 +85,18 @@ class Candidate:
     platforms: Tuple[str, ...] = ALL_PLATFORMS  # backends it may run on
     dtypes: Optional[Tuple[str, ...]] = None  # None => any dtype
     tunable: bool = False  # fn accepts a block=(bm, bn, bk) tile config
+    ops: Tuple[str, ...] = ("NT",)  # op kinds the fn implements (opkey.OPS)
 
     def supports(
-        self, platform: Optional[str] = None, dtype=None, config=None
+        self, platform: Optional[str] = None, dtype=None, config=None,
+        op: Optional[str] = None,
     ) -> bool:
-        """Platform/dtype bounds, plus — config-aware — whether this
+        """Platform/dtype/op bounds, plus — config-aware — whether this
         candidate can honour an explicit tile config at all (``None``
         means "the candidate's own default" and every candidate supports
         it)."""
+        if op is not None and op not in self.ops:
+            return False
         if platform is not None and platform not in self.platforms:
             return False
         if dtype is not None and self.dtypes is not None:
@@ -137,8 +157,15 @@ def register_candidate(
     platforms: Tuple[str, ...] = ALL_PLATFORMS,
     dtypes: Optional[Tuple[str, ...]] = None,
     tunable: bool = False,
+    ops: Tuple[str, ...] = ("NT",),
 ):
     """Decorator registering ``fn(a, b) -> c`` as a dispatch candidate.
+
+    ``ops`` names the op kinds (``opkey.OPS``) the function implements —
+    operands arrive in that op's storage layout and dispatch never routes
+    an op outside the set.  The default is ``("NT",)`` so pre-redesign
+    registrations (which could only mean the forward op) keep working
+    unchanged.
 
     ``tunable=True`` declares that ``fn`` also accepts a
     ``block=(bm, bn, bk)`` keyword, opening the candidate to per-shape
@@ -164,6 +191,7 @@ def register_candidate(
             platforms=tuple(platforms),
             dtypes=tuple(dtypes) if dtypes is not None else None,
             tunable=tunable,
+            ops=tuple(check_op(o) for o in ops),
         )
         return fn
 
@@ -194,12 +222,15 @@ def candidates_for(
     platform: Optional[str] = None,
     dtype=None,
     distributed: bool = False,
+    op: Optional[str] = None,
 ) -> Tuple[Candidate, ...]:
-    """Per-hardware enumeration: candidates legal on this backend/dtype."""
+    """Per-hardware, per-op enumeration: candidates legal on this
+    backend/dtype (and implementing ``op``, when one is given)."""
     return tuple(
         c
         for c in _REGISTRY.values()
-        if c.supports(platform, dtype) and (not distributed or c.distributed_safe)
+        if c.supports(platform, dtype, op=op)
+        and (not distributed or c.distributed_safe)
     )
 
 
@@ -215,12 +246,14 @@ def current_platform() -> str:
 
 def candidate_fits_memory(
     cand: Candidate, m: int, n: int, k: int, dsize: int, mem_gib: float,
-    budget_frac: float = 0.9, config=None,
+    budget_frac: float = 0.9, config=None, op: str = "NT",
 ) -> bool:
-    """Paper's OOM guard, config-aware: extra-memory candidates must fit
-    A, B, C *and* the materialised B^T inside the HBM budget; an explicit
-    tile config must additionally fit the VMEM budget (double-buffered
-    operand blocks + f32 accumulator, ``kernels/tiling.py``)."""
+    """Paper's OOM guard, config- and op-aware: extra-memory candidates
+    must fit A, B, C *and* their materialised transpose inside the HBM
+    budget — B^T (n*k elements) for the forward NT/TNN schedules, A^T
+    (m*k elements) for the TN weight-gradient schedule; an explicit tile
+    config must additionally fit the VMEM budget (double-buffered operand
+    blocks + f32 accumulator, ``kernels/tiling.py``)."""
     if config is not None and cand.tunable:
         from repro.kernels.tiling import fits_vmem, validate_config
 
@@ -233,15 +266,18 @@ def candidate_fits_memory(
     if not cand.extra_memory:
         return True
     budget = mem_gib * (1024**3) * budget_frac
-    resident = (m * k + n * k + m * n + n * k) * dsize
+    transposed = m * k if op == "TN" else n * k
+    resident = (m * k + n * k + m * n + transposed) * dsize
     return resident <= budget
 
 
-def candidate_allowed(cand: Candidate, distributed: bool, config=None) -> bool:
-    """Distributed-safety + runtime-platform (+ tile-config) filter."""
+def candidate_allowed(
+    cand: Candidate, distributed: bool, config=None, op: Optional[str] = None
+) -> bool:
+    """Distributed-safety + runtime-platform (+ tile-config, + op) filter."""
     if distributed and not cand.distributed_safe:
         return False
-    return cand.supports(platform=current_platform(), config=config)
+    return cand.supports(platform=current_platform(), config=config, op=op)
 
 
 # -- built-in candidates ------------------------------------------------------
@@ -302,5 +338,73 @@ def _pallas_tnn_fused(a, b, block=None):
     return ops.matmul_tnn_fused(a, b, block=block)
 
 
-# the paper's binary setting
+# -- backward ops: the data (NN) and weight (TN) gradient GEMMs ---------------
+
+
+@register_candidate(
+    "XLA_NN", sim_algo="NN_DIRECT", distributed_safe=True, ops=("NN",)
+)
+def xla_nn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct NN: A:(m,k) @ B:(k,n) — the data-gradient reference."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate(
+    "PALLAS_NN",
+    sim_algo="NN_DIRECT",
+    platforms=("tpu", "cpu"),
+    tunable=True,
+    ops=("NN",),
+)
+def _pallas_nn(a, b, block=None):
+    from repro.kernels import ops
+
+    return ops.matmul_nn(a, b, block=block)
+
+
+@register_candidate(
+    "XLA_TN", sim_algo="TN_DIRECT", distributed_safe=True, ops=("TN",)
+)
+def xla_tn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct TN: A:(k,m)^T @ B:(k,n), contracting both leading dims — no
+    materialised A^T (the weight-gradient reference)."""
+    return jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate(
+    "PALLAS_TN",
+    sim_algo="TN_VIA_NN",
+    extra_memory=True,
+    platforms=("tpu", "cpu"),
+    tunable=True,
+    ops=("TN",),
+)
+def _pallas_tn(a, b, block=None):
+    from repro.kernels import ops
+
+    return ops.matmul_tn(a, b, block=block)
+
+
+# the paper's binary setting (the forward op)
 PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")
+
+# Per-op binary pairs: (direct arm, alternative arm) — the generalization
+# of the paper's NT-vs-TNN dichotomy to the backward GEMMs.  Label +1 in a
+# binary selector means "choose the first member".
+BINARY_PAIRS_BY_OP: Dict[str, Tuple[str, str]] = {
+    "NT": PAPER_PAIR,
+    "NN": ("XLA_NN", "PALLAS_NN"),
+    "TN": ("XLA_TN", "PALLAS_TN"),
+}
+
+# The always-runnable reference candidate per op (distributed-safe, every
+# platform, no extra memory) — the terminal fallback of every policy and
+# the candidate an op-mismatched FixedPolicy degrades to.
+DEFAULT_BY_OP: Dict[str, str] = {"NT": "XLA_NT", "NN": "XLA_NN", "TN": "XLA_TN"}
+assert set(DEFAULT_BY_OP) == set(OPS)

@@ -13,8 +13,9 @@ Two honest data sources (kept separate, labelled in every report):
     is weak (|ratio-1| ~ 5%) but genuine; on a real TPU the same harness
     times the Pallas candidates.
 
-Record format (paper): (gm, sm, cc, mbw, l2c, m, n, k) -> label,
-label = +1 if P_NT >= P_TNN (choose NT) else -1 (choose TNN).
+Record format (paper, plus the op-kind column): (gm, sm, cc, mbw, l2c,
+m, n, k, op) -> label, label = +1 if P_direct >= P_alt (choose the op
+pair's direct arm — NT for the forward op) else -1.
 """
 
 from __future__ import annotations
@@ -25,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import simulate
-from .candidates import CANDIDATES, PAPER_PAIR
+from .candidates import BINARY_PAIRS_BY_OP, CANDIDATES, PAPER_PAIR
 from .features import make_features
 from .hardware import SIMULATED_CHIPS, HardwareSpec, host_spec
 
@@ -48,7 +49,7 @@ def paper_grid(lo: int = 7, hi: int = 16) -> List[Tuple[int, int, int]]:
 class SelectionDataset:
     """Samples + per-candidate times.
 
-    X:      (N, 8) feature matrix (paper layout)
+    X:      (N, 9) feature matrix (paper's 8-dim layout + the op column)
     y:      (N,) labels in {-1, +1}   (+1 => NT faster-or-equal, choose NT)
     times:  algo-name -> (N,) seconds; always includes the paper pair
             'NT' and 'TNN'; may include more candidates (beyond-paper).
@@ -218,57 +219,69 @@ def collect_measured(
 def dataset_from_measurements(
     cache,
     pair: Tuple[str, str] = PAPER_PAIR,
+    pairs: Optional[Dict[str, Tuple[str, str]]] = None,
     dtype: Optional[str] = "float32",
     platform: Optional[str] = None,
 ) -> SelectionDataset:
     """Convert an autotune ``MeasurementCache`` into a ``SelectionDataset``.
 
-    This closes the paper's loop from dispatch-time measurements: shapes an
-    ``AutotunePolicy`` timed in production become training records for the
-    GBDT (measure -> retrain -> ``ModelPolicy``).  Labels follow the same
-    rule as ``collect_measured``: +1 (choose NT) iff t_NT <= t_TNN.
+    This closes the paper's loop from dispatch-time measurements: (op,
+    shape) keys an ``AutotunePolicy`` timed in production become training
+    records for the GBDT (measure -> retrain -> ``ModelPolicy``).  Each
+    record is labelled against its *op's* binary pair (``pair`` names the
+    NT pair as before; ``pairs`` overrides the per-op table, default
+    ``candidates.BINARY_PAIRS_BY_OP``) with the same rule as
+    ``collect_measured``: +1 (choose the direct arm) iff t_direct <= t_alt.
+    The op kind enters the feature vector as the 9th column, so one model
+    learns the whole op space.
 
-    v2 caches time each candidate at several tile configs; the *top config
-    per candidate* is folded in here (each candidate's time is its
+    The cache times each candidate at several tile configs; the *top
+    config per candidate* is folded in here (each candidate's time is its
     best-config time), so the GBDT learns over the widened
-    (algorithm x config) label space while the paper's 8-dim feature schema
-    stays intact — the learned per-candidate tiles travel separately in the
-    v2 selector artifact (``measure.top_configs_by_candidate`` ->
-    ``MTNNSelector(tile_configs=...)``).
+    (op x algorithm x config) label space while the paper's feature schema
+    stays flat — the learned tiles travel separately in the v3 selector
+    artifact (``measure.tile_tables_from_cache`` ->
+    ``MTNNSelector(tile_tables=...)``).
 
-    ``dtype`` selects which cache records to use: the paper's 8-dim feature
-    vector has no dtype component, so mixing e.g. bfloat16 and float32
-    timings of one shape would feed the learner identical features with
-    contradictory labels.  Pass ``dtype=None`` only when the cache is known
-    to be dtype-homogeneous.  The jax ``platform`` is the same kind of
-    hidden dimension — a cache populated under two backends with the same
-    hardware descriptor is ambiguous, so that case raises and asks for an
-    explicit ``platform=`` filter.
+    ``dtype`` selects which cache records to use: the feature vector has no
+    dtype component, so mixing e.g. bfloat16 and float32 timings of one
+    shape would feed the learner identical features with contradictory
+    labels.  Pass ``dtype=None`` only when the cache is known to be
+    dtype-homogeneous.  The jax ``platform`` is the same kind of hidden
+    dimension — a cache populated under two backends with the same hardware
+    descriptor is ambiguous, so that case raises and asks for an explicit
+    ``platform=`` filter.
 
-    Records lacking a timing for either member of ``pair`` are skipped (the
-    OOM guard excludes TNN on shapes where B^T does not fit, exactly like
-    the paper's dataset filter).  ``times`` carries the canonical 'NT'/'TNN'
-    keys plus every candidate timed in *all* kept records.
+    Records lacking a timing for either member of their op's pair are
+    skipped (the OOM guard excludes transpose-materialising arms on shapes
+    where the transpose does not fit, exactly like the paper's dataset
+    filter).  ``times`` carries the canonical 'NT'/'TNN' columns — the
+    direct/alternative arm of each record's op pair — plus every candidate
+    timed in *all* kept records.
     """
     from .measure import best_times
 
-    nt_name, tnn_name = pair
+    op_pairs = dict(BINARY_PAIRS_BY_OP)
+    op_pairs["NT"] = tuple(pair)
+    for op, p in (pairs or {}).items():
+        op_pairs[op] = tuple(p)
     host = host_spec()
     specs = dict(SIMULATED_CHIPS)
     specs[host.name] = host
-    kept: List[Tuple[HardwareSpec, int, int, int, Dict[str, float]]] = []
+    kept: List[Tuple[HardwareSpec, str, int, int, int, Dict[str, float]]] = []
     unknown_hw: Dict[str, int] = {}
     other_dtypes: Dict[str, int] = {}
-    seen_platform: Dict[Tuple[str, str, int, int, int], str] = {}
-    for (rec_platform, hw_name, rec_dtype, m, n, k), nested in cache.records():
+    seen_platform: Dict[Tuple[str, str, str, int, int, int], str] = {}
+    for (rec_platform, hw_name, rec_dtype, op, m, n, k), nested in cache.records():
         if platform is not None and rec_platform != platform:
             continue
         if dtype is not None and rec_dtype != dtype:
             other_dtypes[rec_dtype] = other_dtypes.get(rec_dtype, 0) + 1
             continue
+        direct_name, alt_name = op_pairs[op]
         # top-config fold: each candidate enters at its best measured tile
         times = {name: t for name, (_ck, t) in best_times(nested).items()}
-        if nt_name not in times or tnn_name not in times:
+        if direct_name not in times or alt_name not in times:
             continue
         hw = specs.get(hw_name)
         if hw is None:
@@ -277,18 +290,18 @@ def dataset_from_measurements(
             # unusable (counted so an empty result names the real cause)
             unknown_hw[hw_name] = unknown_hw.get(hw_name, 0) + 1
             continue
-        sk = (hw_name, rec_dtype, m, n, k)
+        sk = (hw_name, rec_dtype, op, m, n, k)
         prev = seen_platform.get(sk)
         if prev is not None and prev != rec_platform:
             raise ValueError(
                 f"measurement cache holds records for hw={hw_name!r} "
-                f"dtype={rec_dtype!r} shape=({m}, {n}, {k}) under multiple "
-                f"jax platforms ({prev!r}, {rec_platform!r}) — identical "
-                "features with possibly contradictory labels; pass "
-                "platform= to pick one"
+                f"dtype={rec_dtype!r} op={op} shape=({m}, {n}, {k}) under "
+                f"multiple jax platforms ({prev!r}, {rec_platform!r}) — "
+                "identical features with possibly contradictory labels; "
+                "pass platform= to pick one"
             )
         seen_platform[sk] = rec_platform
-        kept.append((hw, m, n, k, times))
+        kept.append((hw, op, m, n, k, times))
     if not kept:
         if unknown_hw:
             why = (
@@ -307,23 +320,28 @@ def dataset_from_measurements(
             )
         raise ValueError(
             f"measurement cache has no usable{f' {dtype}' if dtype else ''} "
-            f"records timing both {nt_name!r} and {tnn_name!r}; {why}"
+            f"records timing both members of an op's binary pair "
+            f"(e.g. {op_pairs['NT']!r} for NT); {why}"
         )
-    common = set(kept[0][4])
-    for _, _, _, _, times in kept:
+    common = set(kept[0][5])
+    for *_, times in kept:
         common &= set(times)
     rows_X, rows_y, rows_mnk, rows_hw = [], [], [], []
+    t_direct, t_alt = [], []
     t_cols: Dict[str, List[float]] = {c: [] for c in sorted(common)}
-    for hw, m, n, k, times in kept:
-        rows_X.append(make_features(hw, m, n, k))
-        rows_y.append(1 if times[nt_name] <= times[tnn_name] else -1)
+    for hw, op, m, n, k, times in kept:
+        direct_name, alt_name = op_pairs[op]
+        rows_X.append(make_features(hw, m, n, k, op=op))
+        rows_y.append(1 if times[direct_name] <= times[alt_name] else -1)
         rows_mnk.append((m, n, k))
         rows_hw.append(hw.name)
+        t_direct.append(times[direct_name])
+        t_alt.append(times[alt_name])
         for c in t_cols:
             t_cols[c].append(times[c])
     out_times = {c: np.array(v) for c, v in t_cols.items()}
-    out_times["NT"] = np.array([t[nt_name] for *_, t in kept])
-    out_times["TNN"] = np.array([t[tnn_name] for *_, t in kept])
+    out_times["NT"] = np.array(t_direct)
+    out_times["TNN"] = np.array(t_alt)
     return SelectionDataset(
         X=np.array(rows_X),
         y=np.array(rows_y),

@@ -1,22 +1,41 @@
-"""The dispatch engine: every NT op in the model layer lands here.
+"""The dispatch engine: every dense-layer GEMM in the model layer lands here.
 
-``dispatch_nt(a, b)`` computes ``a @ b^T`` through whichever
-*(candidate, tile config)* the scoped policy picks
-(``policy.current_policy()``) — model code never threads a selector
-argument.  Because JAX shapes are static under ``jit``, the policy runs
-once per distinct shape at trace time and contributes nothing to the
-compiled step.
+``dispatch(op, a, b)`` computes one of the three training GEMMs —
+``"NT"`` (``a @ b^T``), ``"NN"`` (``a @ b``) or ``"TN"`` (``a^T @ b``) —
+through whichever *(candidate, tile config)* the scoped policy picks for
+the ``OpKey`` (``policy.current_policy()``); model code never threads a
+selector argument.  Because JAX shapes are static under ``jit``, the
+policy runs once per distinct key at trace time and contributes nothing
+to the compiled step.
 
-``dispatch_report()`` renders the per-(candidate, config) decision counts
-of the scoped policy — surfaced at the end of train/serve runs so dispatch
-stays observable in production.
+``dispatch`` is ``custom_vjp``-wrapped: its backward rule rebuilds the
+NN/TN (data/weight-gradient) OpKeys and re-enters dispatch, so a single
+``use_policy(...)`` scope governs all three GEMMs of every dense layer in
+train *and* serve — the paper's end-to-end training speedup depends on the
+backward ops being routed too.  Selection happens at trace time, so the
+scope must wrap the whole ``value_and_grad`` call (forward *and* backward
+trace), not just the forward pass.
+
+``dispatch_nt(a, b)`` is the pre-op-space entry point, kept as a thin
+compatibility wrapper (it warns once); new code should call
+``dispatch("NT", a, b)``.
+
+``dispatch_report()`` renders the per-(op, candidate, config) decision
+counts of the scoped policy — surfaced at the end of train/serve runs so
+dispatch stays observable in production.
 """
 
 from __future__ import annotations
 
+import functools
+import inspect
+import warnings
 from typing import Optional
 
-from .candidates import get_candidate
+import jax
+
+from .candidates import DEFAULT_BY_OP, get_candidate
+from .opkey import OPS, OpKey, check_op
 from .policy import (
     AnalyticPolicy,
     AutotunePolicy,
@@ -31,8 +50,10 @@ from .policy import (
 )
 
 __all__ = [
+    "dispatch",
     "dispatch_nt",
     "dispatch_report",
+    "policy_select",
     "policy_from_spec",
     "add_policy_argument",
     "use_policy",
@@ -41,9 +62,18 @@ __all__ = [
 ]
 
 POLICY_SPEC_HELP = (
-    "NT-dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
-    "analytic | cascade:<A,B,...> | autotune[:cache.json]"
+    "dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
+    "fixed:nt=<NAME>[@cfg],nn=<NAME>[@cfg],tn=<NAME>[@cfg] | analytic | "
+    "cascade:<A,B,...> | autotune[:cache.json]"
 )
+
+_WARNED: set = set()
+
+
+def _warn_once(tag: str, msg: str) -> None:
+    if tag not in _WARNED:
+        _WARNED.add(tag)
+        warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 def _spec_error(msg: str) -> ValueError:
@@ -51,65 +81,265 @@ def _spec_error(msg: str) -> ValueError:
     return ValueError(f"{msg} ({POLICY_SPEC_HELP})")
 
 
-def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
-    """Compute ``a @ b^T`` through the policy-selected (candidate, config).
+# Legacy-signature detection is per *class* (a class's select signature
+# does not change), so the hot dispatch path never pays reflection twice.
+_LEGACY_SELECT_BY_TYPE: dict = {}
 
-    ``a``: (..., m, k) activations; ``b``: (n, k) weights in the paper's
-    row-major (out, in) convention — the forward pass of a dense layer is
-    literally the paper's NT operation.
+
+def _has_legacy_select(policy: SelectionPolicy) -> bool:
+    cls = type(policy)
+    cached = _LEGACY_SELECT_BY_TYPE.get(cls)
+    if cached is None:
+        cached = False
+        try:
+            params = list(inspect.signature(policy.select).parameters)
+            cached = bool(params) and params[0] == "m"
+        except (TypeError, ValueError):
+            pass
+        _LEGACY_SELECT_BY_TYPE[cls] = cached
+    return cached
+
+
+def policy_select(policy: SelectionPolicy, key: OpKey) -> Decision:
+    """Run ``policy.select`` on an ``OpKey`` — the one place the
+    deprecation shims live:
+
+      * legacy policies whose ``select(m, n, k, dsize)`` takes positional
+        shape ints (detected by signature, cached per class) are called
+        that way — but only for the forward op, which is all the
+        positional form could ever express; backward NN/TN keys degrade to
+        the op's reference candidate instead of handing a legacy policy an
+        op it cannot see (its NT answer would run on wrong-layout
+        operands);
+      * bare-string decisions (a candidate name instead of a ``Decision``)
+        are normalised to ``Decision(name, None)``;
+      * a decision naming a candidate that does not implement ``key.op``
+        (a mis-op'd policy) degrades to the op's reference rather than
+        executing a kernel on operands in the wrong storage layout.
+
+    The adaptations warn once per process; the legacy shims will be
+    removed after one release.
     """
+    if _has_legacy_select(policy):
+        _warn_once(
+            "legacy-select",
+            "policies with a positional select(m, n, k, dsize) signature are "
+            "deprecated; take an OpKey (op, m, n, k, dsize) instead so "
+            "backward NN/TN GEMMs can be routed",
+        )
+        if key.op != "NT":
+            # the positional API predates the op space: this policy cannot
+            # answer for a backward GEMM, so run the op's reference
+            return Decision(DEFAULT_BY_OP[key.op], None)
+        decision = policy.select(key.m, key.n, key.k, dsize=key.dsize)
+    else:
+        decision = policy.select(key)
+    if isinstance(decision, str):  # legacy/third-party policy: bare name
+        _warn_once(
+            "bare-string-decision",
+            "policies returning a bare candidate name are deprecated; return "
+            "a Decision(name, config)",
+        )
+        decision = Decision(decision, None)
+    if key.op not in get_candidate(decision.name).ops:
+        _warn_once(
+            "op-mismatched-decision",
+            f"policy {policy!r} returned candidate {decision.name!r} for an "
+            f"op it does not implement; dispatching the op's reference "
+            "instead",
+        )
+        decision = Decision(DEFAULT_BY_OP[key.op], None)
+    return decision
+
+
+def _run(op: str, a, b):
+    """Select and execute one 2-D GEMM (the custom_vjp core)."""
     import jax.numpy as jnp
 
-    pol = policy if policy is not None else current_policy()
+    if op == "NT":  # a:(m,k) b:(n,k)
+        m, k = a.shape
+        n = b.shape[0]
+    elif op == "NN":  # a:(m,k) b:(k,n)
+        m, k = a.shape
+        n = b.shape[1]
+    else:  # TN: a:(k,m) b:(k,n)
+        k, m = a.shape
+        n = b.shape[1]
+    key = OpKey(op, int(m), int(n), int(k), int(jnp.dtype(a.dtype).itemsize))
+    decision = policy_select(current_policy(), key)
+    return get_candidate(decision.name).run(a, b, decision.config)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dispatch2(op: str, a, b):
+    return _run(op, a, b)
+
+
+def _dispatch2_fwd(op: str, a, b):
+    return _run(op, a, b), (a, b)
+
+
+def _dispatch2_bwd(op: str, res, g):
+    """Backward rule: each gradient GEMM is itself a dispatch — the op
+    space {NT, NN, TN} is closed under differentiation, so both gradients
+    of every op land back on a policy-governed op.  (First-order reverse
+    mode only: custom_vjp does not support forward-mode/higher-order.)"""
+    a, b = res
+    if op == "NT":  # C = A B^T: dA = G @ B (NN), dB = G^T @ A (TN)
+        da = _dispatch2("NN", g, b)
+        db = _dispatch2("TN", g, a)
+    elif op == "NN":  # C = A B: dA = G @ B^T (NT), dB = A^T @ G (TN)
+        da = _dispatch2("NT", g, b)
+        db = _dispatch2("TN", a, g)
+    else:  # TN, C = A^T B: dA = B @ G^T (NT), dB = A @ G (NN)
+        da = _dispatch2("NT", b, g)
+        db = _dispatch2("NN", a, g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_dispatch2.defvjp(_dispatch2_fwd, _dispatch2_bwd)
+
+
+def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
+    """Compute one dense-layer GEMM through the policy-selected
+    (candidate, tile config).
+
+      dispatch("NT", a, b)   a:(..., m, k) @ b:(n, k)^T -> (..., m, n)
+      dispatch("NN", a, b)   a:(..., m, k) @ b:(k, n)   -> (..., m, n)
+      dispatch("TN", a, b)   a:(k, m)^T    @ b:(k, n)   -> (m, n)
+
+    ``a``/``b`` follow the op's storage layout (``core/opkey.py``): for NT,
+    ``b`` is a weight in the paper's row-major (out, in) convention, so the
+    forward pass of a dense layer is literally the paper's NT operation.
+    Leading batch dims of ``a`` are flattened for NT/NN (TN contracts the
+    leading dim, so it is strictly 2-D).
+
+    Differentiating through ``dispatch`` re-enters it: the backward data
+    and weight gradients are dispatched as NN/TN OpKeys under the policy
+    in scope at *backward-trace* time — wrap the whole ``value_and_grad``
+    call in ``use_policy(...)`` so one scope governs all three GEMMs.
+
+    An explicit ``policy=`` scopes only this call's forward selection
+    (prefer ``use_policy`` around the full computation).
+    """
+    check_op(op)
+    if policy is not None:
+        with use_policy(policy):
+            return dispatch(op, a, b)
+    if op == "TN":
+        return _dispatch2("TN", a, b)
     lead = a.shape[:-1]
-    k = a.shape[-1]
-    n = b.shape[0]
-    m = 1
-    for d in lead:
-        m *= int(d)
-    decision = pol.select(m, n, k, dsize=jnp.dtype(a.dtype).itemsize)
-    if isinstance(decision, str):  # legacy/third-party policy: bare name
-        decision = Decision(decision, None)
-    a2 = a.reshape((m, k))
-    out = get_candidate(decision.name).run(a2, b, decision.config)
+    a2 = a.reshape((-1, a.shape[-1]))
+    out = _dispatch2(op, a2, b)
+    n = b.shape[0] if op == "NT" else b.shape[1]
     return out.reshape(lead + (n,))
 
 
+def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
+    """Deprecated pre-op-space entry point: ``dispatch("NT", a, b)``.
+
+    Kept as a thin compatibility wrapper so existing callers keep working
+    — and, unlike the pre-redesign engine, gradients taken through it now
+    route the backward NN/TN GEMMs through the policy too instead of
+    silently diverging to whatever XLA derives.  Warns once per process.
+    """
+    _warn_once(
+        "dispatch_nt",
+        "dispatch_nt(a, b) is deprecated; call dispatch('NT', a, b) — the "
+        "op-space entry point whose backward also dispatches the NN/TN "
+        "gradient GEMMs",
+    )
+    return dispatch("NT", a, b, policy=policy)
+
+
 def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
-    """Pretty-print per-(candidate, tile-config) decision counts for
-    ``policy`` (default: the scoped policy).  Rows are keyed
-    ``NAME@BMxBNxBK`` for decisions that carried an explicit tile and
-    ``NAME`` for kernel-default ones.  Returns the rendered table; callers
-    print it."""
+    """Pretty-print per-(op, candidate, tile-config) decision counts for
+    ``policy`` (default: the scoped policy).  Rows are grouped by op kind
+    and keyed ``NAME@BMxBNxBK`` for decisions that carried an explicit tile
+    (``NAME`` for kernel-default ones), so backward-GEMM routing is visible
+    in production logs.  Returns the rendered table; callers print it."""
     pol = policy if policy is not None else current_policy()
     stats = pol.stats
     lines = [f"dispatch report — {pol!r}"]
     if not stats.calls:
         lines.append("  (no dispatches recorded)")
         return "\n".join(lines)
-    # by_decision carries the (candidate, config) split; fall back to the
-    # plain per-candidate counts for stats objects that lack it
-    rows = getattr(stats, "by_decision", None) or stats.by_candidate
-    width = max(len("candidate[@tile]"), max(len(n) for n in rows))
-    lines.append(f"  {'candidate[@tile]':<{width}s} {'calls':>8s} {'share':>7s}")
-    for name, count in sorted(rows.items(), key=lambda kv: -kv[1]):
+    by_op = getattr(stats, "by_op", None)
+    if by_op:
+        rows = [
+            (op, label, count)
+            for op, labels in by_op.items()
+            for label, count in labels.items()
+        ]
+    else:
+        # stats objects predating the op split: one unlabelled group
+        flat = getattr(stats, "by_decision", None) or stats.by_candidate
+        rows = [("-", label, count) for label, count in flat.items()]
+    width = max(len("candidate[@tile]"), max(len(label) for _, label, _ in rows))
+    lines.append(
+        f"  {'op':<3s} {'candidate[@tile]':<{width}s} {'calls':>8s} {'share':>7s}"
+    )
+    op_order = {op: i for i, op in enumerate(OPS)}
+    rows.sort(key=lambda r: (op_order.get(r[0], 99), -r[2], r[1]))
+    for op, label, count in rows:
         lines.append(
-            f"  {name:<{width}s} {count:8d} {100.0 * count / stats.calls:6.1f}%"
+            f"  {op:<3s} {label:<{width}s} {count:8d} "
+            f"{100.0 * count / stats.calls:6.1f}%"
         )
-    lines.append(f"  {'total':<{width}s} {stats.calls:8d}")
+    lines.append(f"  {'':<3s} {'total':<{width}s} {stats.calls:8d}")
     return "\n".join(lines)
+
+
+def _parse_fixed_arg(arg: str) -> FixedPolicy:
+    """``fixed:`` spec bodies — either a single candidate or an
+    op-qualified table (``nt=XLA_NT,nn=PALLAS_NN@128x128x128``)."""
+    from repro.kernels.tiling import parse_config_key
+
+    def parse_entry(val: str):
+        name, _, cfg = val.partition("@")
+        config = None
+        if cfg.strip():
+            try:
+                config = parse_config_key(cfg.strip())
+            except ValueError as e:
+                raise _spec_error(str(e))
+        return name.strip(), config
+
+    if "=" not in arg:
+        name, config = parse_entry(arg)
+        return FixedPolicy(name, config=config)
+    by_op = {}
+    for part in arg.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        op_s, eq, val = part.partition("=")
+        op = op_s.strip().upper()
+        if not eq or op not in OPS or not val.strip():
+            raise _spec_error(
+                f"malformed op-qualified fixed entry {part!r}; expected "
+                "nt=<NAME>[@BMxBNxBK] with op in nt/nn/tn"
+            )
+        by_op[op] = parse_entry(val)
+    if not by_op:
+        raise _spec_error("fixed policy needs at least one op entry")
+    return FixedPolicy(by_op=by_op)
 
 
 def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
     """Build a policy from a CLI-friendly spec string.
 
       model[:path]              learned selector (default artifact or path)
-      fixed:XLA_TNN             FixedPolicy
+      fixed:XLA_TNN             FixedPolicy (backward GEMMs run each op's
+                                XLA reference)
       fixed:PALLAS_NT@256x256x512   FixedPolicy with a forced tile config
+      fixed:nt=XLA_NT,nn=PALLAS_NN[@BMxBNxBK],tn=XLA_TN
+                                op-qualified FixedPolicy: force a
+                                (candidate, tile) per op kind
       analytic                  AnalyticPolicy on the default hardware
       cascade:A,B,C             CascadePolicy over the named candidates
-      autotune[:cache.json]     AutotunePolicy over the (candidate, tile)
-                                measurement cache
+      autotune[:cache.json]     AutotunePolicy over the (op, candidate,
+                                tile) measurement cache
                                 (default: core.measure.default_cache_path())
 
     Whitespace around the kind and its argument is ignored, so quoted CLI
@@ -131,16 +361,7 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
     if kind == "fixed":
         if not arg:
             raise _spec_error("fixed policy needs a candidate: fixed:<NAME>")
-        name, _, cfg = arg.partition("@")
-        config = None
-        if cfg.strip():
-            from repro.kernels.tiling import parse_config_key
-
-            try:
-                config = parse_config_key(cfg.strip())
-            except ValueError as e:
-                raise _spec_error(str(e))
-        return FixedPolicy(name.strip(), config=config)
+        return _parse_fixed_arg(arg)
     if kind == "analytic":
         return AnalyticPolicy(distributed=distributed)
     if kind == "autotune":

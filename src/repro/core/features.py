@@ -2,6 +2,12 @@
 
 Paper format (8-dim):  (gm, sm, cc, mbw, l2c, m, n, k) -> label in {-1, +1}
 
+Op-space extension (9-dim): the paper routes only the forward NT GEMM;
+our dispatch covers the backward NN/TN gradients too, so the op kind is a
+model feature — appended as the *last* column (ordinal-encoded) so models
+trained on the 8-dim paper layout keep predicting unchanged (tree-based
+learners never look past the feature indices they were trained on).
+
 Feature generation is O(1) — the paper stresses this so the predictor adds
 negligible overhead.  In our JAX port the predictor runs at *trace* time
 (shapes are static under jit), so the runtime overhead is exactly zero.
@@ -9,29 +15,54 @@ negligible overhead.  In our JAX port the predictor runs at *trace* time
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from .hardware import HardwareSpec
+from .opkey import check_op
 
-__all__ = ["FEATURE_NAMES", "make_features", "make_feature_matrix", "normalize01"]
+__all__ = [
+    "FEATURE_NAMES",
+    "OP_FEATURE",
+    "make_features",
+    "make_feature_matrix",
+    "normalize01",
+]
 
-FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k")
+FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k", "op")
+
+# Ordinal op encoding; index order matches opkey.OPS.
+OP_FEATURE = {"NT": 0.0, "NN": 1.0, "TN": 2.0}
 
 
-def make_features(hw: HardwareSpec, m: int, n: int, k: int) -> np.ndarray:
-    """The paper's 8-dim sample vector.  O(1)."""
+def make_features(
+    hw: HardwareSpec, m: int, n: int, k: int, op: str = "NT"
+) -> np.ndarray:
+    """The paper's 8-dim sample vector plus the op-kind column.  O(1)."""
     gm, sm, cc, mbw, l2c = hw.features()
-    return np.array([gm, sm, cc, mbw, l2c, float(m), float(n), float(k)])
+    return np.array(
+        [gm, sm, cc, mbw, l2c, float(m), float(n), float(k),
+         OP_FEATURE[check_op(op)]]
+    )
 
 
 def make_feature_matrix(
-    hw: HardwareSpec, mnk: Sequence[Sequence[int]]
+    hw: HardwareSpec,
+    mnk: Sequence[Sequence[int]],
+    ops: Optional[Sequence[str]] = None,
 ) -> np.ndarray:
     base = np.array(hw.features(), dtype=np.float64)
     mnk = np.asarray(mnk, dtype=np.float64)
-    return np.concatenate([np.tile(base, (len(mnk), 1)), mnk], axis=1)
+    if ops is None:
+        op_col = np.zeros((len(mnk), 1))  # all-NT: the paper's setting
+    else:
+        op_col = np.array(
+            [[OP_FEATURE[check_op(o)]] for o in ops], dtype=np.float64
+        )
+    return np.concatenate(
+        [np.tile(base, (len(mnk), 1)), mnk, op_col], axis=1
+    )
 
 
 def normalize01(X: np.ndarray, lo=None, hi=None):

@@ -3,9 +3,10 @@
 The paper's pipeline is *measure NT vs TNN on real hardware -> train a
 selector -> dispatch*.  This module closes the measurement end of that loop
 for dispatch itself (AutoTVM-style): a timing harness that benchmarks every
-admissible *(candidate, tile config)* pair for one (m, n, k) shape on the
-*current* backend, and a persistent, versioned JSON cache of those timings
-keyed by ``(platform, hardware, dtype, m, n, k)``.  Tunable (Pallas)
+admissible *(candidate, tile config)* pair for one (op, m, n, k) key — the
+forward NT or a backward NN/TN gradient GEMM — on the *current* backend,
+and a persistent, versioned JSON cache of those timings keyed by
+``(platform, hardware, dtype, op, m, n, k)``.  Tunable (Pallas)
 candidates are swept over their roofline-pruned config shortlist
 (``kernels/tiling.py``); non-tunable (XLA) candidates are timed once under
 the ``"default"`` config key.
@@ -38,6 +39,7 @@ from .candidates import (
     get_candidate,
 )
 from .hardware import HardwareSpec, host_spec
+from .opkey import check_op, shape_key
 
 __all__ = [
     "MEASURE_SCHEMA_VERSION",
@@ -45,10 +47,13 @@ __all__ = [
     "MeasurementCache",
     "bench_fn",
     "measure_candidates",
+    "measure_transpose_configs",
+    "best_transpose_config",
     "measurement_supported",
     "default_cache_path",
     "best_times",
     "top_configs_by_candidate",
+    "tile_tables_from_cache",
     "DTYPE_BY_DSIZE",
 ]
 
@@ -57,15 +62,19 @@ __all__ = [
 #   v2: entry values gain a tile-config level:
 #       {"plat|hw|dtype|m|n|k": {name: {"default"|"BMxBNxBK": s}}}
 #       v1 records migrate on load as {name: {"default": s}}.
-MEASURE_SCHEMA_VERSION = 2
+#   v3: keys gain the op kind ("plat|hw|dtype|op|m|n|k") so the cache
+#       spans the whole (op x shape x candidate x config) selection space.
+#       v1/v2 keys — which could only describe the forward op — migrate on
+#       load with op="NT".
+MEASURE_SCHEMA_VERSION = 3
 
 # select() receives an element size, not a dtype; measurement needs a real
 # dtype to build operands.  Sizes outside this map are not measurable (the
 # policy falls back to the analytic model for them).
 DTYPE_BY_DSIZE: Dict[int, str] = {2: "bfloat16", 4: "float32"}
 
-# (platform, hardware, dtype, m, n, k)
-MeasurementKey = Tuple[str, str, str, int, int, int]
+# (platform, hardware, dtype, op, m, n, k)
+MeasurementKey = Tuple[str, str, str, str, int, int, int]
 
 
 def default_cache_path() -> str:
@@ -75,6 +84,25 @@ def default_cache_path() -> str:
         return env
     return os.path.join(
         os.path.expanduser("~"), ".cache", "repro", "autotune_cache.json"
+    )
+
+
+def _normalize_mkey(key) -> MeasurementKey:
+    """Canonical 7-tuple key.  Legacy 6-tuples (no op component — the
+    pre-op-space cache API) mean the forward NT op."""
+    key = tuple(key)
+    if len(key) == 6:
+        platform, hw, dtype, m, n, k = key
+        return (str(platform), str(hw), str(dtype), "NT", int(m), int(n), int(k))
+    if len(key) != 7:
+        raise ValueError(
+            f"measurement key {key!r} must be (platform, hardware, dtype, "
+            "op, m, n, k)"
+        )
+    platform, hw, dtype, op, m, n, k = key
+    return (
+        str(platform), str(hw), str(dtype), check_op(op),
+        int(m), int(n), int(k),
     )
 
 
@@ -113,13 +141,17 @@ def _file_lock(path: str):
             fcntl.flock(fh.fileno(), fcntl.LOCK_UN)
 
 
-def _parse_key(s: str) -> MeasurementKey:
+def _parse_key(s: str, version: int = MEASURE_SCHEMA_VERSION) -> MeasurementKey:
     # split from both ends: hardware names may themselves contain '|';
-    # platform, dtype and the three ints never do
-    head, m, n, k = s.rsplit("|", 3)
+    # platform, dtype, op and the three ints never do
+    if version >= 3:
+        head, op, m, n, k = s.rsplit("|", 4)
+    else:  # v1/v2 keys carry no op component: they meant the forward op
+        head, m, n, k = s.rsplit("|", 3)
+        op = "NT"
     platform, rest = head.split("|", 1)
     hardware, dtype = rest.rsplit("|", 1)
-    return (platform, hardware, dtype, int(m), int(n), int(k))
+    return (platform, hardware, dtype, check_op(op), int(m), int(n), int(k))
 
 
 def _normalize_times(times: Dict) -> Dict[str, Dict[str, float]]:
@@ -152,13 +184,16 @@ def best_times(times: Dict[str, Dict[str, float]]) -> Dict[str, Tuple[str, float
 
 
 class MeasurementCache:
-    """Persistent ``(platform, hardware, dtype, m, n, k) ->
+    """Persistent ``(platform, hardware, dtype, op, m, n, k) ->
     {candidate: {config_key: seconds}}``.
 
     Versioned like selector artifacts: v1 files (flat per-candidate
-    timings) migrate on load; files newer than ``MEASURE_SCHEMA_VERSION``
-    are rejected rather than misread.  ``save`` writes atomically (tmp +
-    rename) so a crash mid-write cannot corrupt a warm cache.
+    timings) and v2 files (op-less keys — migrated as the forward NT op)
+    migrate on load; files newer than ``MEASURE_SCHEMA_VERSION`` are
+    rejected rather than misread.  Legacy op-less 6-tuple keys are accepted
+    by ``get``/``put`` and normalised the same way.  ``save`` writes
+    atomically (tmp + rename) so a crash mid-write cannot corrupt a warm
+    cache.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -186,8 +221,9 @@ class MeasurementCache:
         # v1 (and unversioned v0-era) entries hold flat {name: seconds}
         # values; _normalize_times folds them under the "default" config
         # key — a v1 cache keeps answering warm hits after the upgrade.
+        # Pre-v3 keys carry no op component and migrate as op="NT".
         for ks, times in payload.get("entries", {}).items():
-            cache._entries[_parse_key(ks)] = _normalize_times(times)
+            cache._entries[_parse_key(ks, version)] = _normalize_times(times)
         return cache
 
     def save(self, path: Optional[str] = None) -> None:
@@ -240,13 +276,14 @@ class MeasurementCache:
             if path == self.path:
                 self._synced_sig = _file_sig(path)
 
-    def get(self, key: MeasurementKey) -> Optional[Dict[str, Dict[str, float]]]:
-        return self._entries.get(key)
+    def get(self, key) -> Optional[Dict[str, Dict[str, float]]]:
+        return self._entries.get(_normalize_mkey(key))
 
-    def put(self, key: MeasurementKey, times: Dict) -> None:
-        """Store timings for one shape.  Accepts the canonical nested form
-        or the flat v1 form (normalised under ``"default"``)."""
-        self._entries[key] = _normalize_times(times)
+    def put(self, key, times: Dict) -> None:
+        """Store timings for one (op, shape).  Accepts the canonical nested
+        times form or the flat v1 form (normalised under ``"default"``),
+        and legacy op-less 6-tuple keys (normalised to op="NT")."""
+        self._entries[_normalize_mkey(key)] = _normalize_times(times)
 
     def records(
         self,
@@ -257,8 +294,8 @@ class MeasurementCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def __contains__(self, key: MeasurementKey) -> bool:
-        return key in self._entries
+    def __contains__(self, key) -> bool:
+        return _normalize_mkey(key) in self._entries
 
     def __repr__(self):
         return f"MeasurementCache({len(self)} shapes, path={self.path!r})"
@@ -317,11 +354,22 @@ def bench_fn(fn, a, b, reps: int, warmup: int = 1, stat: str = "median") -> floa
     return float(statistics.median(ts) if stat == "median" else min(ts))
 
 
+def operand_shapes(op: str, m: int, n: int, k: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Storage-layout operand shapes of one GEMM op (``core/opkey.py``)."""
+    check_op(op)
+    if op == "NT":
+        return (m, k), (n, k)
+    if op == "NN":
+        return (m, k), (k, n)
+    return (k, m), (k, n)  # TN
+
+
 def measure_candidates(
     m: int,
     n: int,
     k: int,
     dtype: str = "float32",
+    op: str = "NT",
     candidates: Optional[Sequence[str]] = None,
     hardware: Optional[HardwareSpec] = None,
     distributed: bool = False,
@@ -332,18 +380,19 @@ def measure_candidates(
     tune: bool = True,
     max_tile_configs: int = 4,
 ) -> Dict[str, Dict[str, float]]:
-    """Time every admissible (candidate, tile config) for one shape on this
-    backend; returns ``{name: {config_key: seconds}}``.
+    """Time every admissible (candidate, tile config) for one (op, shape)
+    on this backend; returns ``{name: {config_key: seconds}}``.
 
-    Tunable candidates are swept over their roofline-pruned config
-    shortlist (``tune=False`` restricts them to the default tiling);
-    non-tunable candidates are timed once under ``"default"``.
-    Admissibility is the shared guard set from ``candidates.py`` — the
-    paper's OOM check (extra-memory candidates must fit the budget), the
-    distributed/platform filter, and the VMEM budget per config — so an
-    autotune run can never execute a pair the dispatch engine would
-    refuse.  Inadmissible pairs are skipped, not timed; the result may be
-    empty.
+    Operands are built in ``op``'s storage layout and only candidates
+    implementing the op are considered.  Tunable candidates are swept over
+    their roofline-pruned config shortlist (``tune=False`` restricts them
+    to the default tiling); non-tunable candidates are timed once under
+    ``"default"``.  Admissibility is the shared guard set from
+    ``candidates.py`` — the paper's OOM check (extra-memory candidates must
+    fit the budget), the distributed/platform filter, and the VMEM budget
+    per config — so an autotune run can never execute a pair the dispatch
+    engine would refuse.  Inadmissible pairs are skipped, not timed; the
+    result may be empty.
     """
     import functools
 
@@ -356,18 +405,19 @@ def measure_candidates(
     names = tuple(candidates or CANDIDATES)
     dt = jnp.dtype(dtype)
     dsize = dt.itemsize
+    a_shape, b_shape = operand_shapes(op, m, n, k)
     times: Dict[str, Dict[str, float]] = {}
     with _eval_scope():
         ka, kb = jax.random.split(jax.random.PRNGKey(seed))
-        a = jax.random.normal(ka, (m, k), dtype=dt)
-        b = jax.random.normal(kb, (n, k), dtype=dt)
+        a = jax.random.normal(ka, a_shape, dtype=dt)
+        b = jax.random.normal(kb, b_shape, dtype=dt)
         for name in names:
             cand = get_candidate(name)
             if not candidate_fits_memory(
-                cand, m, n, k, dsize, hw.mem_gib, mem_budget_frac
+                cand, m, n, k, dsize, hw.mem_gib, mem_budget_frac, op=op
             ):
-                continue  # OOM guard: do not even try to materialise B^T
-            if not candidate_allowed(cand, distributed):
+                continue  # OOM guard: never materialise an over-budget transpose
+            if not candidate_allowed(cand, distributed, op=op):
                 continue
             if cand.tunable and tune:
                 sweep = [
@@ -399,22 +449,24 @@ def top_configs_by_candidate(
     cache: "MeasurementCache",
     dtype: Optional[str] = None,
     platform: Optional[str] = None,
+    op: Optional[str] = None,
 ) -> Dict[str, str]:
     """Per candidate, the *modal* winning config key across all matching
-    cache records — the shape-independent tile summary a retrained
-    ``MTNNSelector`` carries in its v2 artifact (``tile_configs``), so a
-    ``ModelPolicy`` built from autotune data dispatches tuned tiles even
-    on shapes the cache never saw.  Only explicit tiles count: candidates
+    cache records — the shape-independent tile summary (v2 artifacts
+    carried exactly this; v3 artifacts keep it as the ``"modal"`` fallback
+    of their per-shape tables).  Only explicit tiles count: candidates
     whose wins are all at the ``"default"`` tiling (non-tunable XLA arms,
     ``tune=False`` sweeps) carry no entry — an artifact should list
     *learned* tiles, not restate the default."""
     from repro.kernels.tiling import DEFAULT_CONFIG_KEY
 
     wins: Dict[str, Dict[str, int]] = {}
-    for (rec_platform, _hw, rec_dtype, *_mnk), times in cache.records():
+    for (rec_platform, _hw, rec_dtype, rec_op, *_mnk), times in cache.records():
         if platform is not None and rec_platform != platform:
             continue
         if dtype is not None and rec_dtype != dtype:
+            continue
+        if op is not None and rec_op != op:
             continue
         for name, (ck, _t) in best_times(times).items():
             if ck == DEFAULT_CONFIG_KEY:
@@ -426,3 +478,115 @@ def top_configs_by_candidate(
         name: min(counts, key=lambda ck: (-counts[ck], ck))
         for name, counts in wins.items()
     }
+
+
+def tile_tables_from_cache(
+    cache: "MeasurementCache",
+    dtype: Optional[str] = None,
+    platform: Optional[str] = None,
+) -> Dict[str, Dict[str, Dict]]:
+    """Per-op, per-candidate tile tables for a v3 selector artifact:
+    ``{op: {name: {"modal": key, "by_shape": {"MxNxK": key}}}}``.
+
+    ``by_shape`` holds each measured shape's winning explicit tile (the
+    per-shape table the ROADMAP asked for — a ``ModelPolicy`` dispatches
+    the exact tuned tile on shapes the cache saw, and the nearest recorded
+    shape's tile otherwise); ``"modal"`` is the shape-independent summary
+    (``top_configs_by_candidate``) kept as the terminal fallback.  Default
+    ("default"-key) wins are omitted, as in the modal summary."""
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY
+
+    tables: Dict[str, Dict[str, Dict]] = {}
+    # one pass: per-shape winners and the modal tally come from the same
+    # best_times() fold of each record
+    wins: Dict[Tuple[str, str], Dict[str, int]] = {}
+    for (rec_platform, _hw, rec_dtype, rec_op, m, n, k), times in cache.records():
+        if platform is not None and rec_platform != platform:
+            continue
+        if dtype is not None and rec_dtype != dtype:
+            continue
+        for name, (ck, _t) in best_times(times).items():
+            if ck == DEFAULT_CONFIG_KEY:
+                continue
+            entry = tables.setdefault(rec_op, {}).setdefault(
+                name, {"modal": None, "by_shape": {}}
+            )
+            entry["by_shape"][shape_key((m, n, k))] = ck
+            counts = wins.setdefault((rec_op, name), {})
+            counts[ck] = counts.get(ck, 0) + 1
+    for (op, name), counts in wins.items():
+        # same deterministic tie-break as top_configs_by_candidate
+        tables[op][name]["modal"] = min(
+            counts, key=lambda ck: (-counts[ck], ck)
+        )
+    return tables
+
+
+def measure_transpose_configs(
+    rows: int,
+    cols: int,
+    dtype: str = "float32",
+    reps: int = 3,
+    warmup: int = 1,
+    max_configs: int = 4,
+    hardware: Optional[HardwareSpec] = None,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Autotune the out-of-place transpose kernel's 2-D (b_rows, b_cols)
+    tile space for one (rows, cols) operand: time the roofline-ranked
+    shortlist (``kernels.tiling.transpose_config_space``) plus the
+    kernel-default tiling, returning ``{config_key: seconds}``.  The
+    transpose is the second stage of the TNN/TN candidates, so a tuned
+    ``tblock`` feeds ``ops.matmul_tnn`` / ``ops.matmul_tn`` directly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.tiling import (
+        DEFAULT_CONFIG_KEY,
+        config_key,
+        transpose_config_space,
+    )
+
+    hw = hardware or host_spec()
+    dt = jnp.dtype(dtype)
+    times: Dict[str, float] = {}
+    with _eval_scope():
+        b = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols), dtype=dt)
+        sweep = [(DEFAULT_CONFIG_KEY, None)] + [
+            (config_key(cfg), cfg)
+            for cfg in transpose_config_space(
+                rows, cols, dt.itemsize, max_configs=max_configs, hardware=hw
+            )
+        ]
+        for ck, cfg in sweep:
+            fn = jax.jit(lambda x, _cfg=cfg: ops.transpose(x, block=_cfg))
+            try:
+                jax.block_until_ready(fn(b))  # compile + first warmup
+                for _ in range(max(0, warmup - 1)):
+                    jax.block_until_ready(fn(b))
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(b))
+                    ts.append(time.perf_counter() - t0)
+                times[ck] = float(statistics.median(ts))
+            except Exception:
+                continue  # an unrunnable tile is simply not a measurement
+    return times
+
+
+def best_transpose_config(
+    rows: int, cols: int, **kw
+) -> Optional[Tuple[int, int]]:
+    """The measured-fastest transpose tile for this operand, or None when
+    the kernel default wins (or nothing could be measured)."""
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY, parse_config_key
+
+    times = measure_transpose_configs(rows, cols, **kw)
+    if not times:
+        return None
+    ck = min(times, key=times.get)
+    if ck == DEFAULT_CONFIG_KEY:
+        return None
+    return parse_config_key(ck, arity=2)

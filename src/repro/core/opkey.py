@@ -1,0 +1,100 @@
+"""The op-space selection key: *(op kind x shape x dtype width)*.
+
+The paper's 28% end-to-end speedup comes from routing the *training*
+GEMMs — the forward NT plus the backward data/weight gradients — through
+learned selection.  Those three matmuls of a dense layer are distinct
+*operations*, not just distinct shapes:
+
+  NT   C = A @ B^T    A:(m, k)  B:(n, k)   forward of a (out, in) dense
+  NN   C = A @ B      A:(m, k)  B:(k, n)   data gradient  dX = dY @ W
+  TN   C = A^T @ B    A:(k, m)  B:(k, n)   weight gradient dW = dY^T @ X
+
+``OpKey`` names one dispatch decision point: which op, at which logical
+(m, n, k) — m/n are the output extents, k the contraction — and at which
+element size.  Every ``SelectionPolicy.select`` takes an ``OpKey`` and the
+whole persistence stack (measurement caches, selector artifacts, dispatch
+reports) is keyed by it, so the selection space is genuinely
+*(op x shape x tile config)* — the same generalization AutoTVM made from
+per-kernel to per-operator learned cost models.
+
+Legacy positional ``select(m, n, k, dsize)`` calls are adapted by
+``coerce_key`` (they mean ``op="NT"``, the only op the old API could
+express); that shim is deprecated and kept for one release.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+__all__ = ["OPS", "OpKey", "check_op", "coerce_key", "shape_key", "parse_shape_key"]
+
+# The op kinds of the dense layer's training GEMMs.  Closed under
+# differentiation: d(NT) -> {NN, TN}, d(NN) -> {NT, TN}, d(TN) -> {NT, NN},
+# which is what lets the dispatch engine's custom_vjp re-enter itself.
+OPS: Tuple[str, ...] = ("NT", "NN", "TN")
+
+
+def check_op(op: str) -> str:
+    if op not in OPS:
+        raise ValueError(f"unknown op kind {op!r}; expected one of {OPS}")
+    return op
+
+
+class OpKey(NamedTuple):
+    """One dispatch decision point: op kind, logical output/contraction
+    extents, and element size.  ``m``/``n`` are the *output* dims and ``k``
+    the contraction dim regardless of op, so (m, n, k) reads the same way
+    for all three ops (the storage layouts differ, see module docstring)."""
+
+    op: str
+    m: int
+    n: int
+    k: int
+    dsize: int = 4
+
+    def mnk(self) -> Tuple[int, int, int]:
+        return (self.m, self.n, self.k)
+
+
+def coerce_key(
+    key,
+    n: Optional[int] = None,
+    k: Optional[int] = None,
+    dsize: int = 4,
+) -> OpKey:
+    """Normalise a ``select`` argument list to an ``OpKey``.
+
+    Accepts an ``OpKey`` (the op-space API) or the legacy positional form
+    ``select(m, n, k[, dsize])`` — which could only ever mean the forward
+    NT op, so that is what it maps to.  The positional form is deprecated;
+    it is kept so pre-redesign policies and call sites keep working for one
+    release.
+    """
+    if isinstance(key, OpKey):
+        return OpKey(
+            check_op(key.op), int(key.m), int(key.n), int(key.k), int(key.dsize)
+        )
+    if n is None or k is None:
+        raise TypeError(
+            "select() takes an OpKey or the legacy positional (m, n, k[, dsize])"
+        )
+    return OpKey("NT", int(key), int(n), int(k), int(dsize))
+
+
+def shape_key(mnk: Sequence[int]) -> str:
+    """Stable string form of an (m, n, k) shape — the per-shape tile-table
+    key in v3 selector artifacts (same ``x``-joined style as tile-config
+    keys)."""
+    m, n, k = mnk
+    return f"{int(m)}x{int(n)}x{int(k)}"
+
+
+def parse_shape_key(key: str) -> Tuple[int, int, int]:
+    """Inverse of ``shape_key``; raises ``ValueError`` on malformed keys."""
+    try:
+        parts = tuple(int(p) for p in key.split("x"))
+    except ValueError:
+        raise ValueError(f"malformed shape key {key!r}") from None
+    if len(parts) != 3 or any(p <= 0 for p in parts):
+        raise ValueError(f"malformed shape key {key!r}")
+    return parts

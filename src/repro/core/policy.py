@@ -1,21 +1,29 @@
 """Selection policies + context-scoped dispatch.
 
-The paper's contribution is *which implementation of C = A @ B^T to run for
-a given shape*.  This module makes that decision a first-class, pluggable
-policy instead of a module-global selector threaded through every layer:
+The paper's contribution is *which implementation of a dense layer's GEMMs
+to run for a given shape*.  This module makes that decision a first-class,
+pluggable policy instead of a module-global selector threaded through
+every layer:
 
     with use_policy(FixedPolicy("XLA_TNN")):
         logits = lm.lm_forward(params, cfg, batch)   # every NT op -> XLA_TNN
 
-and widens it from *algorithm* to *(algorithm x tile config)*: every
-policy's ``select`` returns a ``Decision(name, config)`` — the candidate to
-run and, for tunable (Pallas) candidates, the ``(bm, bn, bk)`` VMEM tile to
-run it at (``config=None`` means the kernel's built-in default tiling).
+The selection space is the full *(op x shape x tile config)* product:
+every policy's ``select`` takes an ``OpKey`` (``core/opkey.py`` — the
+forward NT plus the backward NN/TN gradient GEMMs; legacy positional
+``select(m, n, k, dsize)`` calls are adapted and mean NT) and returns a
+``Decision(name, config)`` — the candidate to run and, for tunable
+(Pallas) candidates, the ``(bm, bn, bk)`` VMEM tile to run it at
+(``config=None`` means the kernel's built-in default tiling).
 
 Policies implement the ``SelectionPolicy`` protocol (``select`` + ``stats``)
 and are scoped with a ``contextvars.ContextVar``, so nested ``with`` blocks
 restore the outer policy on exit and concurrent threads / asyncio tasks see
 independent policies — the prerequisite for per-request policies in serving.
+One ``use_policy(...)`` scope governs all three GEMMs of every dense layer:
+``engine.dispatch`` is ``custom_vjp``-wrapped, and its backward rule
+rebuilds NN/TN OpKeys and re-enters dispatch (wrap the whole
+``value_and_grad`` call in the scope, not just the forward).
 
 The policy zoo:
 
@@ -53,6 +61,7 @@ from typing import (
 
 from .candidates import (
     CANDIDATES,
+    DEFAULT_BY_OP,
     Candidate,
     candidate_allowed,
     candidate_fits_memory,
@@ -60,8 +69,11 @@ from .candidates import (
     get_candidate,
 )
 from .hardware import TPU_V5E, HardwareSpec, host_spec
+from .opkey import OPS, OpKey, check_op, coerce_key
 
 __all__ = [
+    "OpKey",
+    "OPS",
     "Decision",
     "SelectionPolicy",
     "PolicyBase",
@@ -95,9 +107,10 @@ class Decision(NamedTuple):
 
 @runtime_checkable
 class SelectionPolicy(Protocol):
-    """Anything that can pick a (candidate, tile config) for an (m, n, k)
-    shape.  ``select`` returns a ``Decision`` (legacy policies returning a
-    bare name string are normalised by the dispatch engine).
+    """Anything that can pick a (candidate, tile config) for an ``OpKey``.
+    ``select`` returns a ``Decision`` (legacy policies taking positional
+    (m, n, k, dsize) args and/or returning a bare name string are adapted
+    by the dispatch engine, with a deprecation warning).
 
     ``stats`` must expose ``calls: int`` and ``by_candidate: Dict[str, int]``
     (see ``selector.SelectorStats``) so dispatch decisions stay observable.
@@ -105,12 +118,13 @@ class SelectionPolicy(Protocol):
 
     stats: "object"
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> "Decision":
+    def select(self, key, n=None, k=None, dsize: int = 4) -> "Decision":
         ...
 
 
 class PolicyBase:
-    """Shared guards: the paper's OOM check + distributed-safety filter."""
+    """Shared guards: the paper's OOM check + distributed-safety and
+    op-support filters."""
 
     def __init__(
         self,
@@ -125,29 +139,67 @@ class PolicyBase:
         self.mem_budget_frac = mem_budget_frac
         self.stats = SelectorStats()
 
-    def _admissible(
-        self, cand: Candidate, m: int, n: int, k: int, dsize: int, config=None
-    ) -> bool:
+    def _admissible(self, cand: Candidate, key: OpKey, config=None) -> bool:
         return candidate_fits_memory(
-            cand, m, n, k, dsize, self.hardware.mem_gib, self.mem_budget_frac,
-            config=config,
-        ) and candidate_allowed(cand, self.distributed, config=config)
+            cand, key.m, key.n, key.k, key.dsize,
+            self.hardware.mem_gib, self.mem_budget_frac, config=config,
+            op=key.op,
+        ) and candidate_allowed(
+            cand, self.distributed, config=config, op=key.op
+        )
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
         raise NotImplementedError
 
 
 class FixedPolicy(PolicyBase):
-    """Always run one candidate — baselines and forced A/B arms.
+    """Always run one candidate per op — baselines and forced A/B arms.
 
-    An optional ``config`` forces one tile too (tunable candidates only):
+    Single-name form: ``FixedPolicy("PALLAS_NT")`` forces that candidate
+    for the op kinds it implements; other ops (e.g. the backward NN/TN
+    GEMMs of a training step) degrade to the op's XLA reference
+    (``DEFAULT_BY_OP``) so the forced arm can still train.  An optional
+    ``config`` forces one tile too (tunable candidates only):
     ``FixedPolicy("PALLAS_NT", config=(256, 256, 512))`` is the forced arm
     of a tile A/B test.
+
+    Op-qualified form: ``FixedPolicy(by_op={"NT": "XLA_NT", "NN":
+    ("PALLAS_NN", (128, 128, 128))})`` forces a (candidate, tile) per op —
+    the ``fixed:nt=...,nn=...`` spec grammar builds this.
     """
 
-    def __init__(self, name: str, config: Optional[Tuple[int, int, int]] = None, **kw):
+    def __init__(
+        self,
+        name: Optional[str] = None,
+        config: Optional[Tuple[int, int, int]] = None,
+        by_op: Optional[Dict[str, object]] = None,
+        **kw,
+    ):
         super().__init__(**kw)
+        if name is None and not by_op:
+            raise ValueError("FixedPolicy needs a candidate name or a by_op table")
+        if name is None and config is not None:
+            raise ValueError("FixedPolicy(config=...) needs a candidate name")
+        self.by_op: Dict[str, Tuple[str, Optional[Tuple[int, int, int]]]] = {}
+        for op, entry in (by_op or {}).items():
+            check_op(op)
+            cand_name, cfg = entry if isinstance(entry, tuple) else (entry, None)
+            self.by_op[op] = (cand_name, self._validate(cand_name, cfg, op=op))
+        self.name = name
+        self.config = None
+        if name is not None:
+            self.config = self._validate(name, config)
+            for op in get_candidate(name).ops:
+                self.by_op.setdefault(op, (name, self.config))
+
+    @staticmethod
+    def _validate(name, config, op: Optional[str] = None):
         cand = get_candidate(name)  # fail fast on unknown names
+        if op is not None and op not in cand.ops:
+            raise ValueError(
+                f"candidate {name!r} does not implement op {op!r} "
+                f"(implements {cand.ops})"
+            )
         if config is not None:
             from repro.kernels.tiling import validate_config
 
@@ -157,18 +209,28 @@ class FixedPolicy(PolicyBase):
                     f"candidate {name!r} is not tunable; it cannot take a "
                     f"forced tile config {config}"
                 )
-        self.name = name
-        self.config = config
+        return config
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
-        decision = Decision(self.name, self.config)
-        self.stats.record(self.name, self.config)
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+        key = coerce_key(key, n, k, dsize)
+        entry = self.by_op.get(key.op)
+        if entry is None:
+            # op not forced (e.g. a backward GEMM under a forced forward
+            # arm): run the op's reference instead of mis-dispatching
+            entry = (DEFAULT_BY_OP[key.op], None)
+        decision = Decision(*entry)
+        self.stats.record(decision.name, decision.config, op=key.op)
         return decision
 
     def __repr__(self):
-        if self.config is not None:
+        if self.name is not None and self.config is not None:
             return f"FixedPolicy({self.name!r}, config={self.config})"
-        return f"FixedPolicy({self.name!r})"
+        if self.name is not None:
+            return f"FixedPolicy({self.name!r})"
+        table = {
+            op: Decision(*entry).label() for op, entry in self.by_op.items()
+        }
+        return f"FixedPolicy(by_op={table})"
 
 
 class ModelPolicy:
@@ -199,12 +261,19 @@ class ModelPolicy:
     def stats(self):
         return self.selector.stats
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
-        name = self.selector.select(m, n, k, dsize=dsize)
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+        key = coerce_key(key, n, k, dsize)
+        name = self.selector.select(key)
         # tile_config_for validates the learned tile for *this* dispatch
         # (tunability + VMEM at this dsize): an infeasible artifact entry
-        # degrades to the kernel default, never to a VMEM bust
-        return Decision(name, self.selector.tile_config_for(name, dsize))
+        # degrades to the kernel default, never to a VMEM bust.  Per-shape
+        # table entries (nearest-shape fallback) win over the modal tile.
+        return Decision(
+            name,
+            self.selector.tile_config_for(
+                name, key.dsize, op=key.op, mnk=key.mnk()
+            ),
+        )
 
     def __repr__(self):
         return f"ModelPolicy(mode={self.selector.mode!r}, hw={self.selector.hardware.name!r})"
@@ -234,9 +303,9 @@ class AnalyticPolicy(PolicyBase):
         self.sigma = sigma
         # keyed by platform too: admissibility depends on jax.default_backend(),
         # so a decision cached under one backend must not replay on another
-        self._cache: Dict[Tuple[str, int, int, int, int], Decision] = {}
+        self._cache: Dict[Tuple[str, OpKey], Decision] = {}
 
-    def _best_config(self, cand: Candidate, m: int, n: int, k: int, dsize: int):
+    def _best_config(self, cand: Candidate, key: OpKey):
         """Roofline-ranked tile for a tunable candidate (None otherwise)."""
         from repro.kernels.tiling import enumerate_tile_configs
 
@@ -247,38 +316,40 @@ class AnalyticPolicy(PolicyBase):
         best_cfg, best_t = None, None
         # the raw enumeration, not the shortlist: ranking happens right
         # here on self.hardware, so a pre-sorted list would be wasted work
-        for cfg in enumerate_tile_configs(m, n, k, dsize):
-            if not self._admissible(cand, m, n, k, dsize, config=cfg):
+        for cfg in enumerate_tile_configs(key.m, key.n, key.k, key.dsize):
+            if not self._admissible(cand, key, config=cfg):
                 continue
-            t = tile_time(self.hardware, m, n, k, dsize, cfg)
+            t = tile_time(self.hardware, key.m, key.n, key.k, key.dsize, cfg)
             if best_t is None or t < best_t:
                 best_t, best_cfg = t, cfg
         return best_cfg
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
         from .simulate import simulate_time
 
-        key = (current_platform(), m, n, k, dsize)
-        decision = self._cache.get(key)
+        key = coerce_key(key, n, k, dsize)
+        cache_key = (current_platform(), key)
+        decision = self._cache.get(cache_key)
         if decision is None:
             best_t, name = None, None
             for cand_name in self.candidates:
                 cand = get_candidate(cand_name)
-                if not self._admissible(cand, m, n, k, dsize):
+                if not self._admissible(cand, key):
                     continue
                 t = simulate_time(
-                    self.hardware, cand.sim_algo, m, n, k, dsize, sigma=self.sigma
+                    self.hardware, cand.sim_algo, key.m, key.n, key.k,
+                    key.dsize, sigma=self.sigma,
                 )
                 if best_t is None or t < best_t:
                     best_t, name = t, cand_name
-            if name is None:  # nothing admissible: paper's NT fallback
-                decision = Decision("XLA_NT", None)
+            if name is None:  # nothing admissible: the op's reference fallback
+                decision = Decision(DEFAULT_BY_OP[key.op], None)
             else:
                 decision = Decision(
-                    name, self._best_config(get_candidate(name), m, n, k, dsize)
+                    name, self._best_config(get_candidate(name), key)
                 )
-            self._cache[key] = decision
-        self.stats.record(decision.name, decision.config)
+            self._cache[cache_key] = decision
+        self.stats.record(decision.name, decision.config, op=key.op)
         return decision
 
     def __repr__(self):
@@ -304,13 +375,24 @@ class CascadePolicy(PolicyBase):
             get_candidate(name)
         self.names = names
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
-        chosen = self.names[-1]
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+        key = coerce_key(key, n, k, dsize)
+        chosen = None
         for name in self.names:
-            if self._admissible(get_candidate(name), m, n, k, dsize):
+            if self._admissible(get_candidate(name), key):
                 chosen = name
                 break
-        self.stats.record(chosen)
+        if chosen is None:
+            # unconditional fallback: the last entry when it can run this op
+            # at all, else the op's reference (a cascade written for the
+            # forward op must not mis-dispatch a backward GEMM)
+            last = self.names[-1]
+            chosen = (
+                last
+                if key.op in get_candidate(last).ops
+                else DEFAULT_BY_OP[key.op]
+            )
+        self.stats.record(chosen, op=key.op)
         return Decision(chosen, None)
 
     def __repr__(self):
@@ -389,7 +471,7 @@ class AutotunePolicy(PolicyBase):
         self._unmeasurable: set = set()
         # platform-keyed decision memo (same pattern as MTNNSelector /
         # AnalyticPolicy): repeat selects skip the re-filter + argmin scan
-        self._decisions: Dict[Tuple[str, int, int, int, int], Decision] = {}
+        self._decisions: Dict[Tuple[str, OpKey], Decision] = {}
 
     def _can_measure(self, dtype: Optional[str], flops: float) -> bool:
         from .measure import measurement_supported
@@ -402,36 +484,39 @@ class AutotunePolicy(PolicyBase):
             and measurement_supported()
         )
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> Decision:
+    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
         from repro.kernels.tiling import parse_config_key
 
         from .measure import DTYPE_BY_DSIZE, measure_candidates
 
+        key = coerce_key(key, n, k, dsize)
         platform = current_platform()
-        memo_key = (platform, m, n, k, dsize)
+        memo_key = (platform, key)
         hit = self._decisions.get(memo_key)
         if hit is not None:
             self.n_cache_hits += 1
-            self.stats.record(hit.name, hit.config)
+            self.stats.record(hit.name, hit.config, op=key.op)
             return hit
-        dtype = DTYPE_BY_DSIZE.get(dsize)
-        key = (
+        dtype = DTYPE_BY_DSIZE.get(key.dsize)
+        cache_key = (
             platform,
             self.hardware.name,
-            dtype or f"{8 * dsize}-bit",
-            m,
-            n,
-            k,
+            dtype or f"{8 * key.dsize}-bit",
+            key.op,
+            key.m,
+            key.n,
+            key.k,
         )
-        times = self.cache.get(key)
+        times = self.cache.get(cache_key)
         if times is not None:
             self.n_cache_hits += 1
-        elif key not in self._unmeasurable and self._can_measure(
-            dtype, 2.0 * m * n * k
+        elif cache_key not in self._unmeasurable and self._can_measure(
+            dtype, 2.0 * key.m * key.n * key.k
         ):
             times = measure_candidates(
-                m, n, k,
+                key.m, key.n, key.k,
                 dtype=dtype,
+                op=key.op,
                 candidates=self.candidates,
                 hardware=self.hardware,
                 distributed=self.distributed,
@@ -442,18 +527,19 @@ class AutotunePolicy(PolicyBase):
                 max_tile_configs=self.max_tile_configs,
             )
             if times:
-                self.cache.put(key, times)
+                self.cache.put(cache_key, times)
                 self.n_measured += 1
                 if self.cache.path:
                     self.cache.save()
             else:
-                self._unmeasurable.add(key)
+                self._unmeasurable.add(cache_key)
         decision = None
         if times:
             # re-filter at use time: cached entries may predate a registry /
             # distributed-mode / candidate-restriction change, and pairs the
             # policy would not measure itself must never dispatch — the
             # admissibility check is config-aware (VMEM budget included)
+            # and op-aware (an NT entry can never answer an NN key)
             best = None
             for cand_name, cfgs in times.items():
                 if cand_name not in self.candidates or cand_name not in CANDIDATES:
@@ -464,7 +550,7 @@ class AutotunePolicy(PolicyBase):
                         cfg = parse_config_key(cfg_key)
                     except ValueError:
                         continue  # corrupt/foreign key: never dispatch it
-                    if not self._admissible(cand, m, n, k, dsize, config=cfg):
+                    if not self._admissible(cand, key, config=cfg):
                         continue
                     if best is None or t < best:
                         best, decision = t, Decision(cand_name, cfg)
@@ -474,8 +560,8 @@ class AutotunePolicy(PolicyBase):
             # fallback decisions are not memoized: AnalyticPolicy has its
             # own platform-keyed memo, and a later measurement may succeed
             self.n_fallbacks += 1
-            decision = self.fallback.select(m, n, k, dsize)
-        self.stats.record(decision.name, decision.config)
+            decision = self.fallback.select(key)
+        self.stats.record(decision.name, decision.config, op=key.op)
         return decision
 
     def __repr__(self):

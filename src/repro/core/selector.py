@@ -2,14 +2,19 @@
 
 Differences from the paper's runtime flow (and why):
   * JAX shapes are static under ``jit``; the predictor therefore runs once
-    per distinct (m, n, k) at *trace* time and never in the compiled step.
-    The paper's 0.005 ms per-call prediction overhead becomes exactly zero.
+    per distinct (op, m, n, k) at *trace* time and never in the compiled
+    step.  The paper's 0.005 ms per-call prediction overhead becomes
+    exactly zero.
   * The paper's OOM guard ("if B^T does not fit, use NT") is preserved: the
     selector refuses extra-memory candidates when the estimated resident
     bytes would exceed the memory budget.
   * Binary (paper-faithful) and k-way (beyond-paper) modes share this API.
+  * The selection space is the full *op space* (``core/opkey.py``): the
+    forward NT plus the backward NN/TN gradient GEMMs, each with its own
+    binary pair (the paper's direct-vs-transpose dichotomy generalised)
+    and its own learned tile table.
 
-Dispatch now goes through ``core.engine`` + ``core.policy`` (the selector
+Dispatch goes through ``core.engine`` + ``core.policy`` (the selector
 is wrapped by ``ModelPolicy``; the ``select_matmul`` shim was removed
 after its deprecation release).
 
@@ -23,6 +28,7 @@ from __future__ import annotations
 
 import functools
 import json
+import math
 import os
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
@@ -30,7 +36,9 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .candidates import (
+    BINARY_PAIRS_BY_OP,
     CANDIDATES,
+    DEFAULT_BY_OP,
     PAPER_PAIR,
     candidate_allowed,
     candidate_fits_memory,
@@ -39,6 +47,7 @@ from .candidates import (
 from .features import make_features
 from .gbdt import GBDTClassifier
 from .hardware import SIMULATED_CHIPS, TPU_V5E, HardwareSpec
+from .opkey import OpKey, check_op, coerce_key, parse_shape_key, shape_key
 from .train_model import KWayModel
 
 __all__ = [
@@ -56,26 +65,39 @@ DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
 #   v0 (unversioned): {mode, binary_pair, hardware, model}
 #   v1: + schema_version; otherwise identical payload layout.
 #   v2: + tile_configs — per-candidate learned tile config ("BMxBNxBK"
-#       strings, from autotune-cache training); v0/v1 migrate with an
-#       empty table (kernel-default tiling).
-SCHEMA_VERSION = 2
+#       strings, from autotune-cache training).
+#   v3: op-space — binary_pair becomes per-op ``binary_pairs`` and the
+#       modal tile_configs table becomes per-op, *per-shape* ``tile_tables``
+#       ({op: {candidate: {"modal": key, "by_shape": {"MxNxK": key}}}}
+#       with nearest-shape fallback at lookup).  v2 artifacts migrate with
+#       their modal table under op "NT"; v0/v1 with empty tables.
+SCHEMA_VERSION = 3
 
 
 @dataclass
 class SelectorStats:
-    """Per-candidate (and per-(candidate, tile-config)) decision counts."""
+    """Per-candidate, per-(candidate, tile-config) and per-op decision
+    counts."""
 
     calls: int = 0
     by_candidate: Dict[str, int] = None
     by_decision: Dict[str, int] = None  # "NAME" or "NAME@BMxBNxBK"
+    by_op: Dict[str, Dict[str, int]] = None  # op -> decision label -> count
 
     def __post_init__(self):
         if self.by_candidate is None:
             self.by_candidate = {}
         if self.by_decision is None:
             self.by_decision = {}
+        if self.by_op is None:
+            self.by_op = {}
 
-    def record(self, name: str, config: Optional[Tuple[int, int, int]] = None):
+    def record(
+        self,
+        name: str,
+        config: Optional[Tuple[int, int, int]] = None,
+        op: str = "NT",
+    ):
         self.calls += 1
         self.by_candidate[name] = self.by_candidate.get(name, 0) + 1
         if config is None:
@@ -85,16 +107,40 @@ class SelectorStats:
 
             label = f"{name}@{config_key(config)}"
         self.by_decision[label] = self.by_decision.get(label, 0) + 1
+        per_op = self.by_op.setdefault(op, {})
+        per_op[label] = per_op.get(label, 0) + 1
 
     def reset(self) -> None:
         """Zero the counters (between serve requests / benchmark phases)."""
         self.calls = 0
         self.by_candidate = {}
         self.by_decision = {}
+        self.by_op = {}
+
+
+def _nearest_shape_key(by_shape: Dict[str, str], mnk) -> Optional[str]:
+    """The tile-table entry of the recorded shape nearest to ``mnk`` in
+    log-space (matmul cost scales multiplicatively, so log distance is the
+    right metric).  Returns the config key, or None on an empty/corrupt
+    table."""
+    best_d, best_ck = None, None
+    for sk, ck in by_shape.items():
+        try:
+            m2, n2, k2 = parse_shape_key(sk)
+        except ValueError:
+            continue
+        d = sum(
+            abs(math.log(max(a, 1) / max(b, 1)))
+            for a, b in zip(mnk, (m2, n2, k2))
+        )
+        if best_d is None or d < best_d:
+            best_d, best_ck = d, ck
+    return best_ck
 
 
 class MTNNSelector:
-    """Selects one candidate implementation of ``C = A @ B^T`` per shape."""
+    """Selects one candidate implementation per ``OpKey`` — forward NT and
+    backward NN/TN GEMMs alike."""
 
     def __init__(
         self,
@@ -102,39 +148,90 @@ class MTNNSelector:
         hardware: Optional[HardwareSpec] = None,
         mode: str = "binary",
         binary_pair: Tuple[str, str] = PAPER_PAIR,
+        binary_pairs: Optional[Dict[str, Tuple[str, str]]] = None,
         distributed: bool = False,
         mem_budget_frac: float = 0.9,
         tile_configs: Optional[Dict[str, str]] = None,
+        tile_tables: Optional[Dict[str, Dict[str, Dict]]] = None,
     ):
         self.model = model
         self.hardware = hardware or TPU_V5E
         self.mode = mode
-        self.binary_pair = binary_pair
+        # per-op binary pairs; `binary_pair` keeps naming the NT pair (the
+        # paper's setting and the pre-op-space API)
+        self.binary_pairs: Dict[str, Tuple[str, str]] = dict(BINARY_PAIRS_BY_OP)
+        self.binary_pairs["NT"] = tuple(binary_pair)
+        for op, pair in (binary_pairs or {}).items():
+            self.binary_pairs[check_op(op)] = tuple(pair)
         self.distributed = distributed
         self.mem_budget_frac = mem_budget_frac
-        # per-candidate learned tile config ("BMxBNxBK"), e.g. the modal
-        # autotune winner (measure.top_configs_by_candidate); ModelPolicy
-        # attaches it to decisions so a selector trained from measurements
-        # dispatches tuned tiles, not just tuned algorithms
-        self.tile_configs: Dict[str, str] = dict(tile_configs or {})
+        # per-op, per-candidate learned tile tables: {"modal": "BMxBNxBK",
+        # "by_shape": {"MxNxK": "BMxBNxBK"}} — per-shape entries win (with
+        # nearest-shape fallback), the modal key is the shape-independent
+        # summary.  The legacy `tile_configs` kwarg ({name: key}) is sugar
+        # for modal-only NT entries.
+        self.tile_tables: Dict[str, Dict[str, Dict]] = {}
+        for op, table in (tile_tables or {}).items():
+            check_op(op)
+            self.tile_tables[op] = {
+                name: {
+                    "modal": entry.get("modal"),
+                    "by_shape": dict(entry.get("by_shape") or {}),
+                }
+                for name, entry in table.items()
+            }
+        for name, ck in (tile_configs or {}).items():
+            self.tile_tables.setdefault("NT", {}).setdefault(
+                name, {"modal": None, "by_shape": {}}
+            )["modal"] = ck
         self.stats = SelectorStats()
         # keyed by platform too: admissibility depends on jax.default_backend(),
         # so a decision cached under one backend must not replay on another
-        self._cache: Dict[Tuple[str, int, int, int, int], str] = {}
+        self._cache: Dict[Tuple[str, OpKey], str] = {}
+
+    @property
+    def binary_pair(self) -> Tuple[str, str]:
+        """The NT pair (pre-op-space API compatibility)."""
+        return self.binary_pairs["NT"]
+
+    @property
+    def tile_configs(self) -> Dict[str, str]:
+        """Modal NT tiles (pre-op-space API compatibility view)."""
+        return {
+            name: entry["modal"]
+            for name, entry in self.tile_tables.get("NT", {}).items()
+            if entry.get("modal")
+        }
 
     def tile_config_for(
-        self, name: str, dsize: int = 4
+        self,
+        name: str,
+        dsize: int = 4,
+        op: str = "NT",
+        mnk: Optional[Tuple[int, int, int]] = None,
     ) -> Optional[Tuple[int, int, int]]:
-        """The learned tile for a candidate, parsed and feasibility-checked
-        for a dispatch at ``dsize``; None when the artifact carries none
-        (kernel default), the entry is malformed, the candidate is no
-        longer tunable, or the tile — measured at training dtype — would
+        """The learned tile for a candidate at one dispatch: the per-shape
+        entry for ``mnk`` (exact, else nearest recorded shape in log
+        space), else the modal summary; parsed and feasibility-checked for
+        a dispatch at ``dsize``.  None when the artifact carries nothing
+        usable (kernel default), the entry is malformed, the candidate is
+        no longer tunable, or the tile — measured at training dtype — would
         bust the VMEM budget at this element size."""
-        key = self.tile_configs.get(name)
-        if not key:
+        entry = self.tile_tables.get(op, {}).get(name)
+        if not entry:
             return None
         from repro.kernels.tiling import fits_vmem, parse_config_key
 
+        key = None
+        by_shape = entry.get("by_shape") or {}
+        if mnk is not None and by_shape:
+            key = by_shape.get(shape_key(mnk)) or _nearest_shape_key(
+                by_shape, mnk
+            )
+        if key is None:
+            key = entry.get("modal")
+        if not key:
+            return None
         try:
             config = parse_config_key(key)
         except ValueError:
@@ -149,44 +246,59 @@ class MTNNSelector:
         return config
 
     # -- decision ----------------------------------------------------------
-    def _fits(self, cand, m: int, n: int, k: int, dsize: int) -> bool:
+    def _fits(self, cand, key: OpKey) -> bool:
         return candidate_fits_memory(
-            cand, m, n, k, dsize, self.hardware.mem_gib, self.mem_budget_frac
+            cand, key.m, key.n, key.k, key.dsize,
+            self.hardware.mem_gib, self.mem_budget_frac, op=key.op,
         )
 
-    def _allowed(self, name: str) -> bool:
-        return candidate_allowed(CANDIDATES[name], self.distributed)
+    def _allowed(self, name: str, op: str) -> bool:
+        return candidate_allowed(CANDIDATES[name], self.distributed, op=op)
 
-    def _admissible(self, name: str, m: int, n: int, k: int, dsize: int) -> bool:
-        return self._fits(CANDIDATES[name], m, n, k, dsize) and self._allowed(name)
+    def _admissible(self, name: str, key: OpKey) -> bool:
+        cand = CANDIDATES.get(name)
+        if cand is None:
+            return False
+        return self._fits(cand, key) and self._allowed(name, key.op)
 
-    def _fallback_candidate(self, m: int, n: int, k: int, dsize: int) -> str:
-        """The paper's NT fallback, hardened: prefer the pair's NT when it is
-        itself admissible, else the first admissible registered candidate
-        (NT can be platform-filtered or distributed-unsafe), else NT as the
-        terminal answer so dispatch always yields *something*."""
-        nt_name = self.binary_pair[0]
-        if self._admissible(nt_name, m, n, k, dsize):
-            return nt_name
-        for cand_name in CANDIDATES:
-            if self._admissible(cand_name, m, n, k, dsize):
+    def pair_for(self, op: str) -> Tuple[str, str]:
+        return self.binary_pairs.get(op) or BINARY_PAIRS_BY_OP[op]
+
+    def _fallback_candidate(self, key: OpKey) -> str:
+        """The paper's NT fallback, hardened and op-aware: prefer the op
+        pair's direct arm when it is itself admissible, else the first
+        admissible registered candidate for the op, else the op's XLA
+        reference as the terminal answer so dispatch always yields
+        *something* runnable."""
+        direct = self.pair_for(key.op)[0]
+        if self._admissible(direct, key):
+            return direct
+        for cand_name, cand in CANDIDATES.items():
+            if key.op in cand.ops and self._admissible(cand_name, key):
                 return cand_name
-        return nt_name
+        return DEFAULT_BY_OP[key.op]
 
-    def select(self, m: int, n: int, k: int, dsize: int = 4) -> str:
-        """Candidate name for this shape.  O(1) features, O(trees*depth) walk."""
-        key = (current_platform(), m, n, k, dsize)
-        hit = self._cache.get(key)
+    def select(self, key, n=None, k=None, dsize: int = 4) -> str:
+        """Candidate name for an ``OpKey`` (legacy positional (m, n, k[,
+        dsize]) calls mean the forward NT op).  O(1) features,
+        O(trees*depth) walk."""
+        key = coerce_key(key, n, k, dsize)
+        cache_key = (current_platform(), key)
+        hit = self._cache.get(cache_key)
         if hit is not None:
-            self.stats.record(hit, self.tile_config_for(hit, dsize))
+            self.stats.record(
+                hit,
+                self.tile_config_for(hit, key.dsize, op=key.op, mnk=key.mnk()),
+                op=key.op,
+            )
             return hit
-        x = make_features(self.hardware, m, n, k)[None, :]
+        x = make_features(self.hardware, key.m, key.n, key.k, op=key.op)[None, :]
         if self.mode == "binary":
-            nt_name, tnn_name = self.binary_pair
+            direct_name, alt_name = self.pair_for(key.op)
             label = int(self.model.predict(x)[0])
-            name = nt_name if label == 1 else tnn_name
-            if not self._admissible(name, m, n, k, dsize):
-                name = self._fallback_candidate(m, n, k, dsize)
+            name = direct_name if label == 1 else alt_name
+            if not self._admissible(name, key):
+                name = self._fallback_candidate(key)
         else:  # k-way
             order = np.argsort(self.model.predict_times(x)[0])
             name = None
@@ -195,15 +307,21 @@ class MTNNSelector:
                 mapped = _sim_to_candidate(cand_name)
                 if mapped is None:
                     continue
-                if self._admissible(mapped, m, n, k, dsize):
+                if key.op not in CANDIDATES[mapped].ops:
+                    continue
+                if self._admissible(mapped, key):
                     name = mapped
                     break
             if name is None:
-                name = self._fallback_candidate(m, n, k, dsize)
-        self._cache[key] = name
+                name = self._fallback_candidate(key)
+        self._cache[cache_key] = name
         # record with the learned tile the wrapping ModelPolicy will attach,
         # so dispatch_report shows `NAME@BMxBNxBK` rows for tiled dispatches
-        self.stats.record(name, self.tile_config_for(name, dsize))
+        self.stats.record(
+            name,
+            self.tile_config_for(name, key.dsize, op=key.op, mnk=key.mnk()),
+            op=key.op,
+        )
         return name
 
     def reset_stats(self) -> None:
@@ -217,10 +335,21 @@ class MTNNSelector:
         payload = {
             "schema_version": SCHEMA_VERSION,
             "mode": self.mode,
-            "binary_pair": list(self.binary_pair),
+            "binary_pairs": {
+                op: list(pair) for op, pair in self.binary_pairs.items()
+            },
             "hardware": self.hardware.name,
             "model": self.model.to_dict(),
-            "tile_configs": dict(self.tile_configs),
+            "tile_tables": {
+                op: {
+                    name: {
+                        "modal": entry.get("modal"),
+                        "by_shape": dict(entry.get("by_shape") or {}),
+                    }
+                    for name, entry in table.items()
+                }
+                for op, table in self.tile_tables.items()
+            },
         }
         with open(path, "w") as fh:
             json.dump(payload, fh)
@@ -240,13 +369,20 @@ class MTNNSelector:
         else:
             model = GBDTClassifier.from_dict(model_d)
         hw = hardware or SIMULATED_CHIPS.get(payload.get("hardware", ""), TPU_V5E)
+        # tolerate hand-authored v3 payloads omitting the field: the
+        # standard per-op pairs are the documented default
+        pairs = {
+            op: tuple(pair)
+            for op, pair in payload.get("binary_pairs", {}).items()
+        }
         return MTNNSelector(
             model,
             hardware=hw,
             mode=payload.get("mode", "binary"),
-            binary_pair=tuple(payload.get("binary_pair", PAPER_PAIR)),
+            binary_pair=pairs.get("NT", PAPER_PAIR),
+            binary_pairs=pairs,
             distributed=distributed,
-            tile_configs=payload.get("tile_configs", {}),
+            tile_tables=payload.get("tile_tables", {}),
         )
 
 
@@ -256,9 +392,12 @@ def _migrate_payload(payload: Dict) -> Dict:
     v0 artifacts predate the ``schema_version`` field; their layout is
     otherwise the v1 layout, so migration stamps the version (and fills the
     fields v0 writers were allowed to omit).  v1 artifacts predate the
-    tile-config label space; they migrate with an empty ``tile_configs``
-    table (kernel-default tiling — exactly how a v1 build dispatched).
-    Unknown *newer* versions are rejected rather than misread.
+    tile-config label space; they gain an empty tile table.  v2 artifacts
+    predate the op space: their single ``binary_pair`` becomes the NT entry
+    of ``binary_pairs`` (backward ops get the standard per-op pairs) and
+    their modal ``tile_configs`` become modal-only NT ``tile_tables`` —
+    exactly how a v2 build dispatched, with backward ops at the kernel
+    default.  Unknown *newer* versions are rejected rather than misread.
     """
     version = payload.get("schema_version", 0)
     if version > SCHEMA_VERSION:
@@ -275,6 +414,18 @@ def _migrate_payload(payload: Dict) -> Dict:
         payload = dict(payload)
         payload.setdefault("tile_configs", {})
         payload["schema_version"] = 2
+    if payload["schema_version"] < 3:
+        payload = dict(payload)
+        pairs = dict(BINARY_PAIRS_BY_OP)
+        pairs["NT"] = tuple(payload.get("binary_pair", PAPER_PAIR))
+        payload["binary_pairs"] = {op: list(p) for op, p in pairs.items()}
+        payload["tile_tables"] = {
+            "NT": {
+                name: {"modal": ck, "by_shape": {}}
+                for name, ck in payload.get("tile_configs", {}).items()
+            }
+        }
+        payload["schema_version"] = 3
     return payload
 
 
@@ -285,6 +436,9 @@ def _sim_to_candidate(sim_name: str) -> Optional[str]:
         "TNN": "XLA_TNN",
         "TNN_FUSED": "PALLAS_TNN_FUSED",
         "XLA_DOT": "XLA_NT",
+        "NN_DIRECT": "XLA_NN",
+        "TN_DIRECT": "XLA_TN",
+        "TN_VIA_NN": "PALLAS_TN",
         # already-candidate names pass through
         **{n: n for n in CANDIDATES},
     }

@@ -42,10 +42,20 @@ __all__ = [
     "mxu_efficiency",
     "simulate_time",
     "tile_time",
+    "transpose_tile_time",
     "SIM_ALGOS",
+    "OP_SIM_ALGOS",
 ]
 
 SIM_ALGOS = ("NT_DIRECT", "TNN", "TNN_FUSED", "XLA_DOT")
+
+# Arms for the backward ops (opkey.OPS): the data-gradient NN is
+# layout-clean; the weight-gradient TN either feeds the MXU with an
+# in-kernel re-orientation of A (direct) or materialises A^T first (the
+# paper's TNN move applied to the gradient).  ``simulate_time`` accepts
+# these in addition to SIM_ALGOS; the paper-grid dataset builder keeps
+# sweeping only the NT arms.
+OP_SIM_ALGOS = ("NN_DIRECT", "TN_DIRECT", "TN_VIA_NN")
 
 _MXU = 128  # MXU systolic array edge
 _DEFAULT_BLOCK = (512, 512, 512)  # bm, bn, bk used by our Pallas kernels
@@ -123,6 +133,33 @@ def simulate_time(
             hw.name, algo, m, n, k, sigma
         )
 
+    if algo == "NN_DIRECT":
+        # layout-clean matmul: both operands feed the MXU in native
+        # orientation, no re-orientation term at all.
+        return _matmul_time(hw, m, n, k, dsize, 0.97) * _noise(
+            hw.name, algo, m, n, k, sigma
+        )
+
+    if algo == "TN_DIRECT":
+        # A:(k,m) is re-oriented in-kernel; its k-strip is re-read (and
+        # re-shuffled) once per n-tile — the NT_DIRECT inefficiency with
+        # the roles of the operands swapped.
+        n_tiles_n = math.ceil(n / bn)
+        t_tr = (m * k * n_tiles_n) * dsize / (bw * 0.25)
+        eff_scale = 0.85 if k < 512 else 0.95
+        return (_matmul_time(hw, m, n, k, dsize, eff_scale) + t_tr) * _noise(
+            hw.name, algo, m, n, k, sigma
+        )
+
+    if algo == "TN_VIA_NN":
+        # materialise A^T (m*k elements through HBM), then a clean NN —
+        # the TNN schedule applied to the weight-gradient GEMM.
+        t_tr = (2.0 * m * k * dsize) / (bw * hw.transpose_bw_frac)
+        t_alloc = 5e-6 + (m * k * dsize) * 2e-15
+        return (t_tr + t_alloc + _matmul_time(hw, m, n, k, dsize, 0.97)) * _noise(
+            hw.name, algo, m, n, k, sigma
+        )
+
     if algo in ("NT_DIRECT", "TNN_FUSED", "XLA_DOT"):
         # per-B-block in-kernel re-orientation, paid once per m-tile.
         n_tiles_m = math.ceil(m / bm)
@@ -180,6 +217,28 @@ def tile_time(
     )
     steps = (mp // bm) * (np_ // bn) * (kp // bk)
     return max(t_compute, t_memory) + steps * step_overhead_us * 1e-6
+
+
+def transpose_tile_time(
+    hw: HardwareSpec,
+    rows: int,
+    cols: int,
+    dsize: int,
+    block: Tuple[int, int],
+    step_overhead_us: float = 0.1,
+) -> float:
+    """Roofline estimate of the out-of-place transpose at a (b_rows,
+    b_cols) tile — the 2-D analogue of ``tile_time``, and deliberately
+    *relative* in the same way: padded-extent traffic at the transpose
+    bandwidth fraction plus a per-grid-step overhead that charges tiny
+    tiles for their step count.  Ranks the transpose autotune shortlist
+    (``kernels.tiling.transpose_config_space``)."""
+    br, bc = block
+    rp = math.ceil(rows / br) * br
+    cp = math.ceil(cols / bc) * bc
+    t_mem = (2.0 * rp * cp * dsize) / (hw.mem_bw_gbps * 1e9 * hw.transpose_bw_frac)
+    steps = (rp // br) * (cp // bc)
+    return t_mem + steps * step_overhead_us * 1e-6
 
 
 def fits_memory(hw: HardwareSpec, m: int, n: int, k: int, dsize: int, tnn: bool) -> bool:

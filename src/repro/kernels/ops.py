@@ -5,7 +5,14 @@
   matmul_nt         C = A @ B^T        direct NT, in-kernel block transpose
   matmul_tnn        C = A @ B^T        paper's TNN: transpose kernel + NN
   matmul_tnn_fused  C = A @ B^T        fused NT, MXU-staged transpose
+  matmul_tn         C = A^T @ B        weight-gradient TN: transpose + NN
   transpose         B^T                out-of-place bandwidth-bound kernel
+
+The two-kernel schedules (``matmul_tnn``/``matmul_tn``) take an optional
+``tblock=(b_rows, b_cols)`` for their transpose stage — its 2-D config
+space is enumerated by ``tiling.transpose_config_space`` and autotuned by
+``core.measure.measure_transpose_configs``; by default the transpose tile
+derives from the matmul ``block`` as before.
 
 All validated against ``ref.py`` under interpret mode in
 ``tests/test_kernels.py``.
@@ -27,6 +34,7 @@ __all__ = [
     "matmul_nn",
     "matmul_nt",
     "matmul_tnn",
+    "matmul_tn",
     "matmul_tnn_fused",
 ]
 
@@ -36,19 +44,49 @@ def matmul_tnn(
     b: jax.Array,
     *,
     block: Optional[Tuple[int, int, int]] = None,
+    tblock: Optional[Tuple[int, int]] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """The paper's TNN (Algorithm 1): out-of-place transpose of B, then NN.
 
     Two kernel launches; B^T round-trips through HBM.  Wins when the
     one-off transpose cost amortises over a large m grid (Eq. 3).
+    ``tblock`` overrides the transpose stage's (b_n, b_k) tile; the default
+    derives it from the matmul ``block``.
     """
+    tb = tblock
     if block is not None:
         from .tiling import validate_config
 
         block = validate_config(block)  # same ValueError contract as the
-        tb = (block[1], block[2])       # single-kernel family members
-    else:
-        tb = None
+        if tb is None:                  # single-kernel family members
+            tb = (block[1], block[2])
     bt = transpose(b, block=tb, interpret=interpret)
     return matmul_nn(a, bt, block=block, interpret=interpret)
+
+
+def matmul_tn(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    tblock: Optional[Tuple[int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """TN (weight gradient): C = A^T @ B with A:(k,m), B:(k,n) -> (m,n).
+
+    The paper's transpose-then-clean-matmul move applied to the backward
+    weight-gradient GEMM: out-of-place transpose of A, then NN.  ``block``
+    is the NN stage's (bm, bn, bk) in *output* coordinates; ``tblock``
+    overrides the transpose stage's (b_k, b_m) tile (default: derived from
+    ``block``).
+    """
+    tb = tblock
+    if block is not None:
+        from .tiling import validate_config
+
+        block = validate_config(block)
+        if tb is None:  # A:(k,m) tiles as (contraction, output-m)
+            tb = (block[2], block[0])
+    at = transpose(a, block=tb, interpret=interpret)
+    return matmul_nn(at, b, block=block, interpret=interpret)

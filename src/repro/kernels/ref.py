@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["transpose", "matmul_nn", "matmul_nt", "matmul_tnn", "matmul_tnn_fused"]
+__all__ = [
+    "transpose",
+    "matmul_nn",
+    "matmul_nt",
+    "matmul_tn",
+    "matmul_tnn",
+    "matmul_tnn_fused",
+]
 
 
 def transpose(b: jax.Array) -> jax.Array:
@@ -29,6 +36,13 @@ def matmul_nt(a: jax.Array, b: jax.Array) -> jax.Array:
     """C = A @ B^T with A:(m,k), B:(n,k) -> C:(m,n); accumulate in f32."""
     return jax.lax.dot_general(
         a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def matmul_tn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A^T @ B with A:(k,m), B:(k,n) -> C:(m,n); accumulate in f32."""
+    return jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
     ).astype(a.dtype)
 
 

@@ -29,8 +29,10 @@ from .common import DEFAULT_BLOCK, MXU_EDGE, pick_block, round_up
 
 __all__ = [
     "TileConfig",
+    "TransposeConfig",
     "TILE_EDGES_MN",
     "TILE_EDGES_K",
+    "TRANSPOSE_TILE_EDGES",
     "DEFAULT_VMEM_BUDGET_BYTES",
     "DEFAULT_CONFIG_KEY",
     "config_key",
@@ -41,9 +43,14 @@ __all__ = [
     "default_config",
     "enumerate_tile_configs",
     "shortlist_tile_configs",
+    "transpose_vmem_bytes",
+    "default_transpose_config",
+    "enumerate_transpose_configs",
+    "transpose_config_space",
 ]
 
 TileConfig = Tuple[int, int, int]
+TransposeConfig = Tuple[int, int]
 
 # Candidate tile edges per axis.  bk may go deeper than the MN edges: a
 # longer contraction strip costs VMEM linearly but halves the number of
@@ -67,15 +74,17 @@ def config_key(config: Optional[TileConfig]) -> str:
     return "x".join(str(int(b)) for b in config)
 
 
-def parse_config_key(key: str) -> Optional[TileConfig]:
-    """Inverse of ``config_key``; ``'default'`` maps to None."""
+def parse_config_key(key: str, arity: int = 3):
+    """Inverse of ``config_key``; ``'default'`` maps to None.  ``arity`` is
+    the expected tuple length — 3 for the matmul tiles, 2 for the transpose
+    kernel's (b_rows, b_cols) tiles."""
     if key == DEFAULT_CONFIG_KEY:
         return None
     try:
         parts = tuple(int(p) for p in key.split("x"))
     except ValueError:
         raise ValueError(f"malformed tile-config key {key!r}") from None
-    if len(parts) != 3 or any(p <= 0 for p in parts):
+    if len(parts) != arity or any(p <= 0 for p in parts):
         raise ValueError(f"malformed tile-config key {key!r}")
     return parts
 
@@ -149,6 +158,90 @@ def enumerate_tile_configs(
     if fits_vmem(dflt, dsize, vmem_budget):
         configs.add(dflt)
     return tuple(sorted(configs))
+
+
+# -- the transpose kernel's 2-D (b_rows, b_cols) config space ----------------
+#
+# The out-of-place transpose (kernels/transpose.py) is bandwidth-bound and
+# tiles two axes, so its config space is 2-D.  It is the second stage of
+# the TNN/TN candidates and autotunable in its own right
+# (core.measure.measure_transpose_configs); ``transpose_config_space``
+# mirrors ``Candidate.config_space`` for the matmul kernels.
+
+# Wider edges than the matmul MN space: with no accumulator or second
+# operand in VMEM, deep strips are cheap and amortise grid overhead.
+TRANSPOSE_TILE_EDGES: Tuple[int, ...] = (128, 256, 512, 1024)
+
+
+def transpose_vmem_bytes(config: TransposeConfig, dsize: int) -> int:
+    """VMEM working set of one transpose grid step: double-buffered input
+    block plus the staged (re-oriented) output block."""
+    br, bc = config
+    return (2 + 2) * br * bc * dsize
+
+
+def default_transpose_config(rows: int, cols: int) -> TransposeConfig:
+    """What ``kernels.transpose`` runs when no block is supplied: the
+    DEFAULT_BLOCK-derived tile, clamped per axis."""
+    return (
+        pick_block(rows, DEFAULT_BLOCK[1]),
+        pick_block(cols, DEFAULT_BLOCK[2]),
+    )
+
+
+def enumerate_transpose_configs(
+    rows: int,
+    cols: int,
+    dsize: int = 4,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+    edges: Sequence[int] = TRANSPOSE_TILE_EDGES,
+) -> Tuple[TransposeConfig, ...]:
+    """Every admissible (b_rows, b_cols) for a (rows, cols) transpose:
+    MXU-aligned, clamped to the padded extents, VMEM-budgeted.  The clamped
+    default is a member whenever it fits."""
+    configs = {
+        (br, bc)
+        for br in _axis_tiles(rows, edges)
+        for bc in _axis_tiles(cols, edges)
+        if transpose_vmem_bytes((br, bc), dsize) <= vmem_budget
+    }
+    dflt = default_transpose_config(rows, cols)
+    if transpose_vmem_bytes(dflt, dsize) <= vmem_budget:
+        configs.add(dflt)
+    return tuple(sorted(configs))
+
+
+def transpose_config_space(
+    rows: int,
+    cols: int,
+    dsize: int = 4,
+    max_configs: int = 4,
+    hardware=None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> Tuple[TransposeConfig, ...]:
+    """The transpose autotune sweep list — the 2-D analogue of
+    ``shortlist_tile_configs``: the admissible space ranked by the roofline
+    transpose model (``simulate.transpose_tile_time``), truncated to
+    ``max_configs`` but always keeping the clamped default.
+    ``max_configs <= 0`` means no truncation."""
+    from repro.core.simulate import transpose_tile_time
+
+    if hardware is None:
+        from repro.core.hardware import TPU_V5E
+
+        hardware = TPU_V5E
+    configs = enumerate_transpose_configs(rows, cols, dsize, vmem_budget)
+    ranked = sorted(
+        configs,
+        key=lambda c: transpose_tile_time(hardware, rows, cols, dsize, c),
+    )
+    if 0 < max_configs < len(ranked):
+        keep = ranked[:max_configs]
+        dflt = default_transpose_config(rows, cols)
+        if dflt not in keep and dflt in configs:
+            keep = keep[:-1] + [dflt]
+        ranked = keep
+    return tuple(ranked)
 
 
 def shortlist_tile_configs(

@@ -99,7 +99,10 @@ def _dp(mesh: Mesh) -> int:
 
 def _policy_scope(policy: Optional[SelectionPolicy]):
     """Scope for step bodies: selection runs at trace time, so wrapping the
-    traced computation pins every NT dispatch in the step to ``policy``."""
+    traced computation pins every GEMM dispatch in the step to ``policy``.
+    For training steps the scope must cover the whole ``value_and_grad``
+    call, not just the forward — the engine's custom_vjp re-enters dispatch
+    for the backward NN/TN GEMMs at *backward-trace* time."""
     return use_policy(policy) if policy is not None else contextlib.nullcontext()
 
 
@@ -125,14 +128,19 @@ def make_train_step(
             g_shardings = named(mesh, param_specs(p_shapes, mesh))
 
     def loss_fn(params, mb):
-        with _policy_scope(policy):
-            loss, _ = lm.lm_loss(params, cfg, mb)
+        loss, _ = lm.lm_loss(params, cfg, mb)
         return loss
+
+    def _grad(params, mb):
+        # the scope wraps value_and_grad itself: backward NN/TN dispatches
+        # happen while the VJP is traced, after the forward body returned
+        with _policy_scope(policy):
+            return jax.value_and_grad(loss_fn)(params, mb)
 
     def train_step(state, batch):
         params = state["params"]
         if sc.accum == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            loss, grads = _grad(params, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         else:
             micro = _split_micro(batch, sc.accum, mesh)
@@ -146,7 +154,7 @@ def make_train_step(
 
             def body(carry, mb):
                 acc_loss, acc_g = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                l, g = _grad(params, mb)
                 if g_shardings is not None and sc.zero1_grads:
                     # land each microbatch's grads reduce-scattered
                     g = jax.tree.map(

@@ -1,12 +1,16 @@
 """Foundational layers.  Every projection stores its weight row-major
 ``(out, in)`` — the Caffe convention the paper studies — so the forward
 pass of each dense layer is *literally* the paper's NT operation
-``C = A @ B^T`` and routes through ``core.engine.dispatch_nt`` (MTNN).
+``C = A @ B^T`` and routes through ``core.engine.dispatch`` (MTNN).
 
-Which candidate implements each NT op is decided by the *scoped* selection
+Which candidate implements each GEMM is decided by the *scoped* selection
 policy (``core.policy.use_policy`` / ``current_policy``) — layers take no
 selector argument; wrap the forward pass (or the ``jit`` trace) in a
-``use_policy(...)`` block to change dispatch.
+``use_policy(...)`` block to change dispatch.  ``dispatch`` is
+``custom_vjp``-wrapped, so differentiating through a dense layer re-enters
+it for the backward data (NN) and weight (TN) gradient GEMMs: wrap the
+whole ``value_and_grad`` call in the scope and one policy governs all
+three GEMMs of every layer.
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import dispatch_nt
+from repro.core.engine import dispatch
 
 __all__ = [
     "Param",
@@ -54,8 +58,9 @@ def init_dense(
 
 
 def dense(p: Param, x: jax.Array) -> jax.Array:
-    """y = x @ W^T (+ b) — the paper's NT operation, policy-dispatched."""
-    y = dispatch_nt(x, p["w"])
+    """y = x @ W^T (+ b) — the paper's NT operation, policy-dispatched
+    (and, under ``jax.grad``, so are the NN/TN gradient GEMMs)."""
+    y = dispatch("NT", x, p["w"])
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -86,7 +91,7 @@ def embed(p: Param, tokens: jax.Array, scale_by_sqrt_dim: bool = False) -> jax.A
 
 def unembed(p: Param, x: jax.Array) -> jax.Array:
     """logits = x @ E^T — the LM head is an NT op over (vocab, d)."""
-    return dispatch_nt(x, p["emb"])
+    return dispatch("NT", x, p["emb"])
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:

@@ -61,7 +61,9 @@ class TestLearners:
 class TestDataset:
     def test_analytic_dataset_structure(self):
         ds = core.collect_analytic(lo=7, hi=10)
-        assert ds.X.shape[1] == 8  # paper's 8-dim features
+        # paper's 8-dim features + the op-kind column (all-NT here)
+        assert ds.X.shape[1] == 9
+        assert (ds.X[:, 8] == 0.0).all()
         assert set(np.unique(ds.y)) <= {-1, 1}
         assert len(ds) == len(ds.mnk) == len(ds.hw)
         # both classes present (the tradeoff is real)

@@ -1,0 +1,297 @@
+"""Op-space dispatch through ``jax.grad``: the engine's custom_vjp rebuilds
+NN/TN OpKeys and re-enters dispatch, so one ``use_policy`` scope governs
+the forward NT *and* both backward gradient GEMMs of every dense layer —
+and every candidate's gradient must match the XLA reference."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import engine
+from repro.core.measure import operand_shapes
+
+# Dims cross the adversarial set {1, 127, 129, 1000}: degenerate,
+# one-under-tile, one-over-tile, ragged multi-tile.
+RAGGED_SHAPES = [
+    (1, 127, 129),
+    (127, 129, 1000),
+    (129, 1000, 127),
+    (1000, 1, 129),
+]
+
+
+def _nt_grads(a, b, ct):
+    """Reference NT gradients: C = A @ B^T -> dA = CT @ B, dB = CT^T @ A."""
+    return ct @ b, ct.T @ a
+
+
+def _tol(k):
+    return dict(rtol=1e-4, atol=1e-3 * max(1.0, k**0.5))
+
+
+def _nt_candidates():
+    return [n for n, c in core.CANDIDATES.items() if "NT" in c.ops]
+
+
+class TestGradCorrectness:
+    @pytest.mark.parametrize("shape", RAGGED_SHAPES, ids=str)
+    def test_every_nt_candidate_grad_matches_reference(self, rng, shape):
+        """jax.grad through the custom_vjp dispatch agrees with the XLA
+        reference for every registered NT candidate on ragged shapes.
+        (The backward ops run each op's XLA reference under a single-name
+        FixedPolicy, so this isolates the forward candidate.)"""
+        m, n, k = shape
+        a = jnp.asarray(rng.randn(m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(n, k), jnp.float32)
+        ct = jnp.asarray(rng.randn(m, n), jnp.float32)
+
+        def loss(a, b):
+            return jnp.sum(core.dispatch("NT", a, b) * ct)
+
+        want_da, want_db = _nt_grads(np.asarray(a), np.asarray(b), np.asarray(ct))
+        for name in _nt_candidates():
+            with core.use_policy(core.FixedPolicy(name)):
+                da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+            np.testing.assert_allclose(
+                np.asarray(da), want_da, err_msg=f"{name}:dA", **_tol(k)
+            )
+            np.testing.assert_allclose(
+                np.asarray(db), want_db, err_msg=f"{name}:dB", **_tol(k)
+            )
+
+    @pytest.mark.parametrize("op", ["NN", "TN"], ids=str)
+    def test_backward_op_candidates_grad_and_forward(self, rng, op):
+        """The NN/TN entry points themselves: every candidate of the op
+        computes the reference function, and differentiating through them
+        re-enters dispatch (the op space is closed under d/dx)."""
+        m, n, k = 127, 65, 200
+        a_shape, b_shape = operand_shapes(op, m, n, k)
+        a = jnp.asarray(rng.randn(*a_shape), jnp.float32)
+        b = jnp.asarray(rng.randn(*b_shape), jnp.float32)
+        an, bn = np.asarray(a), np.asarray(b)
+        want = an @ bn if op == "NN" else an.T @ bn
+        for name, cand in core.CANDIDATES.items():
+            if op not in cand.ops:
+                continue
+            pol = core.FixedPolicy(by_op={op: name})
+            with core.use_policy(pol):
+                out = core.dispatch(op, a, b)
+                da, db = jax.grad(
+                    lambda a, b: jnp.sum(core.dispatch(op, a, b) ** 2),
+                    argnums=(0, 1),
+                )(a, b)
+            np.testing.assert_allclose(
+                np.asarray(out), want, err_msg=name, **_tol(k)
+            )
+            ct = 2.0 * want
+            if op == "NN":
+                want_da, want_db = ct @ bn.T, an.T @ ct
+            else:
+                want_da, want_db = bn @ ct.T, an @ ct
+            np.testing.assert_allclose(
+                np.asarray(da), want_da, err_msg=f"{name}:dA", **_tol(k)
+            )
+            np.testing.assert_allclose(
+                np.asarray(db), want_db, err_msg=f"{name}:dB", **_tol(k)
+            )
+
+    def test_one_scope_forces_all_three_pallas_gemms(self, rng):
+        """The op-qualified FixedPolicy pins every GEMM of a training step
+        to a Pallas kernel — and the gradients stay correct."""
+        pol = core.FixedPolicy(
+            by_op={"NT": "PALLAS_NT", "NN": "PALLAS_NN", "TN": "PALLAS_TN"}
+        )
+        a = jnp.asarray(rng.randn(129, 100), jnp.float32)
+        b = jnp.asarray(rng.randn(65, 100), jnp.float32)
+        ct = jnp.asarray(rng.randn(129, 65), jnp.float32)
+        with core.use_policy(pol):
+            da, db = jax.grad(
+                lambda a, b: jnp.sum(core.dispatch("NT", a, b) * ct),
+                argnums=(0, 1),
+            )(a, b)
+        want_da, want_db = _nt_grads(np.asarray(a), np.asarray(b), np.asarray(ct))
+        np.testing.assert_allclose(np.asarray(da), want_da, **_tol(100))
+        np.testing.assert_allclose(np.asarray(db), want_db, **_tol(100))
+        assert pol.stats.by_op["NT"] == {"PALLAS_NT": 1}
+        assert pol.stats.by_op["NN"] == {"PALLAS_NN": 1}
+        assert pol.stats.by_op["TN"] == {"PALLAS_TN": 1}
+
+    def test_grad_through_dense_layer_with_leading_dims(self, rng, key):
+        """The model-layer path: dense() flattens leading batch dims; its
+        VJP reshapes them back and the gradient matches XLA end to end."""
+        from repro.models.layers import dense, init_dense
+
+        p = init_dense(key, 7, 12)
+        x = jnp.asarray(rng.randn(2, 3, 12), jnp.float32)
+
+        def loss(p, x):
+            return jnp.sum(dense(p, x) ** 2)
+
+        def ref_loss(p, x):
+            return jnp.sum((x @ p["w"].T) ** 2)
+
+        with core.use_policy(core.AnalyticPolicy()):
+            gp, gx = jax.grad(loss, argnums=(0, 1))(p, x)
+        wgp, wgx = jax.grad(ref_loss, argnums=(0, 1))(p, x)
+        np.testing.assert_allclose(
+            np.asarray(gx), np.asarray(wgx), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(gp["w"]), np.asarray(wgp["w"]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_grad_under_jit(self, rng):
+        """value_and_grad traced under jit: selection happens at trace time
+        inside the scope, fwd and bwd GEMMs both recorded."""
+        pol = core.AnalyticPolicy()
+        a = jnp.asarray(rng.randn(33, 20), jnp.float32)
+        b = jnp.asarray(rng.randn(17, 20), jnp.float32)
+        with core.use_policy(pol):
+            loss, g = jax.jit(
+                jax.value_and_grad(
+                    lambda a: jnp.sum(core.dispatch("NT", a, b) ** 2)
+                )
+            )(a)
+        assert np.isfinite(float(loss)) and np.isfinite(np.asarray(g)).all()
+        assert "NN" in pol.stats.by_op  # dA GEMM was policy-dispatched
+
+
+class TestBackwardObservability:
+    def test_backward_decisions_appear_in_dispatch_report(self, rng, key):
+        """The acceptance demo: jax.grad of a dense layer under
+        use_policy(...) records NN and TN decisions in dispatch_report."""
+        from repro.models.layers import dense, init_dense
+
+        pol = core.AnalyticPolicy()
+        p = init_dense(key, 65, 128)
+        x = jnp.asarray(rng.randn(9, 128), jnp.float32)
+        with core.use_policy(pol):
+            jax.grad(lambda p: jnp.sum(dense(p, x) ** 2))(p)
+        assert {"NT", "NN", "TN"} <= set(pol.stats.by_op)
+        report = core.dispatch_report(pol)
+        assert "\n  NN " in report and "\n  TN " in report and "\n  NT " in report
+
+
+class TestDispatchNtCompat:
+    def test_dispatch_nt_delegates_and_warns_once(self, rng):
+        """The legacy entry point is a thin wrapper over dispatch('NT'):
+        same engine (grads route backward GEMMs through the policy too)
+        and exactly one DeprecationWarning per process."""
+        engine._WARNED.discard("dispatch_nt")
+        pol = core.AnalyticPolicy()
+        a = jnp.asarray(rng.randn(6, 10), jnp.float32)
+        b = jnp.asarray(rng.randn(4, 10), jnp.float32)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with core.use_policy(pol):
+                out = core.dispatch_nt(a, b)
+                core.dispatch_nt(a, b)  # second call: no second warning
+        deprecations = [
+            x for x in w if issubclass(x.category, DeprecationWarning)
+            and "dispatch_nt" in str(x.message)
+        ]
+        assert len(deprecations) == 1
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(a) @ np.asarray(b).T,
+            rtol=1e-5, atol=1e-5,
+        )
+        # the wrapper shares the custom_vjp engine: grads dispatch NN/TN
+        with core.use_policy(pol):
+            jax.grad(lambda a: jnp.sum(core.dispatch_nt(a, b) ** 2))(a)
+        assert "NN" in pol.stats.by_op and "TN" in pol.stats.by_op
+
+    def test_legacy_bare_string_decision_branch(self, rng):
+        """Regression for the engine's bare-string-Decision shim: a
+        third-party policy with the old positional signature returning a
+        candidate *name* still dispatches (normalised to Decision), with
+        deprecation warnings."""
+
+        class LegacyPolicy:
+            stats = core.SelectorStats()
+
+            def select(self, m, n, k, dsize=4):
+                assert isinstance(m, int)  # adapted call: ints, not an OpKey
+                return "XLA_TNN"
+
+        engine._WARNED.discard("legacy-select")
+        engine._WARNED.discard("bare-string-decision")
+        a = jnp.asarray(rng.randn(5, 8), jnp.float32)
+        b = jnp.asarray(rng.randn(3, 8), jnp.float32)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = core.dispatch("NT", a, b, policy=LegacyPolicy())
+        kinds = {str(x.message)[:20] for x in w
+                 if issubclass(x.category, DeprecationWarning)}
+        assert len(kinds) == 2  # positional-signature + bare-string shims
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(a) @ np.asarray(b).T,
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_legacy_policy_backward_keys_run_the_reference(self, rng):
+        """Regression: a legacy positional policy can only answer for the
+        forward op — backward NN/TN keys must degrade to each op's XLA
+        reference, not execute the policy's NT answer on wrong-layout
+        operands (shape error at best, silently wrong gradients at
+        worst)."""
+
+        class LegacyTnnPolicy:
+            stats = core.SelectorStats()
+
+            def select(self, m, n, k, dsize=4):
+                return "XLA_TNN"
+
+        a = jnp.asarray(rng.randn(4, 16), jnp.float32)
+        b = jnp.asarray(rng.randn(6, 16), jnp.float32)
+        ct = jnp.asarray(rng.randn(4, 6), jnp.float32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with core.use_policy(LegacyTnnPolicy()):
+                da, db = jax.grad(
+                    lambda a, b: jnp.sum(core.dispatch("NT", a, b) * ct),
+                    argnums=(0, 1),
+                )(a, b)
+        want_da, want_db = _nt_grads(np.asarray(a), np.asarray(b), np.asarray(ct))
+        np.testing.assert_allclose(np.asarray(da), want_da, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(db), want_db, rtol=1e-5, atol=1e-5)
+
+    def test_op_mismatched_decision_degrades_to_reference(self, rng):
+        """A policy answering an NN key with an NT-only candidate must not
+        execute it on NN-layout operands — the engine dispatches the op's
+        reference instead."""
+
+        class MisOppedPolicy:
+            stats = core.SelectorStats()
+
+            def select(self, key, n=None, k=None, dsize=4):
+                return core.Decision("XLA_NT", None)  # wrong for NN/TN keys
+
+        a = jnp.asarray(rng.randn(5, 7), jnp.float32)
+        b = jnp.asarray(rng.randn(7, 3), jnp.float32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            out = core.dispatch("NN", a, b, policy=MisOppedPolicy())
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(a) @ np.asarray(b),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_opkey_policy_not_misdetected_as_legacy(self):
+        """A policy whose select takes `key` is called with the OpKey."""
+        seen = {}
+
+        class OpKeyPolicy:
+            stats = core.SelectorStats()
+
+            def select(self, key, n=None, k=None, dsize=4):
+                seen["key"] = key
+                return core.Decision("XLA_NT", None)
+
+        a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
+        core.dispatch("NT", a, b, policy=OpKeyPolicy())
+        assert isinstance(seen["key"], core.OpKey)
+        assert seen["key"] == core.OpKey("NT", 4, 3, 8, 4)

@@ -62,16 +62,66 @@ def test_nt_candidates(rng, fn_name, shape, dt):
     np.testing.assert_allclose(got, want, **_tol(dt, k))
 
 
-def test_candidates_agree_pairwise(rng):
-    """All registered candidates agree with each other (not just the ref)."""
-    from repro.core.candidates import CANDIDATES
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dt", DTYPES, ids=("f32", "bf16"))
+def test_matmul_tn(rng, shape, dt):
+    """The TN (weight-gradient) schedule: transpose A then NN."""
+    m, n, k = shape
+    a, b = _mk(rng, (k, m), dt), _mk(rng, (k, n), dt)
+    got = np.asarray(ops.matmul_tn(a, b), np.float32)
+    want = np.asarray(ref.matmul_tn(a, b), np.float32)
+    np.testing.assert_allclose(got, want, **_tol(dt, k))
 
-    a = _mk(rng, (96, 160), jnp.float32)
-    b = _mk(rng, (64, 160), jnp.float32)
-    outs = {n: np.asarray(c.fn(a, b)) for n, c in CANDIDATES.items()}
-    base = outs.pop("XLA_NT")
-    for name, o in outs.items():
-        np.testing.assert_allclose(o, base, rtol=1e-5, atol=1e-4, err_msg=name)
+
+def test_matmul_tn_blocks_and_tblock(rng):
+    """TN stays correct at non-default matmul tiles and explicit transpose
+    tiles (the 2-D tblock space)."""
+    m, n, k = 129, 100, 200
+    a, b = _mk(rng, (k, m), jnp.float32), _mk(rng, (k, n), jnp.float32)
+    want = np.asarray(ref.matmul_tn(a, b), np.float32)
+    for block in [(128, 128, 128), (256, 128, 256)]:
+        got = np.asarray(ops.matmul_tn(a, b, block=block), np.float32)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    for tblock in [(128, 128), (256, 128)]:
+        got = np.asarray(ops.matmul_tn(a, b, tblock=tblock), np.float32)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_tnn_explicit_tblock(rng):
+    """TNN's transpose stage honours an explicit 2-D tile independent of
+    the matmul block."""
+    a = _mk(rng, (100, 200), jnp.float32)
+    b = _mk(rng, (150, 200), jnp.float32)
+    want = np.asarray(ref.matmul_nt(a, b))
+    got = np.asarray(
+        ops.matmul_tnn(a, b, block=(128, 128, 128), tblock=(256, 128))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_candidates_agree_pairwise(rng):
+    """All registered candidates of each op agree with each other (not
+    just the ref).  Operands are built per op storage layout; the oracle
+    output (m, n) is shared across ops."""
+    from repro.core.candidates import CANDIDATES
+    from repro.core.measure import operand_shapes
+
+    m, n, k = 96, 64, 160
+    for op, base_name in (("NT", "XLA_NT"), ("NN", "XLA_NN"), ("TN", "XLA_TN")):
+        a_shape, b_shape = operand_shapes(op, m, n, k)
+        a = _mk(rng, a_shape, jnp.float32)
+        b = _mk(rng, b_shape, jnp.float32)
+        outs = {
+            name: np.asarray(c.fn(a, b))
+            for name, c in CANDIDATES.items()
+            if op in c.ops
+        }
+        base = outs.pop(base_name)
+        assert outs, op  # every op has at least two candidates
+        for name, o in outs.items():
+            np.testing.assert_allclose(
+                o, base, rtol=1e-5, atol=1e-4, err_msg=f"{op}:{name}"
+            )
 
 
 def test_block_override(rng):

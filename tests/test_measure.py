@@ -93,6 +93,62 @@ class TestMeasurementCache:
         pol = core.AutotunePolicy(cache=cache, measure=False)
         assert pol.select(64, 64, 64) == core.Decision("XLA_TNN", None)
 
+    def test_v2_file_migrates_op_less_keys_as_nt(self, tmp_path):
+        """A v2 cache (per-config timings, op-less keys) must keep
+        answering warm hits after the op-space schema bump: its keys could
+        only describe the forward op, so they migrate as op="NT"."""
+        p = str(tmp_path / "v2.json")
+        with open(p, "w") as fh:
+            json.dump(
+                {
+                    "schema_version": 2,
+                    "entries": {
+                        "cpu|host_cpu|float32|64|64|64": {
+                            "XLA_NT": {"default": 2.0e-5},
+                            "PALLAS_NT": {"128x128x128": 1.0e-5},
+                        }
+                    },
+                },
+                fh,
+            )
+        cache = MeasurementCache.load(p)
+        key = ("cpu", "host_cpu", "float32", "NT", 64, 64, 64)
+        assert cache.get(key) == {
+            "XLA_NT": {"default": 2.0e-5},
+            "PALLAS_NT": {"128x128x128": 1.0e-5},
+        }
+        # legacy op-less 6-tuple lookups see the same entry
+        assert cache.get(("cpu", "host_cpu", "float32", 64, 64, 64)) is not None
+        # and the migrated cache answers NT dispatches (not NN/TN ones)
+        pol = core.AutotunePolicy(cache=cache, measure=False)
+        assert pol.select(64, 64, 64) == core.Decision(
+            "PALLAS_NT", (128, 128, 128)
+        )
+        assert pol.n_cache_hits == 1
+        nn = pol.select(core.OpKey("NN", 64, 64, 64, 4))
+        assert "NN" in core.get_candidate(nn.name).ops  # analytic fallback
+
+    def test_v3_roundtrip_with_op_keys(self, tmp_path):
+        """Distinct ops of one shape are distinct cache entries."""
+        p = str(tmp_path / "v3.json")
+        cache = MeasurementCache(p)
+        nt_key = ("cpu", "host_cpu", "float32", "NT", 8, 8, 8)
+        tn_key = ("cpu", "host_cpu", "float32", "TN", 8, 8, 8)
+        cache.put(nt_key, {"XLA_NT": 1e-5})
+        cache.put(tn_key, {"XLA_TN": 2e-5})
+        cache.save()
+        cache2 = MeasurementCache.load(p)
+        assert len(cache2) == 2
+        assert cache2.get(nt_key) == {"XLA_NT": {"default": 1e-5}}
+        assert cache2.get(tn_key) == {"XLA_TN": {"default": 2e-5}}
+
+    def test_malformed_key_rejected(self):
+        cache = MeasurementCache()
+        with pytest.raises(ValueError, match="unknown op kind"):
+            cache.put(("cpu", "hw", "float32", "XX", 8, 8, 8), {"XLA_NT": 1.0})
+        with pytest.raises(ValueError, match="measurement key"):
+            cache.put(("cpu", "hw", 8, 8, 8), {"XLA_NT": 1.0})
+
     def test_missing_file_starts_empty(self, tmp_path):
         cache = MeasurementCache.load(str(tmp_path / "absent.json"))
         assert len(cache) == 0
@@ -209,6 +265,47 @@ class TestMeasureHarness:
             },
         )
         assert top_configs_by_candidate(cache) == {"PALLAS_NT": "128x128x128"}
+
+    def test_measures_per_op_candidate_sets(self):
+        """measure_candidates(op=...) builds operands in the op's storage
+        layout and only times candidates implementing the op."""
+        for op in ("NN", "TN"):
+            times = measure_candidates(32, 24, 16, op=op, reps=1)
+            assert times, op
+            for name in times:
+                assert op in core.get_candidate(name).ops
+        nn = measure_candidates(32, 24, 16, op="NN", reps=1)
+        assert "XLA_NN" in nn and "XLA_NT" not in nn
+
+    def test_tile_tables_from_cache_are_per_op_and_per_shape(self):
+        from repro.core.measure import tile_tables_from_cache
+
+        cache = MeasurementCache()
+        cache.put(
+            ("cpu", "host_cpu", "float32", "NT", 128, 128, 128),
+            {"PALLAS_NT": {"128x128x128": 1.0, "256x256x256": 2.0}},
+        )
+        cache.put(
+            ("cpu", "host_cpu", "float32", "NT", 1000, 1000, 1000),
+            {"PALLAS_NT": {"512x512x1024": 1.0, "128x128x128": 2.0}},
+        )
+        cache.put(
+            ("cpu", "host_cpu", "float32", "TN", 128, 128, 128),
+            {"PALLAS_TN": {"256x256x256": 1.0}, "XLA_TN": {"default": 2.0}},
+        )
+        tables = tile_tables_from_cache(cache)
+        assert tables["NT"]["PALLAS_NT"]["by_shape"] == {
+            "128x128x128": "128x128x128",
+            "1000x1000x1000": "512x512x1024",
+        }
+        assert tables["NT"]["PALLAS_NT"]["modal"] in (
+            "128x128x128", "512x512x1024",
+        )
+        assert tables["TN"]["PALLAS_TN"]["by_shape"] == {
+            "128x128x128": "256x256x256"
+        }
+        # default-key wins (XLA_TN) never enter the table
+        assert "XLA_TN" not in tables["TN"]
 
     def test_oom_guard_skips_extra_memory_candidates(self):
         times = measure_candidates(32, 24, 16, hardware=TINY_HW, reps=1)

@@ -113,9 +113,12 @@ class TestPolicies:
         pol = core.AnalyticPolicy(hardware=TPU_V5E)
         name = pol.select(1024, 1024, 1024).name
         cand = core.get_candidate(name)
+        assert "NT" in cand.ops  # an NT key never picks an NN/TN candidate
         t_chosen = simulate_time(TPU_V5E, cand.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
         for other in pol.candidates:
             oc = core.get_candidate(other)
+            if "NT" not in oc.ops:
+                continue  # implements a different op: not in this argmin
             t = simulate_time(TPU_V5E, oc.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
             assert t_chosen <= t + 1e-12
 
@@ -215,6 +218,55 @@ class TestPolicies:
             with pytest.raises(ValueError) as ei:
                 core.policy_from_spec(bad)
             assert POLICY_SPEC_HELP in str(ei.value), bad
+
+    def test_policy_from_spec_op_qualified_fixed(self):
+        """The fixed: grammar grew op qualification:
+        fixed:nt=XLA_NT,nn=PALLAS_NN[@BMxBNxBK],tn=XLA_TN."""
+        pol = core.policy_from_spec(
+            "fixed:nt=XLA_NT,nn=PALLAS_NN@128x128x128,tn=XLA_TN"
+        )
+        assert pol.select(core.OpKey("NT", 8, 8, 8)) == core.Decision(
+            "XLA_NT", None
+        )
+        assert pol.select(core.OpKey("NN", 8, 8, 8)) == core.Decision(
+            "PALLAS_NN", (128, 128, 128)
+        )
+        assert pol.select(core.OpKey("TN", 8, 8, 8)) == core.Decision(
+            "XLA_TN", None
+        )
+        # whitespace + case tolerated
+        pol2 = core.policy_from_spec("fixed: NT = XLA_TNN , tn = PALLAS_TN ")
+        assert pol2.select(core.OpKey("NT", 8, 8, 8)).name == "XLA_TNN"
+        # an op with no entry runs the op's reference, not a mis-dispatch
+        assert pol2.select(core.OpKey("NN", 8, 8, 8)).name == "XLA_NN"
+        for bad in (
+            "fixed:xx=XLA_NT",          # unknown op
+            "fixed:nt=",                # empty name
+            "fixed:nt=XLA_NN",          # candidate does not implement op
+            "fixed:nn=PALLAS_NN@bogus", # malformed tile
+        ):
+            with pytest.raises(ValueError):
+                core.policy_from_spec(bad)
+
+    def test_fixed_policy_single_name_covers_backward_ops_with_reference(self):
+        """FixedPolicy("XLA_TNN") under a training step: backward NN/TN
+        keys degrade to each op's XLA reference instead of handing an
+        NT-only candidate operands in the wrong layout."""
+        pol = core.FixedPolicy("XLA_TNN")
+        assert pol.select(core.OpKey("NT", 8, 8, 8)).name == "XLA_TNN"
+        assert pol.select(core.OpKey("NN", 8, 8, 8)).name == "XLA_NN"
+        assert pol.select(core.OpKey("TN", 8, 8, 8)).name == "XLA_TN"
+        assert pol.stats.by_op["NN"] == {"XLA_NN": 1}
+
+    def test_fixed_policy_by_op_validates(self):
+        with pytest.raises(ValueError, match="does not implement"):
+            core.FixedPolicy(by_op={"NN": "XLA_NT"})
+        with pytest.raises(KeyError):
+            core.FixedPolicy(by_op={"NT": "NOT_A_CANDIDATE"})
+        with pytest.raises(ValueError):
+            core.FixedPolicy(by_op={})
+        with pytest.raises(ValueError, match="unknown op"):
+            core.FixedPolicy(by_op={"XX": "XLA_NT"})
 
     def test_policy_from_spec_distributed_restricts_candidates(self):
         """Launchers on a multi-device mesh pass distributed=True: guarded
@@ -466,20 +518,86 @@ class TestArtifacts:
             2048, 2048, 2048
         )
 
-    def test_v2_artifact_roundtrips_tile_configs(self, trained_selector, tmp_path):
+    def test_v3_artifact_roundtrips_tile_tables(self, trained_selector, tmp_path):
         p = str(tmp_path / "tiled.json")
         sel = core.MTNNSelector(
             trained_selector.model,
-            tile_configs={"PALLAS_NT": "256x256x512"},
+            tile_configs={"PALLAS_NT": "256x256x512"},  # legacy modal sugar
         )
         sel.save(p)
         with open(p) as fh:
             payload = json.load(fh)
         assert payload["schema_version"] == core.SCHEMA_VERSION
-        assert payload["tile_configs"] == {"PALLAS_NT": "256x256x512"}
+        assert payload["tile_tables"]["NT"]["PALLAS_NT"]["modal"] == "256x256x512"
         sel2 = core.MTNNSelector.load(p)
         assert sel2.tile_config_for("PALLAS_NT") == (256, 256, 512)
         assert sel2.tile_config_for("XLA_NT") is None
+        # the legacy modal view keeps working
+        assert sel2.tile_configs == {"PALLAS_NT": "256x256x512"}
+
+    def test_v2_artifact_migrates_tile_configs_and_pairs(
+        self, trained_selector, tmp_path
+    ):
+        """A v2 artifact (modal tile_configs, single binary_pair) loads via
+        migration: its tiles become the NT modal table and backward ops get
+        the standard per-op pairs — exactly how a v2 build dispatched."""
+        p = str(tmp_path / "v2.json")
+        v2 = {
+            "schema_version": 2,
+            "mode": "binary",
+            "binary_pair": list(trained_selector.binary_pair),
+            "hardware": trained_selector.hardware.name,
+            "model": trained_selector.model.to_dict(),
+            "tile_configs": {"PALLAS_NT": "256x256x512"},
+        }
+        with open(p, "w") as fh:
+            json.dump(v2, fh)
+        sel2 = core.MTNNSelector.load(p)
+        assert sel2.tile_config_for("PALLAS_NT") == (256, 256, 512)
+        assert sel2.binary_pair == trained_selector.binary_pair
+        assert sel2.binary_pairs["NN"] == core.BINARY_PAIRS_BY_OP["NN"]
+        assert sel2.binary_pairs["TN"] == core.BINARY_PAIRS_BY_OP["TN"]
+        # NT decisions are unchanged by migration
+        for mnk in [(128, 128, 128), (4096, 4096, 4096)]:
+            assert sel2.select(*mnk) == trained_selector.select(*mnk)
+
+    def test_per_shape_tile_table_with_nearest_shape_fallback(
+        self, trained_selector
+    ):
+        """v3 tables are per-shape: the exact entry wins, an unseen shape
+        uses the nearest recorded shape (log-space), and the modal entry is
+        the terminal fallback when no per-shape entry exists."""
+        sel = core.MTNNSelector(
+            trained_selector.model,
+            tile_tables={
+                "NT": {
+                    "PALLAS_NT": {
+                        "modal": "512x512x512",
+                        "by_shape": {
+                            "128x128x128": "128x128x128",
+                            "1000x1000x1000": "512x512x1024",
+                        },
+                    }
+                }
+            },
+        )
+        # exact hit
+        assert sel.tile_config_for(
+            "PALLAS_NT", mnk=(128, 128, 128)
+        ) == (128, 128, 128)
+        # nearest recorded shape (log-space): (900, 900, 900) ~ (1000,)*3
+        assert sel.tile_config_for(
+            "PALLAS_NT", mnk=(900, 900, 900)
+        ) == (512, 512, 1024)
+        assert sel.tile_config_for(
+            "PALLAS_NT", mnk=(100, 150, 128)
+        ) == (128, 128, 128)
+        # no mnk (legacy call): the modal summary
+        assert sel.tile_config_for("PALLAS_NT") == (512, 512, 512)
+        # a VMEM-busting per-shape entry degrades to None, not a bust
+        assert sel.tile_config_for(
+            "PALLAS_NT", dsize=8, mnk=(1000, 1000, 1000)
+        ) is None
 
     def test_model_policy_drops_learned_tile_that_busts_vmem(
         self, trained_selector
@@ -563,6 +681,61 @@ class TestObservability:
     def test_dispatch_report_empty(self):
         report = core.dispatch_report(core.FixedPolicy("XLA_NT"))
         assert "no dispatches" in report
+
+    def test_dispatch_report_grouped_by_op(self):
+        """Backward GEMM routing is visible: rows carry the op kind."""
+        pol = core.AnalyticPolicy()
+        pol.select(core.OpKey("NT", 256, 256, 256))
+        pol.select(core.OpKey("NN", 256, 256, 256))
+        pol.select(core.OpKey("TN", 256, 256, 256))
+        report = core.dispatch_report(pol)
+        for op in ("NT", "NN", "TN"):
+            assert f"\n  {op} " in report
+        assert "total" in report
+
+    def test_stats_objects_without_by_op_still_render(self):
+        """Third-party stats predating the op split fall back to the flat
+        per-decision rows."""
+
+        class FlatStats:
+            calls = 2
+            by_candidate = {"XLA_NT": 2}
+            by_decision = {"XLA_NT": 2}
+
+        class Pol:
+            stats = FlatStats()
+
+            def select(self, key, n=None, k=None, dsize=4):
+                return core.Decision("XLA_NT", None)
+
+        report = core.dispatch_report(Pol())
+        assert "XLA_NT" in report and "100.0%" in report
+
+    def test_oom_guard_is_op_aware_for_tn(self):
+        """Regression: the OOM guard charged B^T (n*k) for every
+        extra-memory candidate, but the TN schedule materialises A^T (m*k)
+        — with m >> n the old accounting waved through an allocation that
+        busts HBM."""
+        from repro.core.candidates import candidate_fits_memory
+
+        cand = core.get_candidate("PALLAS_TN")
+        m, n, k = 2**19, 256, 4096  # A^T is m*k ~ 2.1e9 elements
+        assert candidate_fits_memory(cand, m, n, k, 4, 16.0)  # n*k: fits
+        assert not candidate_fits_memory(cand, m, n, k, 4, 16.0, op="TN")
+        # and the policy guard refuses PALLAS_TN for that TN key
+        pol = core.AnalyticPolicy(hardware=TPU_V5E)
+        chosen = pol.select(core.OpKey("TN", m, n, k, 4)).name
+        assert not core.get_candidate(chosen).extra_memory
+
+    def test_cascade_backward_op_falls_back_to_reference(self):
+        """A cascade written for the forward op must not hand an NT-only
+        candidate a backward GEMM."""
+        pol = core.CascadePolicy(["XLA_TNN", "XLA_NT"])
+        assert pol.select(core.OpKey("NN", 64, 64, 64)).name == "XLA_NN"
+        assert pol.select(core.OpKey("TN", 64, 64, 64)).name == "XLA_TN"
+        # a cascade naming backward candidates uses them
+        pol2 = core.CascadePolicy(["PALLAS_NN", "XLA_NN"])
+        assert pol2.select(core.OpKey("NN", 64, 64, 64)).name == "PALLAS_NN"
 
 
 # -- (candidate, config) dispatch ---------------------------------------------

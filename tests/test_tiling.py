@@ -191,6 +191,86 @@ class TestConfigAwareRegistry:
             core.unregister_candidate("TEST_TUNABLE")
 
 
+class TestTransposeConfigSpace:
+    """The transpose kernel's 2-D (b_rows, b_cols) autotuning space —
+    the ROADMAP follow-up, surfaced like the matmul config_space."""
+
+    def test_every_config_is_aligned_bounded_and_fits(self):
+        from repro.kernels.tiling import (
+            enumerate_transpose_configs,
+            transpose_vmem_bytes,
+        )
+
+        for (r, c) in [(1, 1000), (129, 300), (1000, 1000), (64, 64)]:
+            configs = enumerate_transpose_configs(r, c, dsize=4)
+            assert configs, (r, c)
+            for (br, bc) in configs:
+                for b, dim in ((br, r), (bc, c)):
+                    assert b % MXU_EDGE == 0
+                    assert b <= round_up(dim, MXU_EDGE)
+                assert transpose_vmem_bytes((br, bc), 4) <= (
+                    DEFAULT_VMEM_BUDGET_BYTES
+                )
+
+    def test_includes_clamped_default(self):
+        from repro.kernels.tiling import (
+            default_transpose_config,
+            enumerate_transpose_configs,
+        )
+
+        for (r, c) in [(1000, 1000), (1, 513)]:
+            assert default_transpose_config(r, c) in enumerate_transpose_configs(
+                r, c
+            )
+
+    def test_shortlist_ranked_by_transpose_tile_time(self):
+        from repro.core.simulate import transpose_tile_time
+        from repro.kernels.tiling import transpose_config_space
+
+        short = transpose_config_space(
+            1000, 1000, dsize=4, max_configs=0, hardware=TPU_V5E
+        )
+        ts = [transpose_tile_time(TPU_V5E, 1000, 1000, 4, c) for c in short]
+        assert ts == sorted(ts)
+
+    def test_shortlist_truncates_and_keeps_default(self):
+        from repro.kernels.tiling import (
+            default_transpose_config,
+            enumerate_transpose_configs,
+            transpose_config_space,
+        )
+
+        full = enumerate_transpose_configs(1000, 1000, dsize=4)
+        short = transpose_config_space(1000, 1000, dsize=4, max_configs=3)
+        assert len(short) == 3 < len(full)
+        assert set(short) <= set(full)
+        assert default_transpose_config(1000, 1000) in short
+
+    def test_parse_config_key_arity_2(self):
+        assert parse_config_key("256x128", arity=2) == (256, 128)
+        assert parse_config_key("default", arity=2) is None
+        with pytest.raises(ValueError, match="malformed"):
+            parse_config_key("256x128x128", arity=2)
+        with pytest.raises(ValueError, match="malformed"):
+            parse_config_key("256x128")  # default arity stays 3
+
+    def test_measured_transpose_autotune(self):
+        """measure_transpose_configs times the shortlist + default and
+        best_transpose_config returns a parseable 2-D tile (or None when
+        the default wins)."""
+        from repro.core.measure import (
+            best_transpose_config,
+            measure_transpose_configs,
+        )
+
+        times = measure_transpose_configs(129, 200, reps=1, max_configs=2)
+        assert "default" in times
+        assert len(times) >= 2
+        assert all(t > 0 for t in times.values())
+        best = best_transpose_config(129, 200, reps=1, max_configs=2)
+        assert best is None or (len(best) == 2 and all(b >= 128 for b in best))
+
+
 class TestDecisionLabel:
     def test_label_formats(self):
         assert core.Decision("XLA_NT").label() == "XLA_NT"

@@ -1,0 +1,135 @@
+"""Schema-drift guard between a fresh kernel sweep and the committed grid.
+
+``benchmarks/BENCH_kernels.json`` is committed per PR so the kernel perf
+trajectory stays diffable; the CI ``tile-smoke`` job re-runs the sweep
+with ``--quick``.  Those two artifacts are produced by the same code at
+different times, so they can silently diverge: a sweep refactor that
+drops a row field, an op family, or a candidate would leave the committed
+grid describing cells the sweep no longer produces.  This checker fails
+CI when that happens:
+
+  * every row of both files carries the required keys (schema match);
+  * every op family and every candidate in the committed grid is still
+    covered by the fresh sweep (coverage cannot silently shrink);
+  * for (op, g, m, n, k) shapes present in *both* files, the fresh sweep
+    produced at least as many rows as the committed grid (a shared cell
+    cannot silently lose tile-config coverage).
+
+  PYTHONPATH=src python -m benchmarks.bench_drift \\
+      --fresh /tmp/BENCH_kernels.json --committed benchmarks/BENCH_kernels.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+REQUIRED_ROW_KEYS = frozenset(
+    {
+        "op", "g", "m", "n", "k", "candidate", "config",
+        "is_default_config", "median_ms", "gflops", "roofline_gflops",
+        "best",
+    }
+)
+REQUIRED_TOP_KEYS = frozenset(
+    {"mode", "dtype", "hardware", "backend", "default_block", "results"}
+)
+
+ShapeKey = Tuple[str, int, int, int, int]  # (op, g, m, n, k)
+
+
+def _load(path: str) -> Dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def _check_schema(name: str, payload: Dict, errors: List[str]) -> None:
+    missing_top = REQUIRED_TOP_KEYS - set(payload)
+    if missing_top:
+        errors.append(f"{name}: missing top-level keys {sorted(missing_top)}")
+        return
+    for i, row in enumerate(payload["results"]):
+        missing = REQUIRED_ROW_KEYS - set(row)
+        if missing:
+            errors.append(
+                f"{name}: row {i} ({row.get('op')}:{row.get('candidate')}) "
+                f"missing keys {sorted(missing)}"
+            )
+            return  # one schema error per file is enough signal
+
+
+def _by_shape(payload: Dict) -> Dict[ShapeKey, int]:
+    counts: Dict[ShapeKey, int] = {}
+    for row in payload["results"]:
+        sk = (row["op"], row["g"], row["m"], row["n"], row["k"])
+        counts[sk] = counts.get(sk, 0) + 1
+    return counts
+
+
+def check_drift(fresh: Dict, committed: Dict) -> List[str]:
+    """All drift findings between the two payloads (empty == clean)."""
+    errors: List[str] = []
+    _check_schema("fresh", fresh, errors)
+    _check_schema("committed", committed, errors)
+    if errors:
+        return errors  # row-level checks below assume the schema holds
+
+    fresh_ops = {r["op"] for r in fresh["results"]}
+    committed_ops = {r["op"] for r in committed["results"]}
+    if not committed_ops <= fresh_ops:
+        errors.append(
+            f"op families {sorted(committed_ops - fresh_ops)} are in the "
+            "committed grid but missing from the fresh sweep — the sweep "
+            "code no longer covers them"
+        )
+    fresh_cands = {r["candidate"] for r in fresh["results"]}
+    committed_cands = {r["candidate"] for r in committed["results"]}
+    if not committed_cands <= fresh_cands:
+        errors.append(
+            f"candidates {sorted(committed_cands - fresh_cands)} are in the "
+            "committed grid but missing from the fresh sweep"
+        )
+
+    fresh_counts = _by_shape(fresh)
+    for sk, committed_count in sorted(_by_shape(committed).items()):
+        fresh_count = fresh_counts.get(sk)
+        if fresh_count is not None and fresh_count < committed_count:
+            op, g, m, n, k = sk
+            errors.append(
+                f"shared cell {op} g={g} ({m},{n},{k}): fresh sweep has "
+                f"{fresh_count} rows < committed {committed_count} — "
+                "tile-config coverage shrank"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly swept json")
+    ap.add_argument(
+        "--committed",
+        default=os.path.join(os.path.dirname(__file__), "BENCH_kernels.json"),
+        help="committed perf grid",
+    )
+    args = ap.parse_args(argv)
+
+    fresh, committed = _load(args.fresh), _load(args.committed)
+    errors = check_drift(fresh, committed)
+    if errors:
+        print("bench-drift: committed grid and sweep code diverged:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(
+        f"bench-drift: OK ({len(fresh['results'])} fresh rows vs "
+        f"{len(committed['results'])} committed; ops "
+        f"{sorted({r['op'] for r in committed['results']})} all covered)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

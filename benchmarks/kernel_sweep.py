@@ -1,11 +1,12 @@
 """Tile-config sweep over the Pallas kernel family — the perf trajectory
 tracker.
 
-The grid spans the op space (``core/opkey.py``): the forward NT family
-plus the backward NN (data-gradient) and TN (weight-gradient) Pallas
-candidates, each against its op's XLA reference.
+The grid spans the op space (``core/opkey.py``): the forward NT family,
+the backward NN (data-gradient) and TN (weight-gradient) Pallas
+candidates, and the batched BNT/BNN attention contractions, each against
+its op's XLA reference.
 
-For every (op, shape, candidate, tile config) cell this benchmark:
+For every (op, g, shape, candidate, tile config) cell this benchmark:
 
   * validates the kernel output bit-for-bit-tolerably against the XLA
     reference (a correctness mismatch fails the run — the CI ``tile-smoke``
@@ -35,17 +36,28 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 # The Pallas kernel family under sweep, per op (XLA candidates are not
-# tunable).  NN/TN are the backward GEMMs the op-space dispatch routes.
+# tunable).  NN/TN are the backward GEMMs the op-space dispatch routes;
+# BNT/BNN are the batched attention contractions.
 PALLAS_FAMILY = ("PALLAS_NT", "PALLAS_TNN", "PALLAS_TNN_FUSED")
 FAMILY_BY_OP = {
     "NT": PALLAS_FAMILY,
     "NN": ("PALLAS_NN",),
     "TN": ("PALLAS_TN",),
+    "BNT": ("PALLAS_BNT",),
+    "BNN": ("PALLAS_BNN",),
 }
 
 # Ragged / adversarial shapes where the default tile is provably not
-# optimal, plus aligned controls.  --quick keeps the tiny ones.
-FULL_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+# optimal, plus aligned controls.  The full grid is a strict SUPERSET of
+# the quick (CI) grid: shared cells are what lets the bench-drift check
+# compare a fresh --quick sweep against the committed full grid row for
+# row (benchmarks/bench_drift.py).
+QUICK_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (1, 256, 200),
+    (129, 257, 384),
+)
+FULL_SHAPES: Tuple[Tuple[int, int, int], ...] = QUICK_SHAPES + (
     (256, 256, 256),     # aligned control
     (512, 512, 512),     # one default tile exactly
     (1, 1000, 1000),     # degenerate m, ragged n/k
@@ -54,11 +66,37 @@ FULL_SHAPES: Tuple[Tuple[int, int, int], ...] = (
     (1000, 127, 129),    # ragged m, thin n/k
     (1000, 1000, 1000),  # ragged everything
 )
-QUICK_SHAPES: Tuple[Tuple[int, int, int], ...] = (
-    (128, 128, 128),
-    (1, 256, 200),
-    (129, 257, 384),
+
+# Batched (g, m, n, k) cells — attention-like: modest per-slice extents,
+# real batch.  Interpret mode pays per grid step, so the grids stay
+# small; full is again a superset of quick.
+QUICK_BATCHED_SHAPES: Tuple[Tuple[int, int, int, int], ...] = (
+    (2, 64, 65, 32),
+    (3, 1, 128, 64),
 )
+FULL_BATCHED_SHAPES: Tuple[Tuple[int, int, int, int], ...] = (
+    QUICK_BATCHED_SHAPES
+    + (
+        (3, 128, 128, 64),    # aligned slices, odd batch
+        (8, 1, 256, 64),      # decode-like: one query row per slice
+        (4, 129, 127, 64),    # ragged slices
+    )
+)
+
+
+def _cells(shapes, batched_shapes):
+    """Uniform (op, g, m, n, k) cell list over both shape grids."""
+    cells = [
+        (op, 1, m, n, k)
+        for (m, n, k) in shapes
+        for op in ("NT", "NN", "TN")
+    ]
+    cells += [
+        (op, g, m, n, k)
+        for (g, m, n, k) in batched_shapes
+        for op in ("BNT", "BNN")
+    ]
+    return cells
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
@@ -78,6 +116,7 @@ def _median_ms(fn, a, b, reps: int) -> float:
 
 def sweep(
     shapes=FULL_SHAPES,
+    batched_shapes=FULL_BATCHED_SHAPES,
     family_by_op: Optional[Dict[str, Tuple[str, ...]]] = None,
     max_tile_configs: int = 6,
     reps: int = 3,
@@ -85,7 +124,7 @@ def sweep(
     cache_path: Optional[str] = None,
     verbose: bool = True,
 ) -> Dict:
-    """Measure the (op x shape x candidate x config) grid; returns the
+    """Measure the (op x g x shape x candidate x config) grid; returns the
     payload ``--json`` writes.  Raises ``AssertionError`` on the first
     correctness mismatch — a tile config must never change the computed
     function (each op is checked against its own reference)."""
@@ -107,9 +146,10 @@ def sweep(
     cache = core.MeasurementCache(cache_path) if cache_path else None
     family_by_op = family_by_op or FAMILY_BY_OP
 
-    for (m, n, k) in shapes:
-        for op, candidates in family_by_op.items():
-            a_shape, b_shape = operand_shapes(op, m, n, k)
+    for (op, g, m, n, k) in _cells(shapes, batched_shapes):
+        candidates = family_by_op.get(op)
+        if candidates:
+            a_shape, b_shape = operand_shapes(op, m, n, k, g)
             a = jnp.asarray(rng.randn(*a_shape), dt)
             b = jnp.asarray(rng.randn(*b_shape), dt)
             a64, b64 = np.asarray(a, np.float64), np.asarray(b, np.float64)
@@ -117,14 +157,19 @@ def sweep(
                 want = a64 @ b64.T
             elif op == "NN":
                 want = a64 @ b64
-            else:
+            elif op == "TN":
                 want = a64.T @ b64
-            flops = matmul_flops(m, n, k)
+            elif op == "BNT":
+                want = a64 @ np.swapaxes(b64, 1, 2)
+            else:  # BNN
+                want = a64 @ b64
+            flops = g * matmul_flops(m, n, k)
             # roofline bound for this shape on the host descriptor
             peak = (hw.peak_tflops_bf16 if dt.itemsize <= 2 else hw.peak_tflops_f32)
             roofline_gflops = min(
                 peak * 1e3,
-                hw.mem_bw_gbps * flops / ((m * k + n * k + m * n) * dt.itemsize),
+                hw.mem_bw_gbps * flops
+                / (g * (m * k + n * k + m * n) * dt.itemsize),
             )
             dflt = default_config(m, n, k)
             shape_rows: List[Dict] = []
@@ -145,7 +190,7 @@ def sweep(
                     err = np.max(np.abs(got - want)) / max(1.0, np.max(np.abs(want)))
                     assert err < 1e-4, (
                         f"correctness mismatch: {op}:{name} @ {config_key(cfg)} "
-                        f"on ({m},{n},{k}) rel-err {err:.2e}"
+                        f"on (g={g}, {m},{n},{k}) rel-err {err:.2e}"
                     )
                     ms = _median_ms(jax.jit(fn), a, b, reps)
                     ck = config_key(cfg)
@@ -153,6 +198,7 @@ def sweep(
                     shape_rows.append(
                         {
                             "op": op,
+                            "g": g,
                             "m": m, "n": n, "k": k,
                             "candidate": name,
                             "config": ck,
@@ -169,13 +215,15 @@ def sweep(
             if cache is not None:
                 # same key layout AutotunePolicy uses, so a sweep warms dispatch
                 cache.put(
-                    (jax.default_backend(), hw.name, dtype, op, m, n, k), nested
+                    (jax.default_backend(), hw.name, dtype, op, g, m, n, k),
+                    nested,
                 )
             if verbose:
                 tag = "" if best["is_default_config"] else "  <- non-default tile wins"
                 print(
-                    f"  {op} ({m:>4d},{n:>4d},{k:>4d})  best {best['candidate']}"
-                    f"@{best['config']}  {best['median_ms']:.2f} ms  "
+                    f"  {op:<3s} g={g} ({m:>4d},{n:>4d},{k:>4d})  best "
+                    f"{best['candidate']}@{best['config']}  "
+                    f"{best['median_ms']:.2f} ms  "
                     f"{best['gflops']:.2f} GF/s{tag}"
                 )
 
@@ -204,11 +252,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     shapes = QUICK_SHAPES if args.quick else FULL_SHAPES
+    batched = QUICK_BATCHED_SHAPES if args.quick else FULL_BATCHED_SHAPES
     n_cands = sum(len(v) for v in FAMILY_BY_OP.values())
     print(f"kernel tile-config sweep over {len(shapes)} shapes "
-          f"x {len(FAMILY_BY_OP)} ops ({n_cands} Pallas candidates)")
+          f"+ {len(batched)} batched shapes x {len(FAMILY_BY_OP)} ops "
+          f"({n_cands} Pallas candidates)")
     payload = sweep(
         shapes=shapes,
+        batched_shapes=batched,
         reps=args.reps,
         max_tile_configs=args.max_configs,
         cache_path=args.cache,

@@ -99,7 +99,8 @@ def main():
     sel.save(args.out)
     # reload check
     sel2 = core.MTNNSelector.load(args.out)
-    assert sel2.select(4096, 4096, 4096) == sel.select(4096, 4096, 4096)
+    _probe = core.OpKey("NT", 4096, 4096, 4096)
+    assert sel2.select(_probe) == sel.select(_probe)
     print("      reload check OK.  The framework's Dense/MoE/SSM layers now "
           "dispatch through this model by default (current_policy()); scope "
           "overrides with core.use_policy(...).")

@@ -29,6 +29,12 @@ Built-in candidates, by op kind:
     XLA_TN      lax.dot_general contracting (0, 0), no materialised A^T
     PALLAS_TN   Pallas transpose of A + Pallas NN (the TNN move, applied
                 to the gradient op)
+  BNT (C_i = A_i @ B_i^T, A:(g,m,k), B:(g,n,k) — attention Q @ K^T):
+    XLA_BNT     lax.dot_general with a batch dim — XLA's batched NT
+    PALLAS_BNT  the grid-over-batch Pallas NT kernel
+  BNN (C_i = A_i @ B_i, A:(g,m,k), B:(g,k,n) — attention probs @ V):
+    XLA_BNN     lax.dot_general with a batch dim — XLA's batched NN
+    PALLAS_BNN  the grid-over-batch Pallas NN kernel
 
 All candidates share the signature ``f(a, b) -> c`` with operands in their
 op's storage layout (above), and are pure and jit-safe.  ``ops`` names the
@@ -54,7 +60,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .opkey import OPS, check_op
+from .opkey import BATCHED_OPS, OPS, check_op
 
 __all__ = [
     "Candidate",
@@ -246,14 +252,16 @@ def current_platform() -> str:
 
 def candidate_fits_memory(
     cand: Candidate, m: int, n: int, k: int, dsize: int, mem_gib: float,
-    budget_frac: float = 0.9, config=None, op: str = "NT",
+    budget_frac: float = 0.9, config=None, op: str = "NT", g: int = 1,
 ) -> bool:
-    """Paper's OOM guard, config- and op-aware: extra-memory candidates
-    must fit A, B, C *and* their materialised transpose inside the HBM
-    budget — B^T (n*k elements) for the forward NT/TNN schedules, A^T
-    (m*k elements) for the TN weight-gradient schedule; an explicit tile
-    config must additionally fit the VMEM budget (double-buffered operand
-    blocks + f32 accumulator, ``kernels/tiling.py``)."""
+    """Paper's OOM guard, config-, op- and batch-aware: extra-memory
+    candidates must fit A, B, C *and* their materialised transpose inside
+    the HBM budget — B^T (n*k elements) for the forward NT/TNN schedules,
+    A^T (m*k elements) for the TN weight-gradient schedule — with every
+    term multiplied by the batch extent ``g`` for the batched ops; an
+    explicit tile config must additionally fit the VMEM budget
+    (double-buffered operand blocks + f32 accumulator — one batch slice's
+    working set, ``kernels/tiling.py``)."""
     if config is not None and cand.tunable:
         from repro.kernels.tiling import fits_vmem, validate_config
 
@@ -267,7 +275,7 @@ def candidate_fits_memory(
         return True
     budget = mem_gib * (1024**3) * budget_frac
     transposed = m * k if op == "TN" else n * k
-    resident = (m * k + n * k + m * n + transposed) * dsize
+    resident = g * (m * k + n * k + m * n + transposed) * dsize
     return resident <= budget
 
 
@@ -391,20 +399,81 @@ def _pallas_tn(a, b, block=None):
     return ops.matmul_tn(a, b, block=block)
 
 
+# -- batched ops: the attention contractions ----------------------------------
+
+
+@register_candidate(
+    "XLA_BNT", sim_algo="BNT_DIRECT", distributed_safe=True, ops=("BNT",)
+)
+def xla_bnt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched NT: per slice A_i @ B_i^T — the Q @ K^T reference."""
+    return jax.lax.dot_general(
+        a, b, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate(
+    "PALLAS_BNT",
+    sim_algo="BNT_DIRECT",
+    platforms=("tpu", "cpu"),
+    tunable=True,
+    ops=("BNT",),
+)
+def _pallas_bnt(a, b, block=None):
+    from repro.kernels import ops
+
+    return ops.matmul_bnt(a, b, block=block)
+
+
+@register_candidate(
+    "XLA_BNN", sim_algo="BNN_DIRECT", distributed_safe=True, ops=("BNN",)
+)
+def xla_bnn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched NN: per slice A_i @ B_i — the probs @ V reference."""
+    return jax.lax.dot_general(
+        a, b, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+@register_candidate(
+    "PALLAS_BNN",
+    sim_algo="BNN_DIRECT",
+    platforms=("tpu", "cpu"),
+    tunable=True,
+    ops=("BNN",),
+)
+def _pallas_bnn(a, b, block=None):
+    from repro.kernels import ops
+
+    return ops.matmul_bnn(a, b, block=block)
+
+
 # the paper's binary setting (the forward op)
 PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")
 
 # Per-op binary pairs: (direct arm, alternative arm) — the generalization
-# of the paper's NT-vs-TNN dichotomy to the backward GEMMs.  Label +1 in a
-# binary selector means "choose the first member".
+# of the paper's NT-vs-TNN dichotomy to the backward GEMMs and the batched
+# attention contractions.  Label +1 in a binary selector means "choose the
+# first member".
 BINARY_PAIRS_BY_OP: Dict[str, Tuple[str, str]] = {
     "NT": PAPER_PAIR,
     "NN": ("XLA_NN", "PALLAS_NN"),
     "TN": ("XLA_TN", "PALLAS_TN"),
+    "BNT": ("XLA_BNT", "PALLAS_BNT"),
+    "BNN": ("XLA_BNN", "PALLAS_BNN"),
 }
 
 # The always-runnable reference candidate per op (distributed-safe, every
 # platform, no extra memory) — the terminal fallback of every policy and
 # the candidate an op-mismatched FixedPolicy degrades to.
-DEFAULT_BY_OP: Dict[str, str] = {"NT": "XLA_NT", "NN": "XLA_NN", "TN": "XLA_TN"}
+DEFAULT_BY_OP: Dict[str, str] = {
+    "NT": "XLA_NT",
+    "NN": "XLA_NN",
+    "TN": "XLA_TN",
+    "BNT": "XLA_BNT",
+    "BNN": "XLA_BNN",
+}
 assert set(DEFAULT_BY_OP) == set(OPS)
+assert set(BATCHED_OPS) <= set(BINARY_PAIRS_BY_OP)

@@ -49,7 +49,7 @@ def paper_grid(lo: int = 7, hi: int = 16) -> List[Tuple[int, int, int]]:
 class SelectionDataset:
     """Samples + per-candidate times.
 
-    X:      (N, 9) feature matrix (paper's 8-dim layout + the op column)
+    X:      (N, 10) feature matrix (paper's 8-dim layout + op/batch cols)
     y:      (N,) labels in {-1, +1}   (+1 => NT faster-or-equal, choose NT)
     times:  algo-name -> (N,) seconds; always includes the paper pair
             'NT' and 'TNN'; may include more candidates (beyond-paper).
@@ -271,8 +271,8 @@ def dataset_from_measurements(
     kept: List[Tuple[HardwareSpec, str, int, int, int, Dict[str, float]]] = []
     unknown_hw: Dict[str, int] = {}
     other_dtypes: Dict[str, int] = {}
-    seen_platform: Dict[Tuple[str, str, str, int, int, int], str] = {}
-    for (rec_platform, hw_name, rec_dtype, op, m, n, k), nested in cache.records():
+    seen_platform: Dict[Tuple, str] = {}
+    for (rec_platform, hw_name, rec_dtype, op, g, m, n, k), nested in cache.records():
         if platform is not None and rec_platform != platform:
             continue
         if dtype is not None and rec_dtype != dtype:
@@ -290,7 +290,7 @@ def dataset_from_measurements(
             # unusable (counted so an empty result names the real cause)
             unknown_hw[hw_name] = unknown_hw.get(hw_name, 0) + 1
             continue
-        sk = (hw_name, rec_dtype, op, m, n, k)
+        sk = (hw_name, rec_dtype, op, g, m, n, k)
         prev = seen_platform.get(sk)
         if prev is not None and prev != rec_platform:
             raise ValueError(
@@ -301,7 +301,7 @@ def dataset_from_measurements(
                 "pass platform= to pick one"
             )
         seen_platform[sk] = rec_platform
-        kept.append((hw, op, m, n, k, times))
+        kept.append((hw, op, g, m, n, k, times))
     if not kept:
         if unknown_hw:
             why = (
@@ -323,15 +323,15 @@ def dataset_from_measurements(
             f"records timing both members of an op's binary pair "
             f"(e.g. {op_pairs['NT']!r} for NT); {why}"
         )
-    common = set(kept[0][5])
+    common = set(kept[0][6])
     for *_, times in kept:
         common &= set(times)
     rows_X, rows_y, rows_mnk, rows_hw = [], [], [], []
     t_direct, t_alt = [], []
     t_cols: Dict[str, List[float]] = {c: [] for c in sorted(common)}
-    for hw, op, m, n, k, times in kept:
+    for hw, op, g, m, n, k, times in kept:
         direct_name, alt_name = op_pairs[op]
-        rows_X.append(make_features(hw, m, n, k, op=op))
+        rows_X.append(make_features(hw, m, n, k, op=op, g=g))
         rows_y.append(1 if times[direct_name] <= times[alt_name] else -1)
         rows_mnk.append((m, n, k))
         rows_hw.append(hw.name)

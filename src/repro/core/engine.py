@@ -1,4 +1,4 @@
-"""The dispatch engine: every dense-layer GEMM in the model layer lands here.
+"""The dispatch engine: every GEMM in the model layer lands here.
 
 ``dispatch(op, a, b)`` computes one of the three training GEMMs —
 ``"NT"`` (``a @ b^T``), ``"NN"`` (``a @ b``) or ``"TN"`` (``a^T @ b``) —
@@ -8,34 +8,40 @@ selector argument.  Because JAX shapes are static under ``jit``, the
 policy runs once per distinct key at trace time and contributes nothing
 to the compiled step.
 
-``dispatch`` is ``custom_vjp``-wrapped: its backward rule rebuilds the
-NN/TN (data/weight-gradient) OpKeys and re-enters dispatch, so a single
-``use_policy(...)`` scope governs all three GEMMs of every dense layer in
-train *and* serve — the paper's end-to-end training speedup depends on the
-backward ops being routed too.  Selection happens at trace time, so the
-scope must wrap the whole ``value_and_grad`` call (forward *and* backward
-trace), not just the forward pass.
+``dispatch_batched(op, a, b)`` is the batched entry point for the
+attention contractions — ``"BNT"`` (``Q @ K^T`` logits) and ``"BNN"``
+(``probs @ V``): the leading batch/head axes of both operands collapse to
+one batch extent ``g`` and the policy selects over the batched candidate
+sets, so one ``use_policy(...)`` scope governs dense *and* attention
+GEMMs in train and serve.
 
-``dispatch_nt(a, b)`` is the pre-op-space entry point, kept as a thin
-compatibility wrapper (it warns once); new code should call
-``dispatch("NT", a, b)``.
+Both entry points are ``custom_vjp``-wrapped: the backward rules rebuild
+gradient OpKeys and re-enter dispatch — the 2-D op space {NT, NN, TN} is
+closed under differentiation, and the batched space {BNT, BNN} is closed
+modulo one explicit operand transpose — so the scope must wrap the whole
+``value_and_grad`` call (forward *and* backward trace), not just the
+forward pass.
 
 ``dispatch_report()`` renders the per-(op, candidate, config) decision
 counts of the scoped policy — surfaced at the end of train/serve runs so
 dispatch stays observable in production.
+
+The pre-op-space compatibility layer (``dispatch_nt``, positional
+``select(m, n, k, dsize)`` adaptation, bare-string decisions) was removed
+after its one-release deprecation cycle; those call patterns now raise
+clean ``TypeError``/``AttributeError``s pointing at the op-space API.
 """
 
 from __future__ import annotations
 
 import functools
-import inspect
 import warnings
 from typing import Optional
 
 import jax
 
 from .candidates import DEFAULT_BY_OP, get_candidate
-from .opkey import OPS, OpKey, check_op
+from .opkey import BATCHED_OPS, OPS, OpKey, check_op
 from .policy import (
     AnalyticPolicy,
     AutotunePolicy,
@@ -51,7 +57,7 @@ from .policy import (
 
 __all__ = [
     "dispatch",
-    "dispatch_nt",
+    "dispatch_batched",
     "dispatch_report",
     "policy_select",
     "policy_from_spec",
@@ -63,7 +69,7 @@ __all__ = [
 
 POLICY_SPEC_HELP = (
     "dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
-    "fixed:nt=<NAME>[@cfg],nn=<NAME>[@cfg],tn=<NAME>[@cfg] | analytic | "
+    "fixed:nt=<NAME>[@cfg],nn=...,tn=...,bnt=...,bnn=... | analytic | "
     "cascade:<A,B,...> | autotune[:cache.json]"
 )
 
@@ -73,7 +79,7 @@ _WARNED: set = set()
 def _warn_once(tag: str, msg: str) -> None:
     if tag not in _WARNED:
         _WARNED.add(tag)
-        warnings.warn(msg, DeprecationWarning, stacklevel=3)
+        warnings.warn(msg, UserWarning, stacklevel=3)
 
 
 def _spec_error(msg: str) -> ValueError:
@@ -81,66 +87,25 @@ def _spec_error(msg: str) -> ValueError:
     return ValueError(f"{msg} ({POLICY_SPEC_HELP})")
 
 
-# Legacy-signature detection is per *class* (a class's select signature
-# does not change), so the hot dispatch path never pays reflection twice.
-_LEGACY_SELECT_BY_TYPE: dict = {}
-
-
-def _has_legacy_select(policy: SelectionPolicy) -> bool:
-    cls = type(policy)
-    cached = _LEGACY_SELECT_BY_TYPE.get(cls)
-    if cached is None:
-        cached = False
-        try:
-            params = list(inspect.signature(policy.select).parameters)
-            cached = bool(params) and params[0] == "m"
-        except (TypeError, ValueError):
-            pass
-        _LEGACY_SELECT_BY_TYPE[cls] = cached
-    return cached
-
-
 def policy_select(policy: SelectionPolicy, key: OpKey) -> Decision:
-    """Run ``policy.select`` on an ``OpKey`` — the one place the
-    deprecation shims live:
+    """Run ``policy.select`` on an ``OpKey`` and validate the decision.
 
-      * legacy policies whose ``select(m, n, k, dsize)`` takes positional
-        shape ints (detected by signature, cached per class) are called
-        that way — but only for the forward op, which is all the
-        positional form could ever express; backward NN/TN keys degrade to
-        the op's reference candidate instead of handing a legacy policy an
-        op it cannot see (its NT answer would run on wrong-layout
-        operands);
-      * bare-string decisions (a candidate name instead of a ``Decision``)
-        are normalised to ``Decision(name, None)``;
-      * a decision naming a candidate that does not implement ``key.op``
-        (a mis-op'd policy) degrades to the op's reference rather than
-        executing a kernel on operands in the wrong storage layout.
-
-    The adaptations warn once per process; the legacy shims will be
-    removed after one release.
+    Policies must return a ``Decision(name, config)`` — a bare candidate
+    name (the pre-op-space convention, removed after its deprecation
+    release) raises a clean ``TypeError``.  A decision naming a candidate
+    that does not implement ``key.op`` (a mis-op'd policy) degrades to the
+    op's reference rather than executing a kernel on operands in the wrong
+    storage layout (warns once per process — that is a policy bug, not a
+    deprecation).
     """
-    if _has_legacy_select(policy):
-        _warn_once(
-            "legacy-select",
-            "policies with a positional select(m, n, k, dsize) signature are "
-            "deprecated; take an OpKey (op, m, n, k, dsize) instead so "
-            "backward NN/TN GEMMs can be routed",
+    decision = policy.select(key)
+    if isinstance(decision, str):
+        raise TypeError(
+            f"policy {policy!r} returned the bare candidate name "
+            f"{decision!r}; policies must return a Decision(name, config) "
+            "— the bare-string adapter was removed with the op-space "
+            "deprecation cycle"
         )
-        if key.op != "NT":
-            # the positional API predates the op space: this policy cannot
-            # answer for a backward GEMM, so run the op's reference
-            return Decision(DEFAULT_BY_OP[key.op], None)
-        decision = policy.select(key.m, key.n, key.k, dsize=key.dsize)
-    else:
-        decision = policy.select(key)
-    if isinstance(decision, str):  # legacy/third-party policy: bare name
-        _warn_once(
-            "bare-string-decision",
-            "policies returning a bare candidate name are deprecated; return "
-            "a Decision(name, config)",
-        )
-        decision = Decision(decision, None)
     if key.op not in get_candidate(decision.name).ops:
         _warn_once(
             "op-mismatched-decision",
@@ -200,6 +165,48 @@ def _dispatch2_bwd(op: str, res, g):
 _dispatch2.defvjp(_dispatch2_fwd, _dispatch2_bwd)
 
 
+def _run3(op: str, a, b):
+    """Select and execute one batched GEMM on (g, ., .) operands."""
+    import jax.numpy as jnp
+
+    g, m, k = a.shape
+    n = b.shape[1] if op == "BNT" else b.shape[2]
+    key = OpKey(
+        op, int(m), int(n), int(k), int(jnp.dtype(a.dtype).itemsize), int(g)
+    )
+    decision = policy_select(current_policy(), key)
+    return get_candidate(decision.name).run(a, b, decision.config)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dispatch3(op: str, a, b):
+    return _run3(op, a, b)
+
+
+def _dispatch3_fwd(op: str, a, b):
+    return _run3(op, a, b), (a, b)
+
+
+def _dispatch3_bwd(op: str, res, g):
+    """Batched backward rule: {BNT, BNN} is closed under differentiation
+    modulo one explicit transpose of the cotangent/operand (a batched TN
+    is a batched NN of the swapped operand) — every gradient of a batched
+    dispatch is itself a policy-governed batched dispatch."""
+    import jax.numpy as jnp
+
+    a, b = res
+    if op == "BNT":  # C_i = A_i B_i^T: dA_i = G_i @ B_i, dB_i = G_i^T @ A_i
+        da = _dispatch3("BNN", g, b)
+        db = _dispatch3("BNN", jnp.swapaxes(g, -1, -2), a)
+    else:  # BNN, C_i = A_i B_i: dA_i = G_i @ B_i^T, dB_i = A_i^T @ G_i
+        da = _dispatch3("BNT", g, b)
+        db = _dispatch3("BNN", jnp.swapaxes(a, -1, -2), g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_dispatch3.defvjp(_dispatch3_fwd, _dispatch3_bwd)
+
+
 def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     """Compute one dense-layer GEMM through the policy-selected
     (candidate, tile config).
@@ -212,7 +219,8 @@ def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     ``b`` is a weight in the paper's row-major (out, in) convention, so the
     forward pass of a dense layer is literally the paper's NT operation.
     Leading batch dims of ``a`` are flattened for NT/NN (TN contracts the
-    leading dim, so it is strictly 2-D).
+    leading dim, so it is strictly 2-D).  The batched BNT/BNN ops go
+    through ``dispatch_batched``.
 
     Differentiating through ``dispatch`` re-enters it: the backward data
     and weight gradients are dispatched as NN/TN OpKeys under the policy
@@ -223,6 +231,10 @@ def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     (prefer ``use_policy`` around the full computation).
     """
     check_op(op)
+    if op in BATCHED_OPS:
+        raise ValueError(
+            f"op {op!r} is batched; call dispatch_batched({op!r}, a, b)"
+        )
     if policy is not None:
         with use_policy(policy):
             return dispatch(op, a, b)
@@ -235,29 +247,52 @@ def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     return out.reshape(lead + (n,))
 
 
-def dispatch_nt(a, b, policy: Optional[SelectionPolicy] = None):
-    """Deprecated pre-op-space entry point: ``dispatch("NT", a, b)``.
+def dispatch_batched(op: str, a, b, policy: Optional[SelectionPolicy] = None):
+    """Compute one batched GEMM — the attention contractions — through the
+    policy-selected (candidate, tile config).
 
-    Kept as a thin compatibility wrapper so existing callers keep working
-    — and, unlike the pre-redesign engine, gradients taken through it now
-    route the backward NN/TN GEMMs through the policy too instead of
-    silently diverging to whatever XLA derives.  Warns once per process.
+      dispatch_batched("BNT", a, b)  a:(..., m, k) @ b:(..., n, k)^T -> (..., m, n)
+      dispatch_batched("BNN", a, b)  a:(..., m, k) @ b:(..., k, n)   -> (..., m, n)
+
+    The leading axes of ``a`` and ``b`` must match (broadcast K/V across
+    the GQA group *before* dispatching) and collapse to one batch extent
+    ``g`` — the ``OpKey`` the policy sees is ``(op, m, n, k, dsize, g)``,
+    with (m, n, k) the per-slice extents.  Differentiating re-enters
+    dispatch with batched gradient OpKeys, same contract as ``dispatch``:
+    wrap the whole ``value_and_grad`` call in one ``use_policy`` scope.
     """
-    _warn_once(
-        "dispatch_nt",
-        "dispatch_nt(a, b) is deprecated; call dispatch('NT', a, b) — the "
-        "op-space entry point whose backward also dispatches the NN/TN "
-        "gradient GEMMs",
-    )
-    return dispatch("NT", a, b, policy=policy)
+    check_op(op)
+    if op not in BATCHED_OPS:
+        raise ValueError(
+            f"op {op!r} is not batched; call dispatch({op!r}, a, b)"
+        )
+    if policy is not None:
+        with use_policy(policy):
+            return dispatch_batched(op, a, b)
+    if a.ndim < 3 or b.ndim != a.ndim:
+        raise ValueError(
+            f"dispatch_batched({op!r}) needs >= 3-D operands with matching "
+            f"leading batch axes; got {a.shape} and {b.shape}"
+        )
+    lead = a.shape[:-2]
+    if b.shape[:-2] != lead:
+        raise ValueError(
+            f"dispatch_batched({op!r}) leading batch axes differ: "
+            f"{a.shape} vs {b.shape} — broadcast the operands first"
+        )
+    a3 = a.reshape((-1,) + a.shape[-2:])
+    b3 = b.reshape((-1,) + b.shape[-2:])
+    out = _dispatch3(op, a3, b3)
+    return out.reshape(lead + out.shape[-2:])
 
 
 def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
     """Pretty-print per-(op, candidate, tile-config) decision counts for
     ``policy`` (default: the scoped policy).  Rows are grouped by op kind
     and keyed ``NAME@BMxBNxBK`` for decisions that carried an explicit tile
-    (``NAME`` for kernel-default ones), so backward-GEMM routing is visible
-    in production logs.  Returns the rendered table; callers print it."""
+    (``NAME`` for kernel-default ones), so backward-GEMM and attention
+    routing is visible in production logs.  Returns the rendered table;
+    callers print it."""
     pol = policy if policy is not None else current_policy()
     stats = pol.stats
     lines = [f"dispatch report — {pol!r}"]
@@ -292,7 +327,7 @@ def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
 
 def _parse_fixed_arg(arg: str) -> FixedPolicy:
     """``fixed:`` spec bodies — either a single candidate or an
-    op-qualified table (``nt=XLA_NT,nn=PALLAS_NN@128x128x128``)."""
+    op-qualified table (``nt=XLA_NT,bnt=PALLAS_BNT@128x128x128``)."""
     from repro.kernels.tiling import parse_config_key
 
     def parse_entry(val: str):
@@ -318,7 +353,7 @@ def _parse_fixed_arg(arg: str) -> FixedPolicy:
         if not eq or op not in OPS or not val.strip():
             raise _spec_error(
                 f"malformed op-qualified fixed entry {part!r}; expected "
-                "nt=<NAME>[@BMxBNxBK] with op in nt/nn/tn"
+                "nt=<NAME>[@BMxBNxBK] with op in nt/nn/tn/bnt/bnn"
             )
         by_op[op] = parse_entry(val)
     if not by_op:
@@ -330,10 +365,11 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
     """Build a policy from a CLI-friendly spec string.
 
       model[:path]              learned selector (default artifact or path)
-      fixed:XLA_TNN             FixedPolicy (backward GEMMs run each op's
+      fixed:XLA_TNN             FixedPolicy (other ops — backward GEMMs,
+                                attention contractions — run each op's
                                 XLA reference)
       fixed:PALLAS_NT@256x256x512   FixedPolicy with a forced tile config
-      fixed:nt=XLA_NT,nn=PALLAS_NN[@BMxBNxBK],tn=XLA_TN
+      fixed:nt=XLA_NT,nn=PALLAS_NN[@BMxBNxBK],tn=XLA_TN,bnt=PALLAS_BNT,bnn=XLA_BNN
                                 op-qualified FixedPolicy: force a
                                 (candidate, tile) per op kind
       analytic                  AnalyticPolicy on the default hardware

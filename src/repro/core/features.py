@@ -4,8 +4,12 @@ Paper format (8-dim):  (gm, sm, cc, mbw, l2c, m, n, k) -> label in {-1, +1}
 
 Op-space extension (9-dim): the paper routes only the forward NT GEMM;
 our dispatch covers the backward NN/TN gradients too, so the op kind is a
-model feature — appended as the *last* column (ordinal-encoded) so models
-trained on the 8-dim paper layout keep predicting unchanged (tree-based
+model feature — ordinal-encoded.
+
+Batched extension (10-dim): the attention contractions (BNT/BNN) add the
+collapsed batch extent ``g`` as the last column.  Each extension appends
+*after* the existing layout, so models trained on the 8-dim paper format
+or the 9-dim op-space format keep predicting unchanged (tree-based
 learners never look past the feature indices they were trained on).
 
 Feature generation is O(1) — the paper stresses this so the predictor adds
@@ -30,20 +34,21 @@ __all__ = [
     "normalize01",
 ]
 
-FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k", "op")
+FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k", "op", "g")
 
 # Ordinal op encoding; index order matches opkey.OPS.
-OP_FEATURE = {"NT": 0.0, "NN": 1.0, "TN": 2.0}
+OP_FEATURE = {"NT": 0.0, "NN": 1.0, "TN": 2.0, "BNT": 3.0, "BNN": 4.0}
 
 
 def make_features(
-    hw: HardwareSpec, m: int, n: int, k: int, op: str = "NT"
+    hw: HardwareSpec, m: int, n: int, k: int, op: str = "NT", g: int = 1
 ) -> np.ndarray:
-    """The paper's 8-dim sample vector plus the op-kind column.  O(1)."""
+    """The paper's 8-dim sample vector plus the op-kind and batch-extent
+    columns.  O(1)."""
     gm, sm, cc, mbw, l2c = hw.features()
     return np.array(
         [gm, sm, cc, mbw, l2c, float(m), float(n), float(k),
-         OP_FEATURE[check_op(op)]]
+         OP_FEATURE[check_op(op)], float(g)]
     )
 
 
@@ -51,6 +56,7 @@ def make_feature_matrix(
     hw: HardwareSpec,
     mnk: Sequence[Sequence[int]],
     ops: Optional[Sequence[str]] = None,
+    gs: Optional[Sequence[int]] = None,
 ) -> np.ndarray:
     base = np.array(hw.features(), dtype=np.float64)
     mnk = np.asarray(mnk, dtype=np.float64)
@@ -60,8 +66,12 @@ def make_feature_matrix(
         op_col = np.array(
             [[OP_FEATURE[check_op(o)]] for o in ops], dtype=np.float64
         )
+    if gs is None:
+        g_col = np.ones((len(mnk), 1))  # unbatched ops
+    else:
+        g_col = np.asarray(gs, dtype=np.float64).reshape(-1, 1)
     return np.concatenate(
-        [np.tile(base, (len(mnk), 1)), mnk, op_col], axis=1
+        [np.tile(base, (len(mnk), 1)), mnk, op_col, g_col], axis=1
     )
 
 

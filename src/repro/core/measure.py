@@ -66,15 +66,18 @@ __all__ = [
 #       spans the whole (op x shape x candidate x config) selection space.
 #       v1/v2 keys — which could only describe the forward op — migrate on
 #       load with op="NT".
-MEASURE_SCHEMA_VERSION = 3
+#   v4: keys gain the batch extent ("plat|hw|dtype|op|g|m|n|k") so the
+#       batched attention contractions (BNT/BNN) are first-class entries.
+#       v3 keys — necessarily unbatched — migrate on load with g=1.
+MEASURE_SCHEMA_VERSION = 4
 
 # select() receives an element size, not a dtype; measurement needs a real
 # dtype to build operands.  Sizes outside this map are not measurable (the
 # policy falls back to the analytic model for them).
 DTYPE_BY_DSIZE: Dict[int, str] = {2: "bfloat16", 4: "float32"}
 
-# (platform, hardware, dtype, op, m, n, k)
-MeasurementKey = Tuple[str, str, str, str, int, int, int]
+# (platform, hardware, dtype, op, g, m, n, k)
+MeasurementKey = Tuple[str, str, str, str, int, int, int, int]
 
 
 def default_cache_path() -> str:
@@ -88,21 +91,26 @@ def default_cache_path() -> str:
 
 
 def _normalize_mkey(key) -> MeasurementKey:
-    """Canonical 7-tuple key.  Legacy 6-tuples (no op component — the
-    pre-op-space cache API) mean the forward NT op."""
+    """Canonical 8-tuple key.  Legacy 6-tuples (no op component — the
+    pre-op-space cache API) mean the forward NT op; legacy 7-tuples (no
+    batch component) mean g=1 — both keep working at ``get``/``put``."""
     key = tuple(key)
     if len(key) == 6:
         platform, hw, dtype, m, n, k = key
-        return (str(platform), str(hw), str(dtype), "NT", int(m), int(n), int(k))
-    if len(key) != 7:
+        op, g = "NT", 1
+    elif len(key) == 7:
+        platform, hw, dtype, op, m, n, k = key
+        g = 1
+    elif len(key) == 8:
+        platform, hw, dtype, op, g, m, n, k = key
+    else:
         raise ValueError(
             f"measurement key {key!r} must be (platform, hardware, dtype, "
-            "op, m, n, k)"
+            "op, g, m, n, k)"
         )
-    platform, hw, dtype, op, m, n, k = key
     return (
         str(platform), str(hw), str(dtype), check_op(op),
-        int(m), int(n), int(k),
+        int(g), int(m), int(n), int(k),
     )
 
 
@@ -143,15 +151,20 @@ def _file_lock(path: str):
 
 def _parse_key(s: str, version: int = MEASURE_SCHEMA_VERSION) -> MeasurementKey:
     # split from both ends: hardware names may themselves contain '|';
-    # platform, dtype, op and the three ints never do
-    if version >= 3:
+    # platform, dtype, op and the ints never do
+    if version >= 4:
+        head, op, g, m, n, k = s.rsplit("|", 5)
+    elif version == 3:  # v3 keys carry no batch component: g=1
         head, op, m, n, k = s.rsplit("|", 4)
+        g = 1
     else:  # v1/v2 keys carry no op component: they meant the forward op
         head, m, n, k = s.rsplit("|", 3)
-        op = "NT"
+        op, g = "NT", 1
     platform, rest = head.split("|", 1)
     hardware, dtype = rest.rsplit("|", 1)
-    return (platform, hardware, dtype, check_op(op), int(m), int(n), int(k))
+    return (
+        platform, hardware, dtype, check_op(op), int(g), int(m), int(n), int(k)
+    )
 
 
 def _normalize_times(times: Dict) -> Dict[str, Dict[str, float]]:
@@ -184,16 +197,17 @@ def best_times(times: Dict[str, Dict[str, float]]) -> Dict[str, Tuple[str, float
 
 
 class MeasurementCache:
-    """Persistent ``(platform, hardware, dtype, op, m, n, k) ->
+    """Persistent ``(platform, hardware, dtype, op, g, m, n, k) ->
     {candidate: {config_key: seconds}}``.
 
     Versioned like selector artifacts: v1 files (flat per-candidate
-    timings) and v2 files (op-less keys — migrated as the forward NT op)
-    migrate on load; files newer than ``MEASURE_SCHEMA_VERSION`` are
-    rejected rather than misread.  Legacy op-less 6-tuple keys are accepted
-    by ``get``/``put`` and normalised the same way.  ``save`` writes
-    atomically (tmp + rename) so a crash mid-write cannot corrupt a warm
-    cache.
+    timings), v2 files (op-less keys — migrated as the forward NT op) and
+    v3 files (batch-less keys — migrated with g=1) migrate on load; files
+    newer than ``MEASURE_SCHEMA_VERSION`` are rejected rather than
+    misread.  Legacy op-less 6-tuple and batch-less 7-tuple keys are
+    accepted by ``get``/``put`` and normalised the same way.  ``save``
+    writes atomically (tmp + rename) so a crash mid-write cannot corrupt a
+    warm cache.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -221,7 +235,8 @@ class MeasurementCache:
         # v1 (and unversioned v0-era) entries hold flat {name: seconds}
         # values; _normalize_times folds them under the "default" config
         # key — a v1 cache keeps answering warm hits after the upgrade.
-        # Pre-v3 keys carry no op component and migrate as op="NT".
+        # Pre-v3 keys carry no op component and migrate as op="NT";
+        # pre-v4 keys carry no batch component and migrate as g=1.
         for ks, times in payload.get("entries", {}).items():
             cache._entries[_parse_key(ks, version)] = _normalize_times(times)
         return cache
@@ -354,9 +369,14 @@ def bench_fn(fn, a, b, reps: int, warmup: int = 1, stat: str = "median") -> floa
     return float(statistics.median(ts) if stat == "median" else min(ts))
 
 
-def operand_shapes(op: str, m: int, n: int, k: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
-    """Storage-layout operand shapes of one GEMM op (``core/opkey.py``)."""
+def operand_shapes(op: str, m: int, n: int, k: int, g: int = 1):
+    """Storage-layout operand shapes of one GEMM op (``core/opkey.py``).
+    Batched ops get 3-D shapes with the leading batch extent ``g``."""
     check_op(op)
+    if op == "BNT":
+        return (g, m, k), (g, n, k)
+    if op == "BNN":
+        return (g, m, k), (g, k, n)
     if op == "NT":
         return (m, k), (n, k)
     if op == "NN":
@@ -370,6 +390,7 @@ def measure_candidates(
     k: int,
     dtype: str = "float32",
     op: str = "NT",
+    g: int = 1,
     candidates: Optional[Sequence[str]] = None,
     hardware: Optional[HardwareSpec] = None,
     distributed: bool = False,
@@ -380,10 +401,12 @@ def measure_candidates(
     tune: bool = True,
     max_tile_configs: int = 4,
 ) -> Dict[str, Dict[str, float]]:
-    """Time every admissible (candidate, tile config) for one (op, shape)
-    on this backend; returns ``{name: {config_key: seconds}}``.
+    """Time every admissible (candidate, tile config) for one
+    (op, g, shape) on this backend; returns ``{name: {config_key:
+    seconds}}``.
 
-    Operands are built in ``op``'s storage layout and only candidates
+    Operands are built in ``op``'s storage layout — batched ops get 3-D
+    operands with the leading batch extent ``g`` — and only candidates
     implementing the op are considered.  Tunable candidates are swept over
     their roofline-pruned config shortlist (``tune=False`` restricts them
     to the default tiling); non-tunable candidates are timed once under
@@ -405,7 +428,7 @@ def measure_candidates(
     names = tuple(candidates or CANDIDATES)
     dt = jnp.dtype(dtype)
     dsize = dt.itemsize
-    a_shape, b_shape = operand_shapes(op, m, n, k)
+    a_shape, b_shape = operand_shapes(op, m, n, k, g)
     times: Dict[str, Dict[str, float]] = {}
     with _eval_scope():
         ka, kb = jax.random.split(jax.random.PRNGKey(seed))
@@ -414,7 +437,7 @@ def measure_candidates(
         for name in names:
             cand = get_candidate(name)
             if not candidate_fits_memory(
-                cand, m, n, k, dsize, hw.mem_gib, mem_budget_frac, op=op
+                cand, m, n, k, dsize, hw.mem_gib, mem_budget_frac, op=op, g=g
             ):
                 continue  # OOM guard: never materialise an over-budget transpose
             if not candidate_allowed(cand, distributed, op=op):
@@ -500,7 +523,7 @@ def tile_tables_from_cache(
     # one pass: per-shape winners and the modal tally come from the same
     # best_times() fold of each record
     wins: Dict[Tuple[str, str], Dict[str, int]] = {}
-    for (rec_platform, _hw, rec_dtype, rec_op, m, n, k), times in cache.records():
+    for (rec_platform, _hw, rec_dtype, rec_op, _g, m, n, k), times in cache.records():
         if platform is not None and rec_platform != platform:
             continue
         if dtype is not None and rec_dtype != dtype:

@@ -1,4 +1,4 @@
-"""The op-space selection key: *(op kind x shape x dtype width)*.
+"""The op-space selection key: *(op kind x batch x shape x dtype width)*.
 
 The paper's 28% end-to-end speedup comes from routing the *training*
 GEMMs — the forward NT plus the backward data/weight gradients — through
@@ -9,29 +9,51 @@ learned selection.  Those three matmuls of a dense layer are distinct
   NN   C = A @ B      A:(m, k)  B:(k, n)   data gradient  dX = dY @ W
   TN   C = A^T @ B    A:(k, m)  B:(k, n)   weight gradient dW = dY^T @ X
 
-``OpKey`` names one dispatch decision point: which op, at which logical
-(m, n, k) — m/n are the output extents, k the contraction — and at which
+The attention contractions widen the space to *batched* GEMMs — cuDNN's
+canonical attention primitive (batched-strided GEMM) — with one extra
+extent ``g``, the collapsed product of the leading batch/head axes:
+
+  BNT  C_i = A_i @ B_i^T  A:(g, m, k)  B:(g, n, k)   Q @ K^T logits
+  BNN  C_i = A_i @ B_i    A:(g, m, k)  B:(g, k, n)   probs @ V
+
+``OpKey`` names one dispatch decision point: which op, at which batch
+extent ``g`` (1 for the unbatched ops), at which logical (m, n, k) —
+m/n are the per-slice output extents, k the contraction — and at which
 element size.  Every ``SelectionPolicy.select`` takes an ``OpKey`` and the
 whole persistence stack (measurement caches, selector artifacts, dispatch
 reports) is keyed by it, so the selection space is genuinely
-*(op x shape x tile config)* — the same generalization AutoTVM made from
-per-kernel to per-operator learned cost models.
+*(op x batch x shape x tile config)* — the same generalization AutoTVM
+made from per-kernel to per-operator learned cost models.
 
-Legacy positional ``select(m, n, k, dsize)`` calls are adapted by
-``coerce_key`` (they mean ``op="NT"``, the only op the old API could
-express); that shim is deprecated and kept for one release.
+The legacy positional ``select(m, n, k, dsize)`` form was removed after
+its one-release deprecation cycle: ``coerce_key`` now accepts only an
+``OpKey`` and raises a clean ``TypeError`` otherwise.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
-__all__ = ["OPS", "OpKey", "check_op", "coerce_key", "shape_key", "parse_shape_key"]
+__all__ = [
+    "OPS",
+    "BATCHED_OPS",
+    "OpKey",
+    "check_op",
+    "coerce_key",
+    "shape_key",
+    "parse_shape_key",
+]
 
-# The op kinds of the dense layer's training GEMMs.  Closed under
-# differentiation: d(NT) -> {NN, TN}, d(NN) -> {NT, TN}, d(TN) -> {NT, NN},
-# which is what lets the dispatch engine's custom_vjp re-enter itself.
-OPS: Tuple[str, ...] = ("NT", "NN", "TN")
+# The op kinds of the dense layer's training GEMMs plus the batched
+# attention contractions.  Closed under differentiation:
+# d(NT) -> {NN, TN}, d(NN) -> {NT, TN}, d(TN) -> {NT, NN}, and — with an
+# explicit transpose of one operand — d(BNT) -> {BNN}, d(BNN) -> {BNT,
+# BNN}; this is what lets the dispatch engine's custom_vjp re-enter
+# itself for both the 2-D and the batched entry points.
+OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN")
+
+# The subset with a leading batch axis (attention contractions).
+BATCHED_OPS: Tuple[str, ...] = ("BNT", "BNN")
 
 
 def check_op(op: str) -> str:
@@ -41,50 +63,57 @@ def check_op(op: str) -> str:
 
 
 class OpKey(NamedTuple):
-    """One dispatch decision point: op kind, logical output/contraction
-    extents, and element size.  ``m``/``n`` are the *output* dims and ``k``
-    the contraction dim regardless of op, so (m, n, k) reads the same way
-    for all three ops (the storage layouts differ, see module docstring)."""
+    """One dispatch decision point: op kind, per-slice output/contraction
+    extents, element size, and — for the batched BNT/BNN ops — the
+    collapsed batch extent ``g``.  ``m``/``n`` are the *output* dims and
+    ``k`` the contraction regardless of op, so (m, n, k) reads the same
+    way for every op (the storage layouts differ, see module docstring).
+    ``g`` is 1 for the unbatched NT/NN/TN ops."""
 
     op: str
     m: int
     n: int
     k: int
     dsize: int = 4
+    g: int = 1
 
     def mnk(self) -> Tuple[int, int, int]:
         return (self.m, self.n, self.k)
 
 
-def coerce_key(
-    key,
-    n: Optional[int] = None,
-    k: Optional[int] = None,
-    dsize: int = 4,
-) -> OpKey:
-    """Normalise a ``select`` argument list to an ``OpKey``.
+def coerce_key(key) -> OpKey:
+    """Normalise a ``select`` argument to a validated ``OpKey``.
 
-    Accepts an ``OpKey`` (the op-space API) or the legacy positional form
-    ``select(m, n, k[, dsize])`` — which could only ever mean the forward
-    NT op, so that is what it maps to.  The positional form is deprecated;
-    it is kept so pre-redesign policies and call sites keep working for one
-    release.
+    Only the op-space API is accepted; the legacy positional
+    ``select(m, n, k[, dsize])`` form was removed after its deprecation
+    release and now raises a clean ``TypeError``.
     """
-    if isinstance(key, OpKey):
-        return OpKey(
-            check_op(key.op), int(key.m), int(key.n), int(key.k), int(key.dsize)
-        )
-    if n is None or k is None:
+    if not isinstance(key, OpKey):
         raise TypeError(
-            "select() takes an OpKey or the legacy positional (m, n, k[, dsize])"
+            "select() takes an OpKey(op, m, n, k, dsize, g); the legacy "
+            "positional (m, n, k[, dsize]) form was removed — build an "
+            "OpKey('NT', m, n, k, dsize) instead"
         )
-    return OpKey("NT", int(key), int(n), int(k), int(dsize))
+    op = check_op(key.op)
+    g = int(key.g)
+    if g < 1:
+        raise ValueError(f"OpKey batch extent g={g} must be >= 1")
+    if g != 1 and op not in BATCHED_OPS:
+        # an unbatched op measured/labelled under g>1 would poison the
+        # cache and the selector's training rows with an extent the GEMM
+        # never ran at
+        raise ValueError(
+            f"OpKey op {op!r} is unbatched; batch extent g={g} is only "
+            f"meaningful for {BATCHED_OPS}"
+        )
+    return OpKey(op, int(key.m), int(key.n), int(key.k), int(key.dsize), g)
 
 
 def shape_key(mnk: Sequence[int]) -> str:
     """Stable string form of an (m, n, k) shape — the per-shape tile-table
-    key in v3 selector artifacts (same ``x``-joined style as tile-config
-    keys)."""
+    key in v3+ selector artifacts (same ``x``-joined style as tile-config
+    keys).  Batched ops key their per-slice shape: the tile space tiles
+    one slice, so ``g`` does not enter."""
     m, n, k = mnk
     return f"{int(m)}x{int(n)}x{int(k)}"
 

@@ -8,12 +8,12 @@ every layer:
     with use_policy(FixedPolicy("XLA_TNN")):
         logits = lm.lm_forward(params, cfg, batch)   # every NT op -> XLA_TNN
 
-The selection space is the full *(op x shape x tile config)* product:
-every policy's ``select`` takes an ``OpKey`` (``core/opkey.py`` — the
-forward NT plus the backward NN/TN gradient GEMMs; legacy positional
-``select(m, n, k, dsize)`` calls are adapted and mean NT) and returns a
-``Decision(name, config)`` — the candidate to run and, for tunable
-(Pallas) candidates, the ``(bm, bn, bk)`` VMEM tile to run it at
+The selection space is the full *(op x batch x shape x tile config)*
+product: every policy's ``select`` takes an ``OpKey`` (``core/opkey.py``
+— the forward NT, the backward NN/TN gradient GEMMs, and the batched
+BNT/BNN attention contractions with their collapsed batch extent ``g``)
+and returns a ``Decision(name, config)`` — the candidate to run and, for
+tunable (Pallas) candidates, the ``(bm, bn, bk)`` VMEM tile to run it at
 (``config=None`` means the kernel's built-in default tiling).
 
 Policies implement the ``SelectionPolicy`` protocol (``select`` + ``stats``)
@@ -108,9 +108,9 @@ class Decision(NamedTuple):
 @runtime_checkable
 class SelectionPolicy(Protocol):
     """Anything that can pick a (candidate, tile config) for an ``OpKey``.
-    ``select`` returns a ``Decision`` (legacy policies taking positional
-    (m, n, k, dsize) args and/or returning a bare name string are adapted
-    by the dispatch engine, with a deprecation warning).
+    ``select`` takes an ``OpKey`` and returns a ``Decision`` (the legacy
+    positional/bare-string conventions were removed after their
+    deprecation release; the engine raises a clean error on them).
 
     ``stats`` must expose ``calls: int`` and ``by_candidate: Dict[str, int]``
     (see ``selector.SelectorStats``) so dispatch decisions stay observable.
@@ -118,7 +118,7 @@ class SelectionPolicy(Protocol):
 
     stats: "object"
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> "Decision":
+    def select(self, key: "OpKey") -> "Decision":
         ...
 
 
@@ -143,12 +143,12 @@ class PolicyBase:
         return candidate_fits_memory(
             cand, key.m, key.n, key.k, key.dsize,
             self.hardware.mem_gib, self.mem_budget_frac, config=config,
-            op=key.op,
+            op=key.op, g=key.g,
         ) and candidate_allowed(
             cand, self.distributed, config=config, op=key.op
         )
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+    def select(self, key: OpKey) -> Decision:
         raise NotImplementedError
 
 
@@ -211,8 +211,8 @@ class FixedPolicy(PolicyBase):
                 )
         return config
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
-        key = coerce_key(key, n, k, dsize)
+    def select(self, key: OpKey) -> Decision:
+        key = coerce_key(key)
         entry = self.by_op.get(key.op)
         if entry is None:
             # op not forced (e.g. a backward GEMM under a forced forward
@@ -261,8 +261,8 @@ class ModelPolicy:
     def stats(self):
         return self.selector.stats
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
-        key = coerce_key(key, n, k, dsize)
+    def select(self, key: OpKey) -> Decision:
+        key = coerce_key(key)
         name = self.selector.select(key)
         # tile_config_for validates the learned tile for *this* dispatch
         # (tunability + VMEM at this dsize): an infeasible artifact entry
@@ -324,10 +324,10 @@ class AnalyticPolicy(PolicyBase):
                 best_t, best_cfg = t, cfg
         return best_cfg
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+    def select(self, key: OpKey) -> Decision:
         from .simulate import simulate_time
 
-        key = coerce_key(key, n, k, dsize)
+        key = coerce_key(key)
         cache_key = (current_platform(), key)
         decision = self._cache.get(cache_key)
         if decision is None:
@@ -338,7 +338,7 @@ class AnalyticPolicy(PolicyBase):
                     continue
                 t = simulate_time(
                     self.hardware, cand.sim_algo, key.m, key.n, key.k,
-                    key.dsize, sigma=self.sigma,
+                    key.dsize, sigma=self.sigma, g=key.g,
                 )
                 if best_t is None or t < best_t:
                     best_t, name = t, cand_name
@@ -375,8 +375,8 @@ class CascadePolicy(PolicyBase):
             get_candidate(name)
         self.names = names
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
-        key = coerce_key(key, n, k, dsize)
+    def select(self, key: OpKey) -> Decision:
+        key = coerce_key(key)
         chosen = None
         for name in self.names:
             if self._admissible(get_candidate(name), key):
@@ -484,12 +484,12 @@ class AutotunePolicy(PolicyBase):
             and measurement_supported()
         )
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> Decision:
+    def select(self, key: OpKey) -> Decision:
         from repro.kernels.tiling import parse_config_key
 
         from .measure import DTYPE_BY_DSIZE, measure_candidates
 
-        key = coerce_key(key, n, k, dsize)
+        key = coerce_key(key)
         platform = current_platform()
         memo_key = (platform, key)
         hit = self._decisions.get(memo_key)
@@ -503,6 +503,7 @@ class AutotunePolicy(PolicyBase):
             self.hardware.name,
             dtype or f"{8 * key.dsize}-bit",
             key.op,
+            key.g,
             key.m,
             key.n,
             key.k,
@@ -511,12 +512,13 @@ class AutotunePolicy(PolicyBase):
         if times is not None:
             self.n_cache_hits += 1
         elif cache_key not in self._unmeasurable and self._can_measure(
-            dtype, 2.0 * key.m * key.n * key.k
+            dtype, 2.0 * key.g * key.m * key.n * key.k
         ):
             times = measure_candidates(
                 key.m, key.n, key.k,
                 dtype=dtype,
                 op=key.op,
+                g=key.g,
                 candidates=self.candidates,
                 hardware=self.hardware,
                 distributed=self.distributed,

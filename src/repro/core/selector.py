@@ -71,7 +71,13 @@ DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
 #       ({op: {candidate: {"modal": key, "by_shape": {"MxNxK": key}}}}
 #       with nearest-shape fallback at lookup).  v2 artifacts migrate with
 #       their modal table under op "NT"; v0/v1 with empty tables.
-SCHEMA_VERSION = 3
+#   v4: batched op space — binary_pairs gain the BNT/BNN attention
+#       contractions and the batch extent ``g`` enters the feature vector
+#       as the 10th column.  v3 artifacts migrate with the standard
+#       batched pairs; models trained on the 8-dim paper layout or the
+#       9-dim op-space layout keep predicting (appended columns are
+#       invisible to trees trained without them).
+SCHEMA_VERSION = 4
 
 
 @dataclass
@@ -278,11 +284,10 @@ class MTNNSelector:
                 return cand_name
         return DEFAULT_BY_OP[key.op]
 
-    def select(self, key, n=None, k=None, dsize: int = 4) -> str:
-        """Candidate name for an ``OpKey`` (legacy positional (m, n, k[,
-        dsize]) calls mean the forward NT op).  O(1) features,
+    def select(self, key: OpKey) -> str:
+        """Candidate name for an ``OpKey``.  O(1) features,
         O(trees*depth) walk."""
-        key = coerce_key(key, n, k, dsize)
+        key = coerce_key(key)
         cache_key = (current_platform(), key)
         hit = self._cache.get(cache_key)
         if hit is not None:
@@ -292,7 +297,9 @@ class MTNNSelector:
                 op=key.op,
             )
             return hit
-        x = make_features(self.hardware, key.m, key.n, key.k, op=key.op)[None, :]
+        x = make_features(
+            self.hardware, key.m, key.n, key.k, op=key.op, g=key.g
+        )[None, :]
         if self.mode == "binary":
             direct_name, alt_name = self.pair_for(key.op)
             label = int(self.model.predict(x)[0])
@@ -397,7 +404,9 @@ def _migrate_payload(payload: Dict) -> Dict:
     of ``binary_pairs`` (backward ops get the standard per-op pairs) and
     their modal ``tile_configs`` become modal-only NT ``tile_tables`` —
     exactly how a v2 build dispatched, with backward ops at the kernel
-    default.  Unknown *newer* versions are rejected rather than misread.
+    default.  v3 artifacts predate the batched op space and gain the
+    standard BNT/BNN pairs.  Unknown *newer* versions are rejected rather
+    than misread.
     """
     version = payload.get("schema_version", 0)
     if version > SCHEMA_VERSION:
@@ -426,6 +435,17 @@ def _migrate_payload(payload: Dict) -> Dict:
             }
         }
         payload["schema_version"] = 3
+    if payload["schema_version"] < 4:
+        # v3 artifacts predate the batched op space: their pairs cover
+        # NT/NN/TN only, so the standard batched pairs fill in — exactly
+        # how a v3 build would dispatch once attention entered the space.
+        payload = dict(payload)
+        payload["binary_pairs"] = dict(payload.get("binary_pairs", {}))
+        for op in ("BNT", "BNN"):
+            payload["binary_pairs"].setdefault(
+                op, list(BINARY_PAIRS_BY_OP[op])
+            )
+        payload["schema_version"] = 4
     return payload
 
 
@@ -439,6 +459,8 @@ def _sim_to_candidate(sim_name: str) -> Optional[str]:
         "NN_DIRECT": "XLA_NN",
         "TN_DIRECT": "XLA_TN",
         "TN_VIA_NN": "PALLAS_TN",
+        "BNT_DIRECT": "XLA_BNT",
+        "BNN_DIRECT": "XLA_BNN",
         # already-candidate names pass through
         **{n: n for n in CANDIDATES},
     }

@@ -52,10 +52,12 @@ SIM_ALGOS = ("NT_DIRECT", "TNN", "TNN_FUSED", "XLA_DOT")
 # Arms for the backward ops (opkey.OPS): the data-gradient NN is
 # layout-clean; the weight-gradient TN either feeds the MXU with an
 # in-kernel re-orientation of A (direct) or materialises A^T first (the
-# paper's TNN move applied to the gradient).  ``simulate_time`` accepts
-# these in addition to SIM_ALGOS; the paper-grid dataset builder keeps
-# sweeping only the NT arms.
-OP_SIM_ALGOS = ("NN_DIRECT", "TN_DIRECT", "TN_VIA_NN")
+# paper's TNN move applied to the gradient).  The batched BNT/BNN arms
+# model the attention contractions: ``g`` independent slices sharing one
+# kernel launch, each slice with its op's per-slice mechanics.
+# ``simulate_time`` accepts these in addition to SIM_ALGOS; the
+# paper-grid dataset builder keeps sweeping only the NT arms.
+OP_SIM_ALGOS = ("NN_DIRECT", "TN_DIRECT", "TN_VIA_NN", "BNT_DIRECT", "BNN_DIRECT")
 
 _MXU = 128  # MXU systolic array edge
 _DEFAULT_BLOCK = (512, 512, 512)  # bm, bn, bk used by our Pallas kernels
@@ -119,10 +121,29 @@ def simulate_time(
     k: int,
     dsize: int = 2,
     sigma: float = 0.03,
+    g: int = 1,
 ) -> float:
-    """Modelled wall time (seconds) of one NT-matmul C = A(m,k) @ B(n,k)^T."""
+    """Modelled wall time (seconds) of one GEMM op at per-slice extents
+    (m, n, k).  For the batched BNT/BNN arms ``g`` is the batch extent:
+    ``g`` slices run back-to-back sharing one kernel launch."""
     bm, bn, bk = _DEFAULT_BLOCK
     bw = hw.mem_bw_gbps * 1e9
+
+    if algo in ("BNT_DIRECT", "BNN_DIRECT"):
+        # g independent slices amortising one launch: per-slice cost is the
+        # corresponding unbatched arm's, minus its launch overhead.
+        overhead = hw.launch_overhead_us * 1e-6
+        if algo == "BNT_DIRECT":
+            # the NT kernel's per-slice in-VMEM re-orientation of B, paid
+            # once per m-tile of each slice (same mechanics as NT_DIRECT)
+            n_tiles_m = math.ceil(m / bm)
+            t_tr = (n * k * n_tiles_m) * dsize / (bw * 0.25)
+            eff_scale = 0.85 if k < 512 else 0.95
+            per_slice = _matmul_time(hw, m, n, k, dsize, eff_scale) + t_tr
+        else:  # BNN_DIRECT: layout-clean per slice
+            per_slice = _matmul_time(hw, m, n, k, dsize, 0.97)
+        t = g * (per_slice - overhead) + overhead
+        return t * _noise(hw.name, f"{algo}|g{g}", m, n, k, sigma)
 
     if algo == "TNN":
         # out-of-place transpose: read + write n*k at transpose_bw_frac of

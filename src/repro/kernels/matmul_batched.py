@@ -1,0 +1,130 @@
+"""Batched matmul kernels: grid-over-batch versions of NT and NN.
+
+  matmul_bnt  C_i = A_i @ B_i^T   A:(g, m, k)  B:(g, n, k)  ->  (g, m, n)
+  matmul_bnn  C_i = A_i @ B_i     A:(g, m, k)  B:(g, k, n)  ->  (g, m, n)
+
+The attention contractions are exactly these two ops: ``Q @ K^T`` is a
+batched NT over the collapsed (batch x head) axis and ``probs @ V`` a
+batched NN — the batched-strided GEMM cuDNN treats as the canonical
+attention primitive.  The grid grows one leading *parallel* batch
+dimension over the unbatched kernels; each batch slice reuses the
+existing (bm, bn, bk) tile space unchanged (one slice's working set is
+what lives in VMEM, so the per-slice VMEM accounting in
+``kernels/tiling.py`` transfers as is), and the k axis stays sequential
+("arbitrary") so one f32 accumulator per (batch, i, j) tile carries
+partial sums across k steps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (
+    CompilerParams,
+    DEFAULT_BLOCK,
+    cdiv,
+    normalize_block,
+    round_up,
+    should_interpret,
+)
+
+__all__ = ["matmul_bnt", "matmul_bnn"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, nt: bool):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]  # (bm, bk): one batch slice's operand block
+    b = b_ref[0]
+    if nt:
+        # stored (bn, bk): VMEM-side re-orientation, once per grid step —
+        # the same structural NT cost as the unbatched direct-NT kernel
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad3(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad the trailing two axes of a (g, r, c) array."""
+    _, r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, 0), (0, rows - r), (0, cols - c)))
+
+
+def _matmul_batched(
+    a: jax.Array,
+    b: jax.Array,
+    nt: bool,
+    block: Optional[Tuple[int, int, int]],
+    interpret: Optional[bool],
+) -> jax.Array:
+    g, m, k = a.shape
+    if nt:  # b: (g, n, k)
+        g2, n, k2 = b.shape
+    else:  # b: (g, k, n)
+        g2, k2, n = b.shape
+    assert g == g2 and k == k2, f"batched operand mismatch: {a.shape} vs {b.shape}"
+    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    ap = _pad3(a, mp, kp)
+    bp = _pad3(b, np_ if nt else kp, kp if nt else np_)
+    n_k = cdiv(kp, bk)
+    interp = should_interpret() if interpret is None else interpret
+
+    if nt:
+        b_spec = pl.BlockSpec((1, bn, bk), lambda gi, i, j, kk: (gi, j, kk))
+    else:
+        b_spec = pl.BlockSpec((1, bk, bn), lambda gi, i, j, kk: (gi, kk, j))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, nt=nt),
+        grid=(g, cdiv(mp, bm), cdiv(np_, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, i, j, kk: (gi, i, kk)),
+            b_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, kk: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        interpret=interp,
+        name="matmul_bnt" if nt else "matmul_bnn",
+    )(ap, bp)
+    return out[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_bnt(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Batched NT: C_i = A_i @ B_i^T, A:(g,m,k), B:(g,n,k) -> (g,m,n)."""
+    return _matmul_batched(a, b, True, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_bnn(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Batched NN: C_i = A_i @ B_i, A:(g,m,k), B:(g,k,n) -> (g,m,n)."""
+    return _matmul_batched(a, b, False, block, interpret)

@@ -6,6 +6,8 @@
   matmul_tnn        C = A @ B^T        paper's TNN: transpose kernel + NN
   matmul_tnn_fused  C = A @ B^T        fused NT, MXU-staged transpose
   matmul_tn         C = A^T @ B        weight-gradient TN: transpose + NN
+  matmul_bnt        C_i = A_i @ B_i^T  batched NT (attention Q @ K^T)
+  matmul_bnn        C_i = A_i @ B_i    batched NN (attention probs @ V)
   transpose         B^T                out-of-place bandwidth-bound kernel
 
 The two-kernel schedules (``matmul_tnn``/``matmul_tn``) take an optional
@@ -24,6 +26,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from .matmul_batched import matmul_bnn, matmul_bnt
 from .matmul_nn import matmul_nn
 from .matmul_nt import matmul_nt
 from .matmul_tnn_fused import matmul_tnn_fused
@@ -36,6 +39,8 @@ __all__ = [
     "matmul_tnn",
     "matmul_tn",
     "matmul_tnn_fused",
+    "matmul_bnt",
+    "matmul_bnn",
 ]
 
 

@@ -17,6 +17,8 @@ __all__ = [
     "matmul_tn",
     "matmul_tnn",
     "matmul_tnn_fused",
+    "matmul_bnt",
+    "matmul_bnn",
 ]
 
 
@@ -50,3 +52,19 @@ def matmul_tn(a: jax.Array, b: jax.Array) -> jax.Array:
 # only in the physical schedule.  Their oracle is matmul_nt.
 matmul_tnn = matmul_nt
 matmul_tnn_fused = matmul_nt
+
+
+def matmul_bnt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched NT: C_i = A_i @ B_i^T, A:(g,m,k), B:(g,n,k) -> (g,m,n);
+    accumulate in f32."""
+    return jax.lax.dot_general(
+        a, b, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def matmul_bnn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched NN: C_i = A_i @ B_i, A:(g,m,k), B:(g,k,n) -> (g,m,n);
+    accumulate in f32."""
+    return jax.lax.dot_general(
+        a, b, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    ).astype(a.dtype)

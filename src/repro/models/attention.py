@@ -10,6 +10,16 @@ peak logits memory at ``chunk x S`` per head.
 
 GQA is computed in grouped form (``(kv, group)`` head axes) so K/V are
 never materialised at ``n_heads`` width.
+
+Both attention contractions — ``Q @ K^T`` (a batched NT) and
+``probs @ V`` (a batched NN) — route through ``core.dispatch_batched``,
+so the same ``use_policy(...)`` scope that governs the dense-layer GEMMs
+also selects the attention kernels (in train *and* serve; gradients
+re-enter dispatch through the engine's custom_vjp).  The leading
+``(batch, kv)`` axes collapse to the OpKey's batch extent ``g`` and the
+GQA group axis folds into the per-slice *query* extent ``m`` — each kv
+head's group of queries shares one K/V slice, so K/V are still never
+materialised (or broadcast) at ``n_heads`` width.
 """
 
 from __future__ import annotations
@@ -19,6 +29,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.engine import dispatch_batched
 
 from .layers import Param, dense, init_dense, init_rmsnorm, rmsnorm, softcap
 from .rope import apply_rope
@@ -107,6 +119,44 @@ _chunk_barrier = jax.custom_vjp(_barrier_impl)
 _chunk_barrier.defvjp(lambda q, dep: (_barrier_impl(q, dep), dep), _barrier_bwd)
 
 
+def _qk_logits(q_heads: jax.Array, k_slab: jax.Array) -> jax.Array:
+    """``Q @ K^T`` as a policy-dispatched batched NT.
+
+    q_heads: (B, kv, g, C, dh), k_slab: (B, L, kv, dh) -> (B, kv, g, C, L).
+    The GQA group folds into the per-slice query extent (m = g*C) so each
+    of the B*kv batch slices contracts against ONE K slice — no broadcast
+    or replication of K across the group, same as the einsum.  Operands
+    are upcast to f32 so the contraction accumulates *and lands* in f32,
+    matching the replaced einsum's ``preferred_element_type=f32`` logits
+    exactly (for sub-f32 operands this trades the low-precision matmul
+    rate for bit-identical logits; K is upcast once per slab, not per
+    group member).
+    """
+    B, kv, g, C, dh = q_heads.shape
+    L = k_slab.shape[1]
+    q2 = q_heads.reshape(B, kv, g * C, dh)
+    k2 = jnp.swapaxes(k_slab, 1, 2)  # (B, kv, L, dh)
+    logits = dispatch_batched(
+        "BNT", q2.astype(jnp.float32), k2.astype(jnp.float32)
+    )
+    return logits.reshape(B, kv, g, C, L)
+
+
+def _pv_mix(probs: jax.Array, v_slab: jax.Array) -> jax.Array:
+    """``probs @ V`` as a policy-dispatched batched NN.
+
+    probs: (B, kv, g, C, L), v_slab: (B, L, kv, dh) -> (B, C, kv, g, dh).
+    Group folds into the per-slice row extent like ``_qk_logits``: one V
+    slice per (batch, kv) pair, never replicated across the group.
+    """
+    B, kv, g, C, L = probs.shape
+    dh = v_slab.shape[-1]
+    p2 = probs.reshape(B, kv, g * C, L)
+    v2 = jnp.swapaxes(v_slab, 1, 2).astype(probs.dtype)  # (B, kv, L, dh)
+    out = dispatch_batched("BNN", p2, v2).reshape(B, kv, g, C, dh)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, C, kv, g, dh)
+
+
 def _chunk_attend(
     q_chunk: jax.Array,  # (B, C, kv, g, dh) already scaled
     k_slab: jax.Array,  # (B, L, kv, dh)
@@ -114,13 +164,11 @@ def _chunk_attend(
     mask: jax.Array,  # (C, L) bool
     cap: float,
 ) -> jax.Array:
-    logits = jnp.einsum(
-        "bqkgd,bskd->bkgqs", q_chunk, k_slab, preferred_element_type=jnp.float32
-    )
+    logits = _qk_logits(q_chunk.transpose(0, 2, 3, 1, 4), k_slab)
     logits = softcap(logits, cap)
     logits = jnp.where(mask[None, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v_slab.dtype)
-    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v_slab)
+    return _pv_mix(probs, v_slab)
 
 
 def attention(
@@ -250,12 +298,12 @@ def attention_decode(
     )
 
     valid = jnp.arange(slots) < jnp.minimum(pos + 1, slots)  # (slots,)
-    logits = jnp.einsum(
-        "bqkgd,bskd->bkgqs", q, ck.astype(q.dtype), preferred_element_type=jnp.float32
-    )
+    logits = _qk_logits(q.transpose(0, 2, 3, 1, 4), ck.astype(q.dtype))
     logits = softcap(logits, cfg.softcap)
     logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv.astype(q.dtype))
+    # probs round-trip through the cache dtype (quantised like the cache),
+    # then the mix runs at q precision — the pre-dispatch einsum's promote
+    out = _pv_mix(probs.astype(q.dtype), cv.astype(q.dtype))
     out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
     return dense(p["wo"], out), {"k": ck, "v": cv}

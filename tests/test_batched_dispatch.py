@@ -1,0 +1,336 @@
+"""Batched op-space dispatch: the BNT/BNN attention contractions — kernel
+correctness on ragged batch/head shapes at non-default tiles, grad-vs-XLA
+through ``dispatch_batched`` (the batched space is closed under d/dx
+modulo one operand transpose), attention routing through the policy
+engine, and the v3 -> v4 cache/artifact migrations."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.measure import MeasurementCache, measure_candidates, operand_shapes
+from repro.kernels import ops, ref
+
+# g in {1, 3, 8} x per-slice extents from the adversarial set {1, 127, 129}
+# (contraction dims stay modest so interpret mode finishes).
+RAGGED_BATCHED_SHAPES = [
+    (1, 127, 129, 64),
+    (3, 129, 1, 127),
+    (8, 1, 127, 129),
+]
+
+# Non-default tiles for the shapes above: the clamped default for a
+# 127/129-extent axis is 256-wide (pick_block), so 128-wide tiles are
+# genuinely non-default.
+NON_DEFAULT_TILES = [(128, 128, 128), (256, 128, 128)]
+
+
+def _batched_candidates(op):
+    return [n for n, c in core.CANDIDATES.items() if op in c.ops]
+
+
+def _tol(k):
+    return dict(rtol=1e-4, atol=1e-3 * max(1.0, k**0.5))
+
+
+class TestBatchedKernels:
+    @pytest.mark.parametrize("shape", RAGGED_BATCHED_SHAPES, ids=str)
+    @pytest.mark.parametrize("tile", NON_DEFAULT_TILES, ids=str)
+    def test_bnt_matches_reference_at_nondefault_tiles(self, rng, shape, tile):
+        g, m, n, k = shape
+        a = jnp.asarray(rng.randn(g, m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(g, n, k), jnp.float32)
+        got = np.asarray(ops.matmul_bnt(a, b, block=tile))
+        want = np.asarray(ref.matmul_bnt(a, b))
+        np.testing.assert_allclose(got, want, **_tol(k))
+
+    @pytest.mark.parametrize("shape", RAGGED_BATCHED_SHAPES, ids=str)
+    @pytest.mark.parametrize("tile", NON_DEFAULT_TILES, ids=str)
+    def test_bnn_matches_reference_at_nondefault_tiles(self, rng, shape, tile):
+        g, m, n, k = shape
+        a = jnp.asarray(rng.randn(g, m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(g, k, n), jnp.float32)
+        got = np.asarray(ops.matmul_bnn(a, b, block=tile))
+        want = np.asarray(ref.matmul_bnn(a, b))
+        np.testing.assert_allclose(got, want, **_tol(k))
+
+
+class TestBatchedGradDispatch:
+    @pytest.mark.parametrize("op", ["BNT", "BNN"], ids=str)
+    @pytest.mark.parametrize("shape", RAGGED_BATCHED_SHAPES, ids=str)
+    def test_every_batched_candidate_grad_matches_xla(self, rng, op, shape):
+        """grad-vs-XLA for every candidate of each batched op on ragged
+        batch/head shapes, at a non-default tile for the tunable ones."""
+        g, m, n, k = shape
+        a_shape, b_shape = operand_shapes(op, m, n, k, g)
+        a = jnp.asarray(rng.randn(*a_shape), jnp.float32)
+        b = jnp.asarray(rng.randn(*b_shape), jnp.float32)
+        an, bn = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        if op == "BNT":
+            want = an @ np.swapaxes(bn, 1, 2)
+        else:
+            want = an @ bn
+
+        def loss(a, b):
+            return jnp.sum(core.dispatch_batched(op, a, b) ** 2)
+
+        ct = 2.0 * want
+        if op == "BNT":  # C_i = A_i B_i^T
+            want_da = ct @ bn
+            want_db = np.swapaxes(ct, 1, 2) @ an
+        else:  # BNN
+            want_da = ct @ np.swapaxes(bn, 1, 2)
+            want_db = np.swapaxes(an, 1, 2) @ ct
+        for name in _batched_candidates(op):
+            tile = (128, 128, 128) if core.CANDIDATES[name].tunable else None
+            pol = core.FixedPolicy(by_op={op: (name, tile)})
+            with core.use_policy(pol):
+                out = core.dispatch_batched(op, a, b)
+                da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+            np.testing.assert_allclose(
+                np.asarray(out), want, err_msg=name, **_tol(k)
+            )
+            np.testing.assert_allclose(
+                np.asarray(da), want_da, err_msg=f"{name}:dA", **_tol(k)
+            )
+            np.testing.assert_allclose(
+                np.asarray(db), want_db, err_msg=f"{name}:dB", **_tol(k)
+            )
+            # the forward decision landed on the forced (candidate, tile)
+            label = core.Decision(name, tile).label()
+            assert label in pol.stats.by_op[op]
+
+    def test_leading_axes_collapse_to_g(self, rng):
+        """4-D/5-D operands collapse their leading axes to one batch
+        extent; the policy sees the collapsed g."""
+        seen = []
+
+        class Spy:
+            stats = core.SelectorStats()
+
+            def select(self, key):
+                seen.append(key)
+                return core.Decision(core.DEFAULT_BY_OP[key.op], None)
+
+        a = jnp.asarray(rng.randn(2, 3, 4, 5, 16), jnp.float32)
+        b = jnp.asarray(rng.randn(2, 3, 4, 7, 16), jnp.float32)
+        out = core.dispatch_batched("BNT", a, b, policy=Spy())
+        assert out.shape == (2, 3, 4, 5, 7)
+        assert seen == [core.OpKey("BNT", 5, 7, 16, 4, 24)]
+
+    def test_mismatched_batch_axes_rejected(self, rng):
+        a = jnp.ones((2, 4, 8), jnp.float32)
+        b = jnp.ones((3, 5, 8), jnp.float32)
+        with pytest.raises(ValueError, match="batch axes"):
+            core.dispatch_batched("BNT", a, b)
+
+    def test_batched_op_through_dispatch_rejected(self):
+        a = jnp.ones((2, 4, 8), jnp.float32)
+        with pytest.raises(ValueError, match="dispatch_batched"):
+            core.dispatch("BNT", a, a)
+        with pytest.raises(ValueError, match="not batched"):
+            core.dispatch_batched("NT", a, a)
+
+
+class TestAttentionRouting:
+    def _setup(self, rng):
+        from repro.models.attention import AttnConfig, init_attention
+
+        cfg = AttnConfig(d_model=32, n_heads=4, n_kv=2, d_head=8, chunk=8)
+        p = init_attention(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(rng.randn(2, 16, 32), jnp.float32)
+        return cfg, p, x
+
+    def test_attention_records_bnt_and_bnn(self, rng):
+        """One use_policy scope now governs dense *and* attention GEMMs:
+        the QK^T and probs*V contractions land on the policy as batched
+        OpKeys with g = batch x kv x group."""
+        from repro.models.attention import attention
+
+        cfg, p, x = self._setup(rng)
+        pol = core.AnalyticPolicy()
+        with core.use_policy(pol):
+            attention(p, x, cfg)
+        assert {"NT", "BNT", "BNN"} <= set(pol.stats.by_op)
+
+    def test_attention_pallas_batched_matches_xla(self, rng):
+        from repro.models.attention import attention
+
+        cfg, p, x = self._setup(rng)
+        outs = {}
+        for bnt, bnn in (("XLA_BNT", "XLA_BNN"), ("PALLAS_BNT", "PALLAS_BNN")):
+            pol = core.FixedPolicy(by_op={"BNT": bnt, "BNN": bnn})
+            with core.use_policy(pol):
+                outs[bnt] = np.asarray(attention(p, x, cfg))
+        np.testing.assert_allclose(
+            outs["XLA_BNT"], outs["PALLAS_BNT"], rtol=1e-4, atol=1e-4
+        )
+
+    def test_attention_grad_reenters_batched_dispatch(self, rng):
+        from repro.models.attention import attention
+
+        cfg, p, x = self._setup(rng)
+        pol = core.AnalyticPolicy()
+        with core.use_policy(pol):
+            g = jax.grad(lambda x: jnp.sum(attention(p, x, cfg) ** 2))(x)
+        assert np.isfinite(np.asarray(g)).all()
+        # the batched backward GEMMs were policy-dispatched too
+        assert pol.stats.by_op["BNT"] and pol.stats.by_op["BNN"]
+        report = core.dispatch_report(pol)
+        assert "\n  BNT" in report and "\n  BNN" in report
+
+    def test_attention_decode_routes_batched(self, rng):
+        from repro.models.attention import (
+            AttnConfig,
+            attention_decode,
+            init_attention,
+            init_attn_cache,
+        )
+
+        cfg = AttnConfig(d_model=32, n_heads=4, n_kv=2, d_head=8)
+        p = init_attention(jax.random.PRNGKey(0), cfg)
+        cache = init_attn_cache(2, cfg, max_seq=8)
+        x = jnp.asarray(rng.randn(2, 1, 32), jnp.float32)
+        pol = core.AnalyticPolicy()
+        with core.use_policy(pol):
+            out, cache = attention_decode(p, x, cfg, cache, jnp.int32(0))
+        assert out.shape == (2, 1, 32)
+        assert {"BNT", "BNN"} <= set(pol.stats.by_op)
+
+
+class TestBatchedMeasurement:
+    def test_measure_candidates_batched_layouts(self):
+        """measure_candidates(op=, g=) builds (g, ., .) operands and only
+        times candidates implementing the batched op."""
+        for op in ("BNT", "BNN"):
+            times = measure_candidates(16, 24, 8, op=op, g=3, reps=1)
+            assert times, op
+            for name in times:
+                assert op in core.CANDIDATES[name].ops
+        bnt = measure_candidates(16, 24, 8, op="BNT", g=3, reps=1)
+        assert "XLA_BNT" in bnt and "XLA_NT" not in bnt
+
+    def test_autotune_measures_and_caches_batched_keys(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        pol = core.AutotunePolicy(cache_path=p, reps=1)
+        key = core.OpKey("BNN", 8, 8, 8, 4, 2)
+        decision = pol.select(key)
+        assert pol.n_measured == 1
+        assert "BNN" in core.CANDIDATES[decision.name].ops
+        # warm hit from the persisted file, g-qualified
+        pol2 = core.AutotunePolicy(cache_path=p)
+        pol2.select(key)
+        assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
+        # a different batch extent is a different (cold) key
+        assert ("cpu", pol.hardware.name, "float32", "BNN", 2, 8, 8, 8) in pol.cache
+        assert ("cpu", pol.hardware.name, "float32", "BNN", 5, 8, 8, 8) not in pol.cache
+
+    def test_analytic_policy_answers_batched_keys(self):
+        pol = core.AnalyticPolicy()
+        decision = pol.select(core.OpKey("BNT", 128, 128, 64, 4, 8))
+        assert "BNT" in core.CANDIDATES[decision.name].ops
+
+    def test_fixed_spec_grammar_covers_batched_ops(self):
+        pol = core.policy_from_spec(
+            "fixed:bnt=PALLAS_BNT@128x128x128,bnn=XLA_BNN"
+        )
+        assert pol.select(core.OpKey("BNT", 8, 8, 8, 4, 2)) == core.Decision(
+            "PALLAS_BNT", (128, 128, 128)
+        )
+        assert pol.select(core.OpKey("BNN", 8, 8, 8, 4, 2)) == core.Decision(
+            "XLA_BNN", None
+        )
+        with pytest.raises(ValueError):
+            core.policy_from_spec("fixed:bnt=XLA_BNN")  # wrong op
+
+
+class TestV3ToV4Migration:
+    def test_v3_cache_file_migrates_with_g1(self, tmp_path):
+        """A v3 cache (op-qualified, batch-less keys) keeps answering warm
+        hits: its keys could only describe unbatched ops, so g=1."""
+        p = str(tmp_path / "v3.json")
+        with open(p, "w") as fh:
+            json.dump(
+                {
+                    "schema_version": 3,
+                    "entries": {
+                        "cpu|host_cpu|float32|NT|64|64|64": {
+                            "XLA_NT": {"default": 2.0e-5},
+                            "XLA_TNN": {"default": 1.0e-5},
+                        }
+                    },
+                },
+                fh,
+            )
+        cache = MeasurementCache.load(p)
+        full_key = ("cpu", "host_cpu", "float32", "NT", 1, 64, 64, 64)
+        assert cache.get(full_key) is not None
+        # legacy batch-less 7-tuple lookups see the same entry
+        assert cache.get(("cpu", "host_cpu", "float32", "NT", 64, 64, 64)) is not None
+        # and the migrated cache drives selection (not the batched ops)
+        pol = core.AutotunePolicy(cache=cache, measure=False)
+        assert pol.select(core.OpKey("NT", 64, 64, 64)) == core.Decision(
+            "XLA_TNN", None
+        )
+        bnt = pol.select(core.OpKey("BNT", 64, 64, 64, 4, 2))
+        assert "BNT" in core.CANDIDATES[bnt.name].ops  # analytic fallback
+
+    def test_v4_cache_roundtrips_batched_keys(self, tmp_path):
+        p = str(tmp_path / "v4.json")
+        cache = MeasurementCache(p)
+        key = ("cpu", "host_cpu", "float32", "BNT", 4, 8, 8, 8)
+        cache.put(key, {"XLA_BNT": 1e-5})
+        cache.save()
+        cache2 = MeasurementCache.load(p)
+        assert cache2.get(key) == {"XLA_BNT": {"default": 1e-5}}
+
+    def test_v3_artifact_migrates_with_standard_batched_pairs(self, tmp_path):
+        """A v3 selector artifact (no batched pairs) loads via migration:
+        NT decisions are unchanged and the batched ops get the standard
+        pairs — old models keep predicting (the g column is appended after
+        the features they were trained on)."""
+        ds = core.collect_analytic(lo=7, hi=9)
+        clf, _ = core.train_paper_model(ds)
+        sel = core.MTNNSelector(clf)
+        p = str(tmp_path / "v3.json")
+        sel.save(p)
+        with open(p) as fh:
+            payload = json.load(fh)
+        payload["schema_version"] = 3
+        payload["binary_pairs"] = {
+            op: list(pair)
+            for op, pair in payload["binary_pairs"].items()
+            if op in ("NT", "NN", "TN")
+        }
+        with open(p, "w") as fh:
+            json.dump(payload, fh)
+        sel2 = core.MTNNSelector.load(p)
+        assert sel2.binary_pairs["BNT"] == core.BINARY_PAIRS_BY_OP["BNT"]
+        assert sel2.binary_pairs["BNN"] == core.BINARY_PAIRS_BY_OP["BNN"]
+        for mnk in [(128, 128, 128), (4096, 4096, 4096)]:
+            key = core.OpKey("NT", *mnk)
+            assert sel2.select(key) == sel.select(key)
+        # batched keys produce a candidate of the right op
+        name = sel2.select(core.OpKey("BNT", 128, 128, 64, 4, 8))
+        assert "BNT" in core.CANDIDATES[name].ops
+
+    def test_eight_dim_model_predicts_batched_keys(self):
+        """A model trained on the paper's 8-dim layout never sees the op/g
+        columns — it must still answer batched keys through the per-op
+        pair machinery."""
+        ds = core.collect_analytic(lo=7, hi=9)
+        clf, _ = core.train_paper_model(ds.subset(np.arange(len(ds))))
+        # simulate an old model: trained on the first 8 columns only
+        clf8, _ = core.train_paper_model(
+            core.SelectionDataset(
+                X=ds.X[:, :8], y=ds.y, times=ds.times, mnk=ds.mnk,
+                hw=ds.hw, source=ds.source,
+            )
+        )
+        sel = core.MTNNSelector(clf8)
+        name = sel.select(core.OpKey("BNN", 256, 64, 64, 4, 12))
+        assert "BNN" in core.CANDIDATES[name].ops

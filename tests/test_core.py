@@ -61,9 +61,11 @@ class TestLearners:
 class TestDataset:
     def test_analytic_dataset_structure(self):
         ds = core.collect_analytic(lo=7, hi=10)
-        # paper's 8-dim features + the op-kind column (all-NT here)
-        assert ds.X.shape[1] == 9
+        # paper's 8-dim features + the op-kind and batch-extent columns
+        # (all-NT, all-g=1 here)
+        assert ds.X.shape[1] == 10
         assert (ds.X[:, 8] == 0.0).all()
+        assert (ds.X[:, 9] == 1.0).all()
         assert set(np.unique(ds.y)) <= {-1, 1}
         assert len(ds) == len(ds.mnk) == len(ds.hw)
         # both classes present (the tradeoff is real)
@@ -146,25 +148,26 @@ class TestSelector:
         self.sel = core.MTNNSelector(clf)
 
     def test_select_returns_candidate(self):
-        name = self.sel.select(1024, 1024, 1024)
+        name = self.sel.select(core.OpKey("NT", 1024, 1024, 1024))
         assert name in core.CANDIDATES
 
     def test_oom_guard_falls_back_to_nt(self):
         """Paper: if B^T does not fit, use NT."""
         huge = 2**22
-        assert self.sel.select(huge, huge, 4096, dsize=4) == self.sel.binary_pair[0]
+        key = core.OpKey("NT", huge, huge, 4096, 4)
+        assert self.sel.select(key) == self.sel.binary_pair[0]
 
     def test_selection_caching(self):
-        self.sel.select(512, 512, 512)
+        self.sel.select(core.OpKey("NT", 512, 512, 512))
         n0 = self.sel.stats.calls
-        self.sel.select(512, 512, 512)
+        self.sel.select(core.OpKey("NT", 512, 512, 512))
         assert self.sel.stats.calls == n0 + 1  # cached, still counted
 
     def test_dispatch_correctness(self):
         a = jnp.asarray(np.random.RandomState(0).randn(33, 20), jnp.float32)
         b = jnp.asarray(np.random.RandomState(1).randn(17, 20), jnp.float32)
         with core.use_policy(core.ModelPolicy(self.sel)):
-            out = core.dispatch_nt(a, b)
+            out = core.dispatch("NT", a, b)
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(a) @ np.asarray(b).T, rtol=1e-5, atol=1e-5
         )
@@ -173,14 +176,16 @@ class TestSelector:
         a = jnp.ones((2, 3, 8), jnp.float32)
         b = jnp.ones((5, 8), jnp.float32)
         with core.use_policy(core.ModelPolicy(self.sel)):
-            out = core.dispatch_nt(a, b)
+            out = core.dispatch("NT", a, b)
         assert out.shape == (2, 3, 5)
 
     def test_force_override(self):
         a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
-        for name in core.CANDIDATES:
+        for name, cand in core.CANDIDATES.items():
+            if "NT" not in cand.ops:
+                continue
             with core.use_policy(core.FixedPolicy(name)):
-                out = core.dispatch_nt(a, b)
+                out = core.dispatch("NT", a, b)
             np.testing.assert_allclose(np.asarray(out), 8.0)
 
     def test_selector_persistence(self, tmp_path):
@@ -188,9 +193,11 @@ class TestSelector:
         self.sel.save(p)
         sel2 = core.MTNNSelector.load(p)
         for mnk in [(128, 128, 128), (8192, 8192, 8192), (1024, 65536, 256)]:
-            assert self.sel.select(*mnk) == sel2.select(*mnk)
+            key = core.OpKey("NT", *mnk)
+            assert self.sel.select(key) == sel2.select(key)
 
     def test_distributed_mode_restricts_candidates(self):
         sel = core.MTNNSelector(self.sel.model, distributed=True)
         for mnk in [(128, 128, 128), (4096, 4096, 4096), (65536, 512, 65536)]:
-            assert core.CANDIDATES[sel.select(*mnk)].distributed_safe
+            name = sel.select(core.OpKey("NT", *mnk))
+            assert core.CANDIDATES[name].distributed_safe

@@ -11,7 +11,6 @@ import numpy as np
 import pytest
 
 from repro import core
-from repro.core import engine
 from repro.core.measure import operand_shapes
 
 # Dims cross the adversarial set {1, 127, 129, 1000}: degenerate,
@@ -176,118 +175,71 @@ class TestBackwardObservability:
         assert "\n  NN " in report and "\n  TN " in report and "\n  NT " in report
 
 
-class TestDispatchNtCompat:
-    def test_dispatch_nt_delegates_and_warns_once(self, rng):
-        """The legacy entry point is a thin wrapper over dispatch('NT'):
-        same engine (grads route backward GEMMs through the policy too)
-        and exactly one DeprecationWarning per process."""
-        engine._WARNED.discard("dispatch_nt")
+class TestLegacyShimsRemoved:
+    """The pre-op-space compatibility layer served its one release of
+    grace (flagged for removal in PR 4) and is gone: every legacy call
+    pattern now fails with a clean, actionable error instead of a
+    warning."""
+
+    def test_dispatch_nt_wrapper_is_gone(self):
+        assert not hasattr(core, "dispatch_nt")
+        from repro.core import engine as engine_mod
+
+        assert not hasattr(engine_mod, "dispatch_nt")
+
+    def test_positional_select_raises_cleanly(self):
+        """policy.select(m, n, k[, dsize]) — the pre-OpKey calling
+        convention — raises a TypeError naming the OpKey API."""
         pol = core.AnalyticPolicy()
-        a = jnp.asarray(rng.randn(6, 10), jnp.float32)
-        b = jnp.asarray(rng.randn(4, 10), jnp.float32)
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            with core.use_policy(pol):
-                out = core.dispatch_nt(a, b)
-                core.dispatch_nt(a, b)  # second call: no second warning
-        deprecations = [
-            x for x in w if issubclass(x.category, DeprecationWarning)
-            and "dispatch_nt" in str(x.message)
-        ]
-        assert len(deprecations) == 1
-        np.testing.assert_allclose(
-            np.asarray(out), np.asarray(a) @ np.asarray(b).T,
-            rtol=1e-5, atol=1e-5,
-        )
-        # the wrapper shares the custom_vjp engine: grads dispatch NN/TN
-        with core.use_policy(pol):
-            jax.grad(lambda a: jnp.sum(core.dispatch_nt(a, b) ** 2))(a)
-        assert "NN" in pol.stats.by_op and "TN" in pol.stats.by_op
+        with pytest.raises(TypeError):
+            pol.select(256, 256, 256)
+        with pytest.raises(TypeError, match="OpKey"):
+            pol.select(256)  # single non-OpKey arg: coerce_key's error
 
-    def test_legacy_bare_string_decision_branch(self, rng):
-        """Regression for the engine's bare-string-Decision shim: a
-        third-party policy with the old positional signature returning a
-        candidate *name* still dispatches (normalised to Decision), with
-        deprecation warnings."""
+    def test_bare_string_decision_raises_cleanly(self, rng):
+        """A policy returning a candidate name instead of a Decision gets
+        a TypeError from the engine, not a silent normalisation."""
 
-        class LegacyPolicy:
+        class BareStringPolicy:
             stats = core.SelectorStats()
 
-            def select(self, m, n, k, dsize=4):
-                assert isinstance(m, int)  # adapted call: ints, not an OpKey
+            def select(self, key):
                 return "XLA_TNN"
 
-        engine._WARNED.discard("legacy-select")
-        engine._WARNED.discard("bare-string-decision")
         a = jnp.asarray(rng.randn(5, 8), jnp.float32)
         b = jnp.asarray(rng.randn(3, 8), jnp.float32)
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            out = core.dispatch("NT", a, b, policy=LegacyPolicy())
-        kinds = {str(x.message)[:20] for x in w
-                 if issubclass(x.category, DeprecationWarning)}
-        assert len(kinds) == 2  # positional-signature + bare-string shims
-        np.testing.assert_allclose(
-            np.asarray(out), np.asarray(a) @ np.asarray(b).T,
-            rtol=1e-5, atol=1e-5,
-        )
-
-    def test_legacy_policy_backward_keys_run_the_reference(self, rng):
-        """Regression: a legacy positional policy can only answer for the
-        forward op — backward NN/TN keys must degrade to each op's XLA
-        reference, not execute the policy's NT answer on wrong-layout
-        operands (shape error at best, silently wrong gradients at
-        worst)."""
-
-        class LegacyTnnPolicy:
-            stats = core.SelectorStats()
-
-            def select(self, m, n, k, dsize=4):
-                return "XLA_TNN"
-
-        a = jnp.asarray(rng.randn(4, 16), jnp.float32)
-        b = jnp.asarray(rng.randn(6, 16), jnp.float32)
-        ct = jnp.asarray(rng.randn(4, 6), jnp.float32)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            with core.use_policy(LegacyTnnPolicy()):
-                da, db = jax.grad(
-                    lambda a, b: jnp.sum(core.dispatch("NT", a, b) * ct),
-                    argnums=(0, 1),
-                )(a, b)
-        want_da, want_db = _nt_grads(np.asarray(a), np.asarray(b), np.asarray(ct))
-        np.testing.assert_allclose(np.asarray(da), want_da, rtol=1e-5, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(db), want_db, rtol=1e-5, atol=1e-5)
+        with pytest.raises(TypeError, match="Decision"):
+            core.dispatch("NT", a, b, policy=BareStringPolicy())
 
     def test_op_mismatched_decision_degrades_to_reference(self, rng):
         """A policy answering an NN key with an NT-only candidate must not
         execute it on NN-layout operands — the engine dispatches the op's
-        reference instead."""
+        reference instead (this guard is a safety net, not a deprecation
+        shim, so it stays)."""
 
         class MisOppedPolicy:
             stats = core.SelectorStats()
 
-            def select(self, key, n=None, k=None, dsize=4):
+            def select(self, key):
                 return core.Decision("XLA_NT", None)  # wrong for NN/TN keys
 
         a = jnp.asarray(rng.randn(5, 7), jnp.float32)
         b = jnp.asarray(rng.randn(7, 3), jnp.float32)
         with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
+            warnings.simplefilter("ignore")
             out = core.dispatch("NN", a, b, policy=MisOppedPolicy())
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(a) @ np.asarray(b),
             rtol=1e-5, atol=1e-5,
         )
 
-    def test_opkey_policy_not_misdetected_as_legacy(self):
-        """A policy whose select takes `key` is called with the OpKey."""
+    def test_policy_receives_the_opkey(self):
         seen = {}
 
         class OpKeyPolicy:
             stats = core.SelectorStats()
 
-            def select(self, key, n=None, k=None, dsize=4):
+            def select(self, key):
                 seen["key"] = key
                 return core.Decision("XLA_NT", None)
 
@@ -295,3 +247,4 @@ class TestDispatchNtCompat:
         core.dispatch("NT", a, b, policy=OpKeyPolicy())
         assert isinstance(seen["key"], core.OpKey)
         assert seen["key"] == core.OpKey("NT", 4, 3, 8, 4)
+        assert seen["key"].g == 1

@@ -24,6 +24,10 @@ from repro.core.measure import (
     top_configs_by_candidate,
 )
 
+def _nt(m, n, k, dsize=4):
+    return core.OpKey("NT", m, n, k, dsize)
+
+
 TINY_HW = HardwareSpec(
     name="tiny_mem",
     mem_gib=1e-6,  # nothing extra-memory fits
@@ -91,7 +95,7 @@ class TestMeasurementCache:
         }
         # and the migrated cache drives selection
         pol = core.AutotunePolicy(cache=cache, measure=False)
-        assert pol.select(64, 64, 64) == core.Decision("XLA_TNN", None)
+        assert pol.select(_nt(64, 64, 64)) == core.Decision("XLA_TNN", None)
 
     def test_v2_file_migrates_op_less_keys_as_nt(self, tmp_path):
         """A v2 cache (per-config timings, op-less keys) must keep
@@ -121,7 +125,7 @@ class TestMeasurementCache:
         assert cache.get(("cpu", "host_cpu", "float32", 64, 64, 64)) is not None
         # and the migrated cache answers NT dispatches (not NN/TN ones)
         pol = core.AutotunePolicy(cache=cache, measure=False)
-        assert pol.select(64, 64, 64) == core.Decision(
+        assert pol.select(_nt(64, 64, 64)) == core.Decision(
             "PALLAS_NT", (128, 128, 128)
         )
         assert pol.n_cache_hits == 1
@@ -328,14 +332,14 @@ class TestAutotunePolicy:
     def test_cold_miss_measures_then_warm_hits(self, tmp_path):
         p = str(tmp_path / "cache.json")
         pol = core.AutotunePolicy(cache_path=p, reps=1)
-        decision = pol.select(64, 48, 32)
+        decision = pol.select(_nt(64, 48, 32))
         assert decision.name in core.CANDIDATES
         assert (pol.n_measured, pol.n_cache_hits) == (1, 0)
-        assert pol.select(64, 48, 32) == decision
+        assert pol.select(_nt(64, 48, 32)) == decision
         assert (pol.n_measured, pol.n_cache_hits) == (1, 1)
         # a fresh policy over the same file performs zero new measurements
         pol2 = core.AutotunePolicy(cache_path=p)
-        assert pol2.select(64, 48, 32) == decision
+        assert pol2.select(_nt(64, 48, 32)) == decision
         assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
 
     def test_select_is_cached_argmin_of_admissible(self):
@@ -344,7 +348,7 @@ class TestAutotunePolicy:
         cache.put(key, {"XLA_NT": 2.0, "XLA_TNN": 1.0, "NOT_REGISTERED": 0.1})
         pol = core.AutotunePolicy(cache=cache)
         # stale/unregistered names never dispatch; fastest admissible wins
-        assert pol.select(64, 64, 64) == core.Decision("XLA_TNN", None)
+        assert pol.select(_nt(64, 64, 64)) == core.Decision("XLA_TNN", None)
         assert pol.n_cache_hits == 1 and pol.n_measured == 0
 
     def test_select_is_two_level_argmin_over_configs(self):
@@ -360,7 +364,7 @@ class TestAutotunePolicy:
             },
         )
         pol = core.AutotunePolicy(cache=cache)
-        assert pol.select(64, 64, 64) == core.Decision(
+        assert pol.select(_nt(64, 64, 64)) == core.Decision(
             "PALLAS_NT", (256, 256, 512)
         )
 
@@ -377,7 +381,7 @@ class TestAutotunePolicy:
             },
         )
         pol = core.AutotunePolicy(cache=cache)
-        assert pol.select(64, 64, 64) == core.Decision(
+        assert pol.select(_nt(64, 64, 64)) == core.Decision(
             "PALLAS_NT", (128, 128, 128)
         )
 
@@ -389,7 +393,7 @@ class TestAutotunePolicy:
             {"PALLAS_NT": {"garbage": 0.1}, "XLA_NT": {"default": 2.0}},
         )
         pol = core.AutotunePolicy(cache=cache)
-        assert pol.select(64, 64, 64) == core.Decision("XLA_NT", None)
+        assert pol.select(_nt(64, 64, 64)) == core.Decision("XLA_NT", None)
 
     def test_distributed_refilters_cached_entries(self):
         cache = MeasurementCache()
@@ -397,7 +401,7 @@ class TestAutotunePolicy:
         cache.put(key, {"PALLAS_NT": 1e-6, "XLA_NT": 2e-6})
         pol = core.AutotunePolicy(cache=cache, distributed=True)
         # fastest cached candidate is pjit-unsafe -> next admissible wins
-        assert pol.select(64, 64, 64).name == "XLA_NT"
+        assert pol.select(_nt(64, 64, 64)).name == "XLA_NT"
 
     def test_candidate_restriction_respected_on_warm_hit_and_fallback(self):
         cache = MeasurementCache()
@@ -405,29 +409,29 @@ class TestAutotunePolicy:
         cache.put(key, {"XLA_TNN": 1e-6, "XLA_NT": 2e-6})
         # warm hit: the fastest cached name is outside the restriction
         pol = core.AutotunePolicy(cache=cache, candidates=("XLA_NT",))
-        assert pol.select(64, 64, 64).name == "XLA_NT"
+        assert pol.select(_nt(64, 64, 64)).name == "XLA_NT"
         # fallback path: the analytic fallback is restricted the same way
         pol2 = core.AutotunePolicy(measure=False, candidates=("XLA_TNN",))
-        assert pol2.select(256, 256, 256).name == "XLA_TNN"
+        assert pol2.select(_nt(256, 256, 256)).name == "XLA_TNN"
 
     def test_cache_object_with_path_persists(self, tmp_path):
         p = str(tmp_path / "cache.json")
         pol = core.AutotunePolicy(cache=MeasurementCache(), cache_path=p, reps=1)
-        pol.select(16, 16, 16)
+        pol.select(_nt(16, 16, 16))
         assert pol.n_measured == 1
         assert len(MeasurementCache.load(p)) == 1
 
     def test_measure_disabled_falls_back_to_analytic(self):
         pol = core.AutotunePolicy(measure=False)
         ana = core.AnalyticPolicy(hardware=pol.hardware)
-        assert pol.select(256, 256, 256) == ana.select(256, 256, 256)
+        assert pol.select(_nt(256, 256, 256)) == ana.select(_nt(256, 256, 256))
         assert pol.n_fallbacks == 1 and len(pol.cache) == 0
 
     def test_analytic_fallback_is_not_blind_to_tiling(self):
         """The fallback attaches a roofline-ranked tile for tunable
         candidates instead of always running the default block."""
         pol = core.AutotunePolicy(measure=False, candidates=("PALLAS_NT",))
-        decision = pol.select(129, 1000, 1000)
+        decision = pol.select(_nt(129, 1000, 1000))
         assert decision.name == "PALLAS_NT"
         assert decision.config is not None
         from repro.kernels.tiling import enumerate_tile_configs
@@ -436,12 +440,12 @@ class TestAutotunePolicy:
 
     def test_distributed_disables_measurement(self):
         pol = core.AutotunePolicy(distributed=True)
-        pol.select(128, 128, 128)
+        pol.select(_nt(128, 128, 128))
         assert pol.n_measured == 0 and pol.n_fallbacks == 1
 
     def test_flops_cap_disables_measurement(self):
         pol = core.AutotunePolicy(max_measure_flops=1.0)
-        pol.select(64, 64, 64)
+        pol.select(_nt(64, 64, 64))
         assert pol.n_measured == 0 and pol.n_fallbacks == 1
 
     def test_measures_at_trace_time_inside_jit(self, tmp_path):
@@ -449,12 +453,12 @@ class TestAutotunePolicy:
         pol = core.AutotunePolicy(cache_path=p, reps=1)
         a, b = jnp.ones((8, 16), jnp.float32), jnp.ones((4, 16), jnp.float32)
         with core.use_policy(pol):
-            out = jax.jit(core.dispatch_nt)(a, b)
+            out = jax.jit(lambda a, b: core.dispatch("NT", a, b))(a, b)
         np.testing.assert_allclose(np.asarray(out), 16.0)
         assert pol.n_measured == 1
         # the measurement persisted: a later eager run warm-hits it
         pol2 = core.AutotunePolicy(cache_path=p)
-        pol2.select(8, 4, 16)
+        pol2.select(_nt(8, 4, 16))
         assert (pol2.n_measured, pol2.n_cache_hits) == (0, 1)
 
     def test_is_selection_policy(self):
@@ -474,8 +478,8 @@ class TestAutotunePolicy:
             "repro.core.measure.measure_candidates", empty_measurement
         )
         pol = core.AutotunePolicy()
-        assert pol.select(8, 8, 8).name in core.CANDIDATES  # analytic fallback
-        pol.select(8, 8, 8)
+        assert pol.select(_nt(8, 8, 8)).name in core.CANDIDATES  # analytic fallback
+        pol.select(_nt(8, 8, 8))
         assert len(calls) == 1, "empty measurement must not be retried"
         assert pol.n_fallbacks == 2 and len(pol.cache) == 0
 
@@ -500,7 +504,7 @@ class TestAutotuneSpec:
         pol = core.policy_from_spec(
             f"autotune:{tmp_path / 'c.json'}", distributed=True
         )
-        pol.select(64, 64, 64)
+        pol.select(_nt(64, 64, 64))
         assert pol.n_measured == 0 and pol.n_fallbacks == 1
 
     def test_spec_help_mentions_autotune(self):
@@ -613,7 +617,7 @@ class TestDatasetFromMeasurements:
         for m in (16, 32):
             for n in (16, 32):
                 for k in (16, 32):
-                    pol.select(m, n, k)
+                    pol.select(_nt(m, n, k))
         assert pol.n_measured == 8
         cache = MeasurementCache.load(p)
         ds = core.dataset_from_measurements(cache)
@@ -623,9 +627,9 @@ class TestDatasetFromMeasurements:
         tiles = core.top_configs_by_candidate(cache, dtype="float32")
         core.MTNNSelector(clf, tile_configs=tiles).save(art)
         sel = core.MTNNSelector.load(art)
-        assert sel.select(32, 32, 32) in core.CANDIDATES
+        assert sel.select(_nt(32, 32, 32)) in core.CANDIDATES
         assert sel.tile_configs == tiles
         # ModelPolicy attaches the learned tile to its decisions
         mp = core.ModelPolicy(sel)
-        decision = mp.select(32, 32, 32)
+        decision = mp.select(_nt(32, 32, 32))
         assert decision.config == sel.tile_config_for(decision.name)

@@ -16,6 +16,10 @@ from repro.core import engine, policy as policy_mod
 from repro.core.hardware import TPU_V5E
 
 
+def _nt(m, n, k, dsize=4):
+    return core.OpKey("NT", m, n, k, dsize)
+
+
 @pytest.fixture(scope="module")
 def trained_selector():
     ds = core.collect_analytic(lo=7, hi=10)
@@ -74,7 +78,7 @@ class TestScoping:
         b = jnp.ones((3, 8), jnp.float32)
         pol = core.FixedPolicy("XLA_TNN")
         with core.use_policy(pol):
-            out = core.dispatch_nt(a, b)
+            out = core.dispatch("NT", a, b)
         np.testing.assert_allclose(np.asarray(out), 8.0)
         assert pol.stats.by_candidate == {"XLA_TNN": 1}
 
@@ -90,7 +94,7 @@ class TestPolicies:
     def test_model_policy_matches_selector(self, trained_selector):
         pol = core.ModelPolicy(trained_selector)
         for mnk in [(128, 128, 128), (4096, 4096, 4096), (512, 65536, 256)]:
-            assert pol.select(*mnk).name == trained_selector.select(*mnk)
+            assert pol.select(_nt(*mnk)).name == trained_selector.select(_nt(*mnk))
 
     def test_every_policy_returns_a_decision(self, trained_selector):
         zoo = [
@@ -101,7 +105,7 @@ class TestPolicies:
             core.AutotunePolicy(measure=False),
         ]
         for pol in zoo:
-            decision = pol.select(256, 256, 256)
+            decision = pol.select(_nt(256, 256, 256))
             assert isinstance(decision, core.Decision)
             name, config = decision  # unpacks as (candidate, config)
             assert name in core.CANDIDATES
@@ -111,7 +115,7 @@ class TestPolicies:
         from repro.core.simulate import simulate_time
 
         pol = core.AnalyticPolicy(hardware=TPU_V5E)
-        name = pol.select(1024, 1024, 1024).name
+        name = pol.select(_nt(1024, 1024, 1024)).name
         cand = core.get_candidate(name)
         assert "NT" in cand.ops  # an NT key never picks an NN/TN candidate
         t_chosen = simulate_time(TPU_V5E, cand.sim_algo, 1024, 1024, 1024, 4, sigma=0.0)
@@ -126,7 +130,7 @@ class TestPolicies:
         pol = core.AnalyticPolicy(hardware=TPU_V5E)
         huge = 2**22
         assert not core.get_candidate(
-            pol.select(huge, huge, 4096).name
+            pol.select(_nt(huge, huge, 4096)).name
         ).extra_memory
 
     def test_analytic_policy_attaches_roofline_ranked_tile(self):
@@ -134,7 +138,7 @@ class TestPolicies:
         from repro.kernels.tiling import enumerate_tile_configs
 
         pol = core.AnalyticPolicy(hardware=TPU_V5E, candidates=("PALLAS_NT",))
-        decision = pol.select(129, 1000, 1000)
+        decision = pol.select(_nt(129, 1000, 1000))
         assert decision.name == "PALLAS_NT" and decision.config is not None
         configs = enumerate_tile_configs(129, 1000, 1000, 4)
         assert decision.config in configs
@@ -145,26 +149,26 @@ class TestPolicies:
     def test_cascade_order_and_fallback(self):
         pol = core.CascadePolicy(["PALLAS_TNN_FUSED", "XLA_TNN", "XLA_NT"])
         # all admissible at small sizes: first preference wins
-        assert pol.select(128, 128, 128).name == "PALLAS_TNN_FUSED"
+        assert pol.select(_nt(128, 128, 128)).name == "PALLAS_TNN_FUSED"
 
     def test_cascade_oom_skips_extra_memory_candidates(self):
         pol = core.CascadePolicy(["XLA_TNN", "XLA_NT"], hardware=TPU_V5E)
         huge = 2**22
         # XLA_TNN needs room for B^T -> OOM guard skips it, NT wins
-        assert pol.select(huge, huge, 4096, dsize=4).name == "XLA_NT"
+        assert pol.select(_nt(huge, huge, 4096, 4)).name == "XLA_NT"
 
     def test_cascade_distributed_filter(self):
         pol = core.CascadePolicy(
             ["PALLAS_TNN_FUSED", "PALLAS_NT", "XLA_NT"], distributed=True
         )
         # Pallas candidates are not distributed_safe -> fall through to XLA
-        assert pol.select(256, 256, 256).name == "XLA_NT"
+        assert pol.select(_nt(256, 256, 256)).name == "XLA_NT"
 
     def test_cascade_last_entry_is_unconditional_fallback(self):
         huge = 2**22
         pol = core.CascadePolicy(["XLA_TNN"], hardware=TPU_V5E)
         # even though the lone entry fails its own OOM guard, it is returned
-        assert pol.select(huge, huge, 4096, dsize=4).name == "XLA_TNN"
+        assert pol.select(_nt(huge, huge, 4096, 4)).name == "XLA_TNN"
 
     def test_cascade_empty_rejected(self):
         with pytest.raises(ValueError):
@@ -183,7 +187,7 @@ class TestPolicies:
         assert core.policy_from_spec("fixed:XLA_TNN").name == "XLA_TNN"
         tiled = core.policy_from_spec("fixed:PALLAS_NT@256x256x512")
         assert (tiled.name, tiled.config) == ("PALLAS_NT", (256, 256, 512))
-        assert tiled.select(64, 64, 64) == core.Decision(
+        assert tiled.select(_nt(64, 64, 64)) == core.Decision(
             "PALLAS_NT", (256, 256, 512)
         )
         with pytest.raises(ValueError, match="malformed tile-config"):
@@ -274,10 +278,10 @@ class TestPolicies:
         pol = core.policy_from_spec(
             "cascade:PALLAS_TNN_FUSED,XLA_NT", distributed=True
         )
-        assert pol.select(256, 256, 256).name == "XLA_NT"
+        assert pol.select(_nt(256, 256, 256)).name == "XLA_NT"
         ana = core.policy_from_spec("analytic", distributed=True)
         assert core.get_candidate(
-            ana.select(1024, 1024, 1024).name
+            ana.select(_nt(1024, 1024, 1024)).name
         ).distributed_safe
 
 
@@ -311,7 +315,7 @@ class TestSelectorAdmissibility:
         sel = core.MTNNSelector(
             _ConstModel(1), binary_pair=("PALLAS_NT", "XLA_TNN"), distributed=True
         )
-        name = sel.select(64, 64, 64)
+        name = sel.select(_nt(64, 64, 64))
         assert name == "XLA_NT"  # first admissible registered candidate
         assert core.get_candidate(name).distributed_safe
 
@@ -322,7 +326,7 @@ class TestSelectorAdmissibility:
             _ConstModel(-1), binary_pair=("XLA_TNN", "PALLAS_TNN")
         )
         huge = 2**22
-        name = sel.select(huge, huge, 4096)
+        name = sel.select(_nt(huge, huge, 4096))
         assert not core.get_candidate(name).extra_memory
 
     def test_kway_fallback_checks_admissibility(self):
@@ -333,7 +337,7 @@ class TestSelectorAdmissibility:
             binary_pair=("PALLAS_NT", "PALLAS_TNN"),
             distributed=True,
         )
-        name = sel.select(64, 64, 64)
+        name = sel.select(_nt(64, 64, 64))
         assert name == "XLA_NT"
         assert core.get_candidate(name).distributed_safe
 
@@ -341,7 +345,7 @@ class TestSelectorAdmissibility:
         """When the paper's NT fallback is itself admissible it still wins."""
         sel = core.MTNNSelector(_ConstModel(-1), binary_pair=("XLA_NT", "PALLAS_TNN"))
         huge = 2**22
-        assert sel.select(huge, huge, 4096) == "XLA_NT"
+        assert sel.select(_nt(huge, huge, 4096)) == "XLA_NT"
 
 
 class TestPlatformCacheInvalidation:
@@ -356,16 +360,16 @@ class TestPlatformCacheInvalidation:
 
     def test_selector_cache_keyed_by_platform(self, monkeypatch):
         sel = core.MTNNSelector(_ConstModel(1), binary_pair=("PALLAS_NT", "XLA_TNN"))
-        assert sel.select(32, 32, 32) == "PALLAS_NT"  # legal on cpu
+        assert sel.select(_nt(32, 32, 32)) == "PALLAS_NT"  # legal on cpu
         self._fake_platform(monkeypatch, "gpu")
-        name = sel.select(32, 32, 32)
+        name = sel.select(_nt(32, 32, 32))
         assert core.get_candidate(name).supports(platform="gpu")
 
     def test_analytic_cache_keyed_by_platform(self, monkeypatch):
         pol = core.AnalyticPolicy(candidates=("PALLAS_NT",))
-        assert pol.select(32, 32, 32).name == "PALLAS_NT"
+        assert pol.select(_nt(32, 32, 32)).name == "PALLAS_NT"
         self._fake_platform(monkeypatch, "gpu")
-        name = pol.select(32, 32, 32).name
+        name = pol.select(_nt(32, 32, 32)).name
         assert core.get_candidate(name).supports(platform="gpu")
 
 
@@ -390,8 +394,13 @@ class TestTraceTimeDispatch:
                 jaxprs[name] = str(
                     jax.make_jaxpr(lambda p: lm.lm_forward(p, cfg, batch))(params)
                 )
-            # every NT dispatch in the trace went to the forced candidate
-            assert list(pol.stats.by_candidate) == [name]
+            # every NT dispatch in the trace went to the forced candidate;
+            # the attention contractions (not covered by a single-name NT
+            # policy) ran their batched XLA references
+            assert set(pol.stats.by_op["NT"]) == {name}
+            assert set(pol.stats.by_candidate) == {
+                name, "XLA_BNT", "XLA_BNN"
+            }
             assert pol.stats.calls > 0
         # the traced programs actually differ (TNN materialises B^T)
         assert jaxprs["XLA_TNN"] != jaxprs["XLA_NT"]
@@ -446,7 +455,7 @@ class TestRegistry:
             a = jnp.ones((4, 8), jnp.float32)
             b = jnp.ones((3, 8), jnp.float32)
             with core.use_policy(core.FixedPolicy("TEST_PLUGIN_NT")):
-                out = core.dispatch_nt(a, b)
+                out = core.dispatch("NT", a, b)
             np.testing.assert_allclose(np.asarray(out), 8.0)
             assert calls == [(4, 8)]
         finally:
@@ -473,8 +482,8 @@ class TestArtifacts:
         monkeypatch.chdir(tmp_path)
         trained_selector.save("bare_model.json")
         sel2 = core.MTNNSelector.load("bare_model.json")
-        assert sel2.select(1024, 1024, 1024) == trained_selector.select(
-            1024, 1024, 1024
+        assert sel2.select(_nt(1024, 1024, 1024)) == trained_selector.select(
+            _nt(1024, 1024, 1024)
         )
 
     def test_artifact_carries_schema_version(self, trained_selector, tmp_path):
@@ -497,7 +506,7 @@ class TestArtifacts:
             json.dump(v0, fh)
         sel2 = core.MTNNSelector.load(p)
         for mnk in [(128, 128, 128), (8192, 8192, 8192), (1024, 65536, 256)]:
-            assert sel2.select(*mnk) == trained_selector.select(*mnk)
+            assert sel2.select(_nt(*mnk)) == trained_selector.select(_nt(*mnk))
 
     def test_future_schema_rejected(self, trained_selector, tmp_path):
         p = str(tmp_path / "future.json")
@@ -514,8 +523,8 @@ class TestArtifacts:
         p = str(tmp_path / "sel.json")
         trained_selector.save(p)
         pol = core.ModelPolicy.from_artifact(p)
-        assert pol.select(2048, 2048, 2048).name == trained_selector.select(
-            2048, 2048, 2048
+        assert pol.select(_nt(2048, 2048, 2048)).name == trained_selector.select(
+            _nt(2048, 2048, 2048)
         )
 
     def test_v3_artifact_roundtrips_tile_tables(self, trained_selector, tmp_path):
@@ -559,7 +568,7 @@ class TestArtifacts:
         assert sel2.binary_pairs["TN"] == core.BINARY_PAIRS_BY_OP["TN"]
         # NT decisions are unchanged by migration
         for mnk in [(128, 128, 128), (4096, 4096, 4096)]:
-            assert sel2.select(*mnk) == trained_selector.select(*mnk)
+            assert sel2.select(_nt(*mnk)) == trained_selector.select(_nt(*mnk))
 
     def test_per_shape_tile_table_with_nearest_shape_fallback(
         self, trained_selector
@@ -618,8 +627,8 @@ class TestArtifacts:
         pol = core.ModelPolicy(sel)
         assert fits_vmem((512, 512, 1024), 4)
         assert not fits_vmem((512, 512, 1024), 8)
-        assert pol.select(256, 256, 256, dsize=4).config == (512, 512, 1024)
-        assert pol.select(256, 256, 256, dsize=8).config is None
+        assert pol.select(_nt(256, 256, 256, 4)).config == (512, 512, 1024)
+        assert pol.select(_nt(256, 256, 256, 8)).config is None
 
     def test_model_policy_stats_show_learned_tile(self, trained_selector):
         """Regression: the selector recorded bare names, so dispatch_report
@@ -631,7 +640,7 @@ class TestArtifacts:
                           "PALLAS_TNN": "256x256x512"},
         )
         pol = core.ModelPolicy(sel)
-        decision = pol.select(256, 256, 256)
+        decision = pol.select(_nt(256, 256, 256))
         assert decision.config == (256, 256, 512)
         assert sel.stats.by_decision == {decision.label(): 1}
         assert "@256x256x512" in core.dispatch_report(pol)
@@ -653,9 +662,9 @@ class TestArtifacts:
             json.dump(v1, fh)
         sel2 = core.MTNNSelector.load(p)
         assert sel2.tile_configs == {}
-        decision = core.ModelPolicy(sel2).select(1024, 1024, 1024)
+        decision = core.ModelPolicy(sel2).select(_nt(1024, 1024, 1024))
         assert decision.config is None
-        assert decision.name == trained_selector.select(1024, 1024, 1024)
+        assert decision.name == trained_selector.select(_nt(1024, 1024, 1024))
 
 
 # -- stats & report -----------------------------------------------------------
@@ -663,7 +672,7 @@ class TestArtifacts:
 
 class TestObservability:
     def test_stats_reset(self, trained_selector):
-        trained_selector.select(512, 512, 512)
+        trained_selector.select(_nt(512, 512, 512))
         assert trained_selector.stats.calls > 0
         trained_selector.reset_stats()
         assert trained_selector.stats.calls == 0
@@ -673,8 +682,8 @@ class TestObservability:
         pol = core.FixedPolicy("XLA_NT")
         a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
         with core.use_policy(pol):
-            core.dispatch_nt(a, b)
-            core.dispatch_nt(a, b)
+            core.dispatch("NT", a, b)
+            core.dispatch("NT", a, b)
         report = core.dispatch_report(pol)
         assert "XLA_NT" in report and "2" in report and "100.0%" in report
 
@@ -744,7 +753,7 @@ class TestObservability:
 class TestDecisionDispatch:
     def test_select_matmul_shim_is_gone(self):
         """The deprecated selector=/force= shim was removed after its one
-        release of grace (ROADMAP): use_policy + dispatch_nt is the API."""
+        release of grace (ROADMAP): use_policy + dispatch is the API."""
         assert not hasattr(core, "select_matmul")
 
     def test_fixed_policy_with_config_dispatches_that_tile(self):
@@ -752,7 +761,7 @@ class TestDecisionDispatch:
         b = jnp.ones((3, 8), jnp.float32)
         pol = core.FixedPolicy("PALLAS_NT", config=(128, 128, 128))
         with core.use_policy(pol):
-            out = core.dispatch_nt(a, b)
+            out = core.dispatch("NT", a, b)
         np.testing.assert_allclose(np.asarray(out), 8.0)
         assert pol.stats.by_decision == {"PALLAS_NT@128x128x128": 1}
         assert pol.stats.by_candidate == {"PALLAS_NT": 1}
@@ -765,25 +774,26 @@ class TestDecisionDispatch:
         with pytest.raises(ValueError):
             core.FixedPolicy("PALLAS_NT", config=(128, 128))
 
-    def test_legacy_string_policy_still_dispatches(self):
-        """Third-party policies returning a bare candidate name are
-        normalised by the engine (one release of tolerance)."""
+    def test_bare_string_decision_raises_cleanly(self):
+        """The bare-string adapter served its one release of tolerance and
+        is gone: a policy returning a candidate name instead of a Decision
+        gets a clean TypeError, not a silent normalisation."""
 
         class LegacyPolicy:
             stats = core.SelectorStats()
 
-            def select(self, m, n, k, dsize=4):
+            def select(self, key):
                 return "XLA_NT"
 
         a, b = jnp.ones((4, 8)), jnp.ones((3, 8))
-        out = core.dispatch_nt(a, b, policy=LegacyPolicy())
-        np.testing.assert_allclose(np.asarray(out), 8.0)
+        with pytest.raises(TypeError, match="Decision"):
+            core.dispatch("NT", a, b, policy=LegacyPolicy())
 
     def test_dispatch_report_shows_tile_configs(self):
         pol = core.FixedPolicy("PALLAS_NT", config=(256, 256, 256))
         a, b = jnp.ones((4, 8), jnp.float32), jnp.ones((3, 8), jnp.float32)
         with core.use_policy(pol):
-            core.dispatch_nt(a, b)
+            core.dispatch("NT", a, b)
         report = core.dispatch_report(pol)
         assert "PALLAS_NT@256x256x256" in report and "100.0%" in report
 
@@ -805,7 +815,7 @@ class TestDecisionDispatch:
         a = jnp.asarray(rng.randn(33, 20), jnp.float32)
         b = jnp.asarray(rng.randn(17, 20), jnp.float32)
         with core.use_policy(pol):
-            out = core.dispatch_nt(a, b)
+            out = core.dispatch("NT", a, b)
         assert pol.stats.by_decision == {"PALLAS_NT@128x128x128": 1}
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(a) @ np.asarray(b).T, rtol=1e-5, atol=1e-5

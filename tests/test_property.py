@@ -70,7 +70,7 @@ def test_selector_decision_matches_model(m, n, k):
     sel = core.MTNNSelector(clf)
     x = core.make_features(sel.hardware, m, n, k)[None, :]
     want = sel.binary_pair[0] if clf.predict(x)[0] == 1 else sel.binary_pair[1]
-    assert sel.select(m, n, k) == want
+    assert sel.select(core.OpKey("NT", m, n, k)) == want
 
 
 @settings(max_examples=15, deadline=None)

@@ -17,6 +17,21 @@ CI when that happens:
 
   PYTHONPATH=src python -m benchmarks.bench_drift \\
       --fresh /tmp/BENCH_kernels.json --committed benchmarks/BENCH_kernels.json
+
+The same guard covers the serving-load artifact
+(``benchmarks/BENCH_serve.json``, produced by ``benchmarks/serve_load.py``
+and re-run by the CI ``serve-load-smoke`` job):
+
+  * top-level and per-class schema keys hold in both files;
+  * every request class, decode-batch bucket, and prefill-length bucket
+    in the committed report is still produced by the fresh run;
+  * every class's fresh dispatch table routes the batched attention
+    contractions (BNT *and* BNN rows) — i.e. per-class policy scoping
+    still reaches the attention GEMMs;
+  * the fresh run made zero post-warmup cold-miss measurements.
+
+  PYTHONPATH=src python -m benchmarks.bench_drift \\
+      --serve-fresh /tmp/BENCH_serve.json
 """
 
 from __future__ import annotations
@@ -37,6 +52,17 @@ REQUIRED_ROW_KEYS = frozenset(
 REQUIRED_TOP_KEYS = frozenset(
     {"mode", "dtype", "hardware", "backend", "default_block", "results"}
 )
+
+REQUIRED_SERVE_TOP_KEYS = frozenset(
+    {
+        "schema_version", "mode", "arch", "backend", "n_slots", "max_seq",
+        "buckets", "warmup", "cold_misses_after_warmup", "totals", "classes",
+    }
+)
+REQUIRED_SERVE_CLASS_KEYS = frozenset(
+    {"policy", "requests", "tokens", "p50_ms", "p99_ms", "dispatch"}
+)
+REQUIRED_SERVE_DISPATCH_OPS = ("BNT", "BNN")  # batched attention contractions
 
 ShapeKey = Tuple[str, int, int, int, int]  # (op, g, m, n, k)
 
@@ -106,29 +132,111 @@ def check_drift(fresh: Dict, committed: Dict) -> List[str]:
     return errors
 
 
+def _check_serve_schema(name: str, payload: Dict, errors: List[str]) -> None:
+    missing = REQUIRED_SERVE_TOP_KEYS - set(payload)
+    if missing:
+        errors.append(f"{name}: missing top-level keys {sorted(missing)}")
+        return
+    for cls, row in payload["classes"].items():
+        missing = REQUIRED_SERVE_CLASS_KEYS - set(row)
+        if missing:
+            errors.append(
+                f"{name}: class {cls!r} missing keys {sorted(missing)}"
+            )
+            return
+
+
+def check_serve_drift(fresh: Dict, committed: Dict) -> List[str]:
+    """Drift findings for the serving-load report (empty == clean)."""
+    errors: List[str] = []
+    _check_serve_schema("fresh", fresh, errors)
+    _check_serve_schema("committed", committed, errors)
+    if errors:
+        return errors
+
+    for key in ("decode_batches", "prefill_lens"):
+        committed_b = set(committed["buckets"].get(key, ()))
+        fresh_b = set(fresh["buckets"].get(key, ()))
+        if not committed_b <= fresh_b:
+            errors.append(
+                f"{key} {sorted(committed_b - fresh_b)} are in the committed "
+                "report but missing from the fresh run — bucket coverage shrank"
+            )
+
+    missing_cls = set(committed["classes"]) - set(fresh["classes"])
+    if missing_cls:
+        errors.append(
+            f"request classes {sorted(missing_cls)} are in the committed "
+            "report but missing from the fresh run"
+        )
+    for cls, row in fresh["classes"].items():
+        for op in REQUIRED_SERVE_DISPATCH_OPS:
+            if not row["dispatch"].get(op):
+                errors.append(
+                    f"fresh class {cls!r} has no {op} dispatch rows — batched "
+                    "attention contractions no longer route through its policy"
+                )
+
+    misses = fresh["cold_misses_after_warmup"]
+    if any(misses.values()):
+        errors.append(
+            f"fresh run made post-warmup cold-miss measurements: {misses} — "
+            "the bucket warmup no longer covers the serve loop's OpKeys"
+        )
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--fresh", required=True, help="freshly swept json")
+    ap.add_argument("--fresh", default=None, help="freshly swept kernels json")
     ap.add_argument(
         "--committed",
         default=os.path.join(os.path.dirname(__file__), "BENCH_kernels.json"),
         help="committed perf grid",
     )
-    args = ap.parse_args(argv)
-
-    fresh, committed = _load(args.fresh), _load(args.committed)
-    errors = check_drift(fresh, committed)
-    if errors:
-        print("bench-drift: committed grid and sweep code diverged:")
-        for e in errors:
-            print(f"  - {e}")
-        return 1
-    print(
-        f"bench-drift: OK ({len(fresh['results'])} fresh rows vs "
-        f"{len(committed['results'])} committed; ops "
-        f"{sorted({r['op'] for r in committed['results']})} all covered)"
+    ap.add_argument(
+        "--serve-fresh", default=None, help="fresh serve_load report json"
     )
-    return 0
+    ap.add_argument(
+        "--serve-committed",
+        default=os.path.join(os.path.dirname(__file__), "BENCH_serve.json"),
+        help="committed serve_load report",
+    )
+    args = ap.parse_args(argv)
+    if not args.fresh and not args.serve_fresh:
+        ap.error("need --fresh and/or --serve-fresh")
+
+    rc = 0
+    if args.fresh:
+        fresh, committed = _load(args.fresh), _load(args.committed)
+        errors = check_drift(fresh, committed)
+        if errors:
+            print("bench-drift: committed grid and sweep code diverged:")
+            for e in errors:
+                print(f"  - {e}")
+            rc = 1
+        else:
+            print(
+                f"bench-drift: OK ({len(fresh['results'])} fresh rows vs "
+                f"{len(committed['results'])} committed; ops "
+                f"{sorted({r['op'] for r in committed['results']})} all covered)"
+            )
+    if args.serve_fresh:
+        fresh, committed = _load(args.serve_fresh), _load(args.serve_committed)
+        errors = check_serve_drift(fresh, committed)
+        if errors:
+            print("bench-drift: committed serve report and engine diverged:")
+            for e in errors:
+                print(f"  - {e}")
+            rc = 1
+        else:
+            print(
+                f"bench-drift: serve OK (classes "
+                f"{sorted(fresh['classes'])}, buckets "
+                f"{fresh['buckets']['decode_batches']}, "
+                f"cold misses {fresh['cold_misses_after_warmup']})"
+            )
+    return rc
 
 
 if __name__ == "__main__":

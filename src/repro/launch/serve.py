@@ -1,48 +1,150 @@
-"""Batched serving driver: prefill then token-by-token decode.
+"""Serving driver: a thin client of the continuous-batching engine.
 
-Demonstrates the inference path end-to-end on CPU with a reduced config:
+Default mode builds a ``ServeEngine`` (``repro.serving``), submits a
+seeded batch of mixed-length requests across the request classes, runs
+the autotune warmup pass over every decode/prefill bucket, drains the
+queue, and prints per-class throughput + dispatch reports:
+
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --batch 4 --prompt-len 32 --gen 16 --mesh 1x1
+      --requests 8 --prompt-len 32 --gen 16 --slots 4 --mesh 1x1 \
+      --policy autotune --class-policy bulk=analytic
+
+``--legacy`` keeps the original fixed-batch prefill/decode demo (one
+jit_prefill + token-by-token jit_serve over a rectangular batch).
 """
 
 from __future__ import annotations
 
 import argparse
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, smoke_config
-from repro.core.engine import add_policy_argument, dispatch_report, policy_from_spec
-from repro.distributed import batch_specs, cache_specs_tree, named, param_specs
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.core.engine import (
+    POLICY_SPEC_HELP,
+    add_policy_argument,
+    dispatch_report,
+    policy_from_spec,
+)
+from repro.distributed import named, param_specs
+from repro.launch.common import add_mesh_argument, resolve_mesh_and_policy
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import lm
 
+DEFAULT_CLASSES = ("interactive", "bulk")
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--legacy", action="store_true",
+                    help="fixed-batch prefill/decode demo (pre-engine path)")
+    # engine mode
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of synthetic requests to submit")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV cache slots (max concurrent requests)")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="cache extent per slot (default: prompt-len + gen)")
+    ap.add_argument("--budget-tokens", type=int, default=0,
+                    help="max-tokens admission budget (default: slots * max-seq)")
+    ap.add_argument("--class-policy", action="append", default=[],
+                    metavar="CLS=SPEC",
+                    help=f"per-class policy override, e.g. bulk=analytic; "
+                         f"SPEC is {POLICY_SPEC_HELP}")
+    # shared / legacy
+    ap.add_argument("--batch", type=int, default=4, help="legacy batch size")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="prompt length (legacy: exact; engine: maximum)")
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    add_mesh_argument(ap)
     add_policy_argument(ap)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def _class_policies(args, parser, distributed: bool):
+    """One *fresh* policy instance per request class (stats must not mix
+    across classes), honouring ``--class-policy CLS=SPEC`` overrides."""
+    specs = {cls: args.policy for cls in DEFAULT_CLASSES}
+    for entry in args.class_policy:
+        cls, eq, spec = entry.partition("=")
+        cls, spec = cls.strip(), spec.strip()
+        if not eq or not cls or not spec:
+            parser.error(
+                f"malformed --class-policy {entry!r}; expected CLS=SPEC"
+            )
+        specs[cls] = spec
+    try:
+        return {
+            cls: policy_from_spec(spec, distributed=distributed)
+            for cls, spec in specs.items()
+        }
+    except ValueError as e:
+        parser.error(str(e))
+
+
+def _engine_main(args, parser):
+    from repro.serving import ServeEngine
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.mesh == "production":
-        mesh = make_production_mesh()
-    else:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_local_mesh(d, m)
-    policy = policy_from_spec(args.policy, distributed=mesh.size > 1)
+    mesh, _ = resolve_mesh_and_policy(args, parser)
+    policies = _class_policies(args, parser, distributed=mesh.size > 1)
+    max_seq = args.max_seq or (args.prompt_len + args.gen)
+
+    params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    with mesh:
+        params = jax.device_put(params, named(mesh, param_specs(params, mesh)))
+
+    engine = ServeEngine(
+        cfg, params, n_slots=args.slots, max_seq=max_seq,
+        policies=policies, mesh=mesh,
+        budget_tokens=args.budget_tokens or None,
+    )
+    t0 = time.perf_counter()
+    warm = engine.warmup()
+    t_warm = time.perf_counter() - t0
+    print(f"[serve] warmup: {warm['shapes_traced']} bucketed shapes "
+          f"({t_warm:.1f}s) — buckets batch={engine.buckets.decode_batches} "
+          f"len_step={engine.buckets.len_step}")
+
+    rng = np.random.RandomState(args.seed)
+    classes = sorted(policies)
+    for i in range(args.requests):
+        p_len = int(rng.randint(1, args.prompt_len + 1))
+        prompt = rng.randint(0, cfg.vocab, (p_len,)).astype(np.int32)
+        engine.submit(prompt, max_new=args.gen, cls=classes[i % len(classes)])
+    t0 = time.perf_counter()
+    engine.run()
+    t_run = time.perf_counter() - t0
+
+    lats = [
+        t for r in engine.requests.values() for t in r.token_lat[1:]
+    ]  # decode-step latencies (first token = prefill)
+    n_tok = sum(len(r.generated) for r in engine.requests.values())
+    print(f"[serve] {args.requests} requests, {n_tok} tokens in "
+          f"{t_run:.2f}s ({n_tok / max(t_run, 1e-9):.1f} tok/s)")
+    if lats:
+        print(f"[serve] per-token decode latency: "
+              f"p50 {statistics.median(lats) * 1e3:.2f} ms, "
+              f"max {max(lats) * 1e3:.2f} ms")
+    misses = engine.cold_misses()
+    print(f"[serve] post-warmup cold-miss measurements: {misses}")
+    for cls, report in sorted(engine.class_reports().items()):
+        print(f"[serve] class {cls!r}:")
+        print(report)
+    return engine
+
+
+def _legacy_main(args, parser):
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh, policy = resolve_mesh_and_policy(args, parser)
 
     max_seq = args.prompt_len + args.gen
     rng = np.random.RandomState(args.seed)
@@ -95,6 +197,14 @@ def main(argv=None):
     print("[serve] sample generations:", gen[:2, :8].tolist())
     print(dispatch_report(policy))
     return gen
+
+
+def main(argv=None):
+    parser = _build_parser()
+    args = parser.parse_args(argv)
+    if args.legacy:
+        return _legacy_main(args, parser)
+    return _engine_main(args, parser)
 
 
 if __name__ == "__main__":

@@ -31,10 +31,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
-from repro.core.engine import add_policy_argument, dispatch_report, policy_from_spec
+from repro.core.engine import add_policy_argument, dispatch_report
 from repro.data import make_train_batch
 from repro.distributed import batch_specs, named
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.common import add_mesh_argument, resolve_mesh_and_policy
 from repro.launch.steps import (
     TrainStepConfig,
     make_train_step,
@@ -69,7 +69,6 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL or 'production'")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--keep", type=int, default=3)
@@ -77,16 +76,12 @@ def main(argv=None):
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    add_mesh_argument(ap)
     add_policy_argument(ap)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.mesh == "production":
-        mesh = make_production_mesh()
-    else:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_local_mesh(d, m)
-    policy = policy_from_spec(args.policy, distributed=mesh.size > 1)
+    mesh, policy = resolve_mesh_and_policy(args, ap)
 
     state_shapes = train_state_shapes(cfg)
     state_specs = train_state_specs(state_shapes, mesh)

@@ -178,13 +178,23 @@ def attention(
     positions: Optional[jax.Array] = None,
     prefix_len: int = 0,
     return_kv: bool = False,
-    max_seq: Optional[int] = None,
+    max_seq: Optional[jax.Array] = None,
     cache_dtype=jnp.bfloat16,
+    true_len: Optional[jax.Array] = None,
 ):
     """Training/prefill attention.  x: (B, S, d_model) -> (B, S, d_model).
 
     With ``return_kv`` also returns a decode cache covering this prefill
-    (ring-aligned for windowed layers; padded to ``max_seq`` for global).
+    (ring-ordered for windowed layers; padded to ``max_seq`` for global).
+
+    ``true_len`` (scalar or ``(B,)``, traced OK) marks a *right-padded*
+    prefill: only the first ``true_len`` positions of each row are real
+    tokens.  Causality already keeps the pad junk out of the real rows'
+    outputs; ``true_len`` additionally makes the returned cache correct —
+    windowed layers ring-order the last ``window`` *real* positions (the
+    junk tail never evicts live keys), and decode masks global layers by
+    per-sequence length.  This is what lets the serving engine bucket
+    prompt lengths without max-len recompiles.
     """
     B, S, _ = x.shape
     if positions is None:
@@ -256,9 +266,20 @@ def attention(
     # build the decode cache this prefill implies
     max_seq = max_seq or S
     slots = min(cfg.window, max_seq) if cfg.window is not None else max_seq
-    if cfg.window is not None and S >= slots:
-        # ring-aligned: requires slots | S (configs guarantee window | seq)
-        ck, cv = k[:, S - slots :], v[:, S - slots :]
+    if cfg.window is not None and (true_len is not None or S >= slots):
+        # Ring order: slot i holds the newest position p < true_len with
+        # p ≡ i (mod slots).  Slots with no such position (short
+        # sequences) gather junk that the decode validity mask excludes.
+        # Gathering by position (instead of slicing the last `slots`
+        # columns) drops the old slots | S alignment requirement and
+        # keeps padded-prefill junk out of the live window.
+        tl = jnp.asarray(S if true_len is None else true_len, jnp.int32)
+        tl_b = jnp.broadcast_to(jnp.atleast_1d(tl), (B,))  # (B,)
+        i = jnp.arange(slots)[None, :]
+        p_i = tl_b[:, None] - 1 - ((tl_b[:, None] - 1 - i) % slots)
+        src = jnp.clip(p_i, 0, S - 1)
+        gather = jax.vmap(lambda a, s: jnp.take(a, s, axis=0))
+        ck, cv = gather(k, src), gather(v, src)
     else:
         pad = ((0, 0), (0, slots - S), (0, 0), (0, 0))
         ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
@@ -282,25 +303,37 @@ def attention_decode(
     x: jax.Array,  # (B, 1, d_model)
     cfg: AttnConfig,
     cache: Dict[str, jax.Array],
-    pos: jax.Array,  # scalar int32: index of the new token
+    pos: jax.Array,  # scalar int32, or (B,) per-sequence positions
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  ``pos`` is the index of each row's new token —
+    a scalar (uniform batch: the fixed-batch serve path) or a ``(B,)``
+    vector (ragged batch: the continuous-batching engine, where every
+    cache slot holds a sequence of a different length).
+
+    Each row writes its K/V at its *own* position and attends only the
+    slots its own length has filled: the validity mask is per sequence,
+    so short sequences never attend the stale/uninitialised slots beyond
+    their length (they used to, whenever ``pos`` under-described a mixed-
+    length batch — the mask was shared across rows).
+    """
     B = x.shape[0]
     slots = cache["k"].shape[1]
-    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None, None])
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos_b[:, None])
     q = q * (cfg.d_head**-0.5)
 
-    slot = pos % slots if cfg.window is not None else pos
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+    write = pos_b % slots if cfg.window is not None else pos_b
+    upd = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
     )
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
-    )
+    ck = upd(cache["k"], k_new.astype(cache["k"].dtype), write)
+    cv = upd(cache["v"], v_new.astype(cache["v"].dtype), write)
 
-    valid = jnp.arange(slots) < jnp.minimum(pos + 1, slots)  # (slots,)
+    # (B, slots): row i sees exactly the slots its own length has filled
+    valid = jnp.arange(slots)[None, :] < jnp.minimum(pos_b + 1, slots)[:, None]
     logits = _qk_logits(q.transpose(0, 2, 3, 1, 4), ck.astype(q.dtype))
     logits = softcap(logits, cfg.softcap)
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
     # probs round-trip through the cache dtype (quantised like the cache),
     # then the mix runs at q precision — the pre-dispatch einsum's promote

@@ -120,14 +120,22 @@ def prefill_block(
     positions=None,
     prefix_len: int = 0,
     cache_dtype=jnp.bfloat16,
+    true_len=None,
 ):
-    """apply_block + build this layer's decode cache."""
+    """apply_block + build this layer's decode cache.
+
+    ``true_len`` marks a right-padded prefill (see ``attention``): the
+    attention cache is built over the real positions only.  SSM state is
+    cumulative over the whole padded sequence, so padded prefill is an
+    attention-only feature — the serving engine prefills SSM archs at
+    exact lengths."""
     h = rmsnorm(p["ln1"], x)
     if b.mixer in ("attn", "shared_attn"):
         ap = p["attn"] if b.mixer == "attn" else shared["attn"]
         h, cache = attention(
             ap, h, _attn_cfg(b, mc), positions, prefix_len,
             return_kv=True, max_seq=max_seq, cache_dtype=cache_dtype,
+            true_len=true_len,
         )
     else:
         h, cache = ssm_layer(

@@ -171,8 +171,16 @@ def lm_prefill(
     batch: Dict[str, jax.Array],
     max_seq: int,
     cache_dtype=jnp.bfloat16,
+    true_len: Optional[jax.Array] = None,
 ):
-    """Returns (last-position logits, cache)."""
+    """Returns (last-position logits, cache).
+
+    ``true_len`` (scalar or ``(B,)``, traced OK) marks a right-padded
+    prefill: the logits are taken at each row's *real* last position
+    (``true_len - 1``) and the cache's ``pos`` starts at ``true_len``, so
+    the pad tail is never sampled from and decode overwrites/masks it.
+    The serving engine uses this to bucket prompt lengths into a small
+    compile set instead of one compile per distinct length."""
     x, positions, prefix_len = _embed_input(params, cfg, batch)
     shared = params.get("shared")
     caches = []
@@ -183,7 +191,7 @@ def lm_prefill(
             for b, bp in zip(_blocks, unit_params):
                 h, c = prefill_block(
                     bp, h, b, cfg, max_seq, shared, positions, prefix_len,
-                    cache_dtype,
+                    cache_dtype, true_len=true_len,
                 )
                 unit_cache.append(c)
             return h, tuple(unit_cache)
@@ -198,16 +206,30 @@ def lm_prefill(
         else:
             x, seg_cache = jax.lax.scan(body, x, tuple(slot_params))
         caches.append(seg_cache)
-    logits = _logits(params, cfg, x[:, -1:])
-    pos_next = jnp.asarray(x.shape[1], jnp.int32)
+    if true_len is None:
+        logits = _logits(params, cfg, x[:, -1:])
+        pos_next = jnp.asarray(x.shape[1], jnp.int32)
+    else:
+        pos_next = jnp.asarray(true_len, jnp.int32)
+        idx = jnp.broadcast_to(
+            jnp.atleast_1d(jnp.clip(pos_next - 1, 0, x.shape[1] - 1)),
+            (x.shape[0],),
+        )
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = _logits(params, cfg, x_last)
     return logits, {"segments": caches, "pos": pos_next}
 
 
 # -- decode -------------------------------------------------------------------
 
 
-def init_lm_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
-    """Zero cache with the same pytree structure lm_prefill produces."""
+def init_lm_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                  per_seq_pos: bool = False):
+    """Zero cache with the same pytree structure lm_prefill produces.
+
+    ``per_seq_pos`` starts ``pos`` as a ``(batch,)`` vector instead of a
+    scalar — the ragged form the serving engine decodes with, where every
+    cache slot holds a sequence of its own length."""
     caches = []
     for count, blocks in cfg.segments:
         seg = tuple(
@@ -218,7 +240,8 @@ def init_lm_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
             for b in blocks
         )
         caches.append(seg)
-    return {"segments": caches, "pos": jnp.zeros((), jnp.int32)}
+    pos = jnp.zeros((batch,) if per_seq_pos else (), jnp.int32)
+    return {"segments": caches, "pos": pos}
 
 
 def _read_unit_cache(seg_cache, i):
@@ -253,9 +276,12 @@ def lm_decode(
 ):
     """One-token step.  batch: {'tokens': (B,1)} or {'frames': (B,1,d)}.
 
-    Returns (logits (B,1,V), new cache with pos+1).  The stacked cache is
-    carried whole through the layer scan and updated with dynamic slices,
-    so XLA keeps it in place (while-loop carry aliasing).
+    Returns (logits (B,1,V), new cache with pos+1).  ``cache['pos']`` may
+    be a scalar (uniform batch) or a ``(B,)`` vector (ragged batch: each
+    row decodes at its own position — the continuous-batching engine's
+    form; see ``attention_decode``).  The stacked cache is carried whole
+    through the layer scan and updated with dynamic slices, so XLA keeps
+    it in place (while-loop carry aliasing).
     """
     pos = cache["pos"]
     if cfg.input_mode == "frames":

@@ -1,0 +1,16 @@
+"""Production serving layer: continuous batching over a paged KV cache,
+decode-shape bucketing with autotune warmup, and per-request-class
+dispatch-policy scopes.  See ``engine.ServeEngine``."""
+
+from .buckets import BucketSpec, default_buckets
+from .engine import Request, RequestState, ServeEngine
+from .kv_cache import PagedKVCache
+
+__all__ = [
+    "BucketSpec",
+    "default_buckets",
+    "PagedKVCache",
+    "Request",
+    "RequestState",
+    "ServeEngine",
+]

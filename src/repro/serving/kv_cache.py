@@ -1,0 +1,115 @@
+"""Slot-based paged KV cache for the continuous-batching engine.
+
+One device-resident cache pytree (the ``segments`` half of
+``models/lm.py::init_lm_cache``) holds ``n_slots + 1`` sequences: every
+leaf is ``(layers, n_slots + 1, ...)`` with the sequence axis at
+position 1.  A request is admitted by *allocating a slot* and scattering
+its (batch=1) prefill cache into that row; it is evicted by freeing the
+slot — no reshapes, no max-batch padding, and ragged sequence lengths
+coexist because every slot carries its own write position
+(``lengths``, the per-sequence ``pos`` vector ``attention_decode``
+consumes).
+
+The extra row — ``null_slot`` — is scratch: decode steps run at bucketed
+batch sizes, and the padding rows of a partially-filled bucket all point
+at it, so their writes land on trash instead of a live sequence (scatter
+order over duplicate indices is undefined; duplicates of a row nobody
+reads are harmless).
+
+Device work (insert) is jitted with the big cache donated, so admission
+updates the pool in place.  Slot bookkeeping (free list, lengths,
+owners) is host-side numpy — it changes between jit calls, never inside
+them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+__all__ = ["PagedKVCache"]
+
+
+class PagedKVCache:
+    """Fixed pool of ``n_slots`` sequence slots + 1 null scratch row."""
+
+    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=jnp.bfloat16):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.max_seq = int(max_seq)
+        self.null_slot = self.n_slots  # scratch row for bucket padding
+        self.data = lm.init_lm_cache(
+            cfg, self.n_slots + 1, max_seq, dtype=dtype
+        )["segments"]
+        self._free: List[int] = list(range(self.n_slots))
+        self.lengths = np.zeros(self.n_slots + 1, np.int32)
+        self.owner: Dict[int, Any] = {}  # slot -> request id
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    @staticmethod
+    def _insert_impl(big, rows, slot):
+        """Scatter a batch=1 cache pytree into row ``slot`` (axis 1)."""
+        return jax.tree.map(
+            lambda b, r: jax.lax.dynamic_update_slice_in_dim(
+                b, r.astype(b.dtype), slot, axis=1
+            ),
+            big,
+            rows,
+        )
+
+    # -- slot lifecycle --------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.owner)
+
+    def allocate(self, owner: Any) -> Optional[int]:
+        """Claim a free slot for ``owner`` (None when the pool is full)."""
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        self.owner[slot] = owner
+        self.lengths[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Release a slot back to the pool.  The KV rows are left in
+        place — the next occupant's prefill overwrites them, and until
+        then its zero length masks every stale position."""
+        if slot not in self.owner:
+            raise KeyError(f"slot {slot} is not allocated")
+        del self.owner[slot]
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    def insert(self, prefill_cache: Dict[str, Any], slot: int, length: int):
+        """Land a request's prefill cache (batch=1 pytree from
+        ``lm_prefill``) in its slot and record its true length."""
+        if slot not in self.owner:
+            raise KeyError(f"slot {slot} is not allocated")
+        self.data = self._insert(
+            self.data, prefill_cache["segments"], jnp.int32(slot)
+        )
+        self.lengths[slot] = int(length)
+
+    def advance(self, slots) -> None:
+        """One decode step happened for ``slots``: their lengths grew."""
+        for s in slots:
+            self.lengths[s] += 1
+
+    def __repr__(self):
+        return (
+            f"PagedKVCache(slots={self.n_slots}, free={self.n_free}, "
+            f"max_seq={self.max_seq})"
+        )

@@ -90,6 +90,43 @@ class TestAttention:
                 np.asarray(o[:, 0]), np.asarray(full[:, t]), rtol=2e-4, atol=2e-4
             )
 
+    @pytest.mark.parametrize("window", [None, 8])
+    def test_ragged_decode_matches_unbatched(self, window):
+        """Decode with a per-sequence position vector: sequences of mixed
+        lengths batched together must reproduce each sequence decoded
+        alone (pad rows masked, each row writing at its own position)."""
+        lens = [13, 6, 10]
+        S, max_seq = max(lens), 16
+        cfg = AttnConfig(d_model=32, n_heads=4, n_kv=2, d_head=8,
+                         window=window, chunk=8)
+        p = init_attention(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (len(lens), S + 1, 32))
+
+        # batched: ragged prefill (right-padded, true_len) + one vector-pos
+        # decode step where every row sits at a different position
+        tl = jnp.asarray(lens, jnp.int32)
+        _, cache = attention(
+            p, x[:, :S], cfg, return_kv=True, max_seq=max_seq,
+            cache_dtype=jnp.float32, true_len=tl,
+        )
+        x_new = jnp.stack([x[b, lens[b]] for b in range(len(lens))])[:, None]
+        out, cache = attention_decode(p, x_new, cfg, cache, tl)
+
+        # reference: each sequence prefilled at its exact length, decoded
+        # alone at a scalar position
+        for b, n in enumerate(lens):
+            _, ref_cache = attention(
+                p, x[b : b + 1, :n], cfg, return_kv=True, max_seq=max_seq,
+                cache_dtype=jnp.float32,
+            )
+            ref, _ = attention_decode(
+                p, x[b : b + 1, n : n + 1], cfg, ref_cache, jnp.asarray(n)
+            )
+            np.testing.assert_allclose(
+                np.asarray(out[b]), np.asarray(ref[0]), rtol=2e-4, atol=2e-4,
+                err_msg=f"row {b} (len {n}, window {window})",
+            )
+
 
 class TestMoE:
     def setup_method(self):

@@ -82,6 +82,76 @@ class TestScoping:
         np.testing.assert_allclose(np.asarray(out), 8.0)
         assert pol.stats.by_candidate == {"XLA_TNN": 1}
 
+    def test_concurrent_scopes_do_not_interleave_counts(self):
+        """Threads dispatching concurrently under their own scopes — the
+        serving engine's per-request-class setup.  Every dispatch must hit
+        its own thread's policy, and each policy's stats must count
+        exactly its own thread's calls (no cross-class bleed in
+        dispatch_report)."""
+        n, n_threads = 25, 4
+        names = ["XLA_TNN", "XLA_NT", "PALLAS_NT", "XLA_TNN"]
+        policies = [core.FixedPolicy(name) for name in names]
+        barrier = threading.Barrier(n_threads)
+        failures = []
+
+        def worker(pol, expected):
+            a = jnp.ones((4, 8), jnp.float32)
+            b = jnp.ones((3, 8), jnp.float32)
+            barrier.wait()  # maximize overlap
+            with core.use_policy(pol):
+                for _ in range(n):
+                    core.dispatch("NT", a, b)
+                    if core.current_policy() is not pol:
+                        failures.append(f"scope leaked away from {expected}")
+
+        threads = [
+            threading.Thread(target=worker, args=(p, nm))
+            for p, nm in zip(policies, names)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not failures
+        for pol, name in zip(policies, names):
+            # exactly this thread's calls, all under its own candidate
+            assert pol.stats.by_candidate == {name: n}
+            assert pol.stats.by_op == {"NT": {name: n}}
+
+    def test_nested_scopes_under_concurrency(self):
+        """Nested (overlapping) scopes inside worker threads unwind
+        correctly while other threads hold different policies."""
+        results = {}
+        barrier = threading.Barrier(2)
+
+        def worker(idx, outer_name, inner_name):
+            outer = core.FixedPolicy(outer_name)
+            inner = core.FixedPolicy(inner_name)
+            a = jnp.ones((4, 8), jnp.float32)
+            b = jnp.ones((3, 8), jnp.float32)
+            barrier.wait()
+            with core.use_policy(outer):
+                core.dispatch("NT", a, b)
+                with core.use_policy(inner):
+                    core.dispatch("NT", a, b)
+                    core.dispatch("NT", a, b)
+                core.dispatch("NT", a, b)
+            results[idx] = (
+                outer.stats.by_candidate,
+                inner.stats.by_candidate,
+            )
+
+        threads = [
+            threading.Thread(target=worker, args=(0, "XLA_TNN", "XLA_NT")),
+            threading.Thread(target=worker, args=(1, "PALLAS_NT", "XLA_TNN")),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert results[0] == ({"XLA_TNN": 2}, {"XLA_NT": 2})
+        assert results[1] == ({"PALLAS_NT": 2}, {"XLA_TNN": 2})
+
 
 # -- policy zoo ---------------------------------------------------------------
 

@@ -160,12 +160,27 @@ class TestData:
 
 
 class TestServe:
-    def test_serve_driver(self):
+    def test_serve_driver_engine(self):
+        """Default driver mode: the continuous-batching engine — on an SSM
+        arch, which takes the exact-length (non-bucketed) prefill path."""
         env = dict(os.environ, PYTHONPATH=SRC)
         out = subprocess.run(
             [sys.executable, "-m", "repro.launch.serve", "--arch", "mamba2-2.7b",
-             "--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "4",
-             "--mesh", "1x1"],
+             "--smoke", "--requests", "3", "--slots", "2", "--prompt-len", "8",
+             "--gen", "4", "--mesh", "1x1"],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "tok/s" in out.stdout
+        assert "cold-miss" in out.stdout
+        assert "class 'interactive'" in out.stdout  # per-class reports
+
+    def test_serve_driver_legacy(self):
+        env = dict(os.environ, PYTHONPATH=SRC)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", "mamba2-2.7b",
+             "--smoke", "--legacy", "--batch", "2", "--prompt-len", "8",
+             "--gen", "4", "--mesh", "1x1"],
             capture_output=True, text=True, env=env, timeout=600,
         )
         assert out.returncode == 0, out.stdout + out.stderr

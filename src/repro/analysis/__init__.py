@@ -1,0 +1,36 @@
+"""Static analysis for the dispatch engine's machine-checked invariants.
+
+The reproduction's central contract is that *every* GEMM-shaped
+contraction routes through the learned selection policy
+(``core.dispatch`` / ``core.dispatch_batched``), and that the artifacts
+the selection loop persists — candidate registry, measurement caches,
+selector artifacts, committed BENCH grids — stay mutually consistent.
+PR review used to be the only guard; this package enforces the
+invariants statically, before a kernel ever runs:
+
+  * ``dispatch_lint``  — AST walk flagging einsum/dot_general/matmul
+    calls that bypass the dispatch engine (rules DL0xx);
+  * ``registry_lint``  — candidate-registry consistency: defaults,
+    binary pairs, analytic arms, config spaces, per-(op, platform)
+    enumeration (rules RC1xx);
+  * ``artifacts_lint`` — pure-stdlib (no jax import) schema validation
+    of committed BENCH grids, selector artifacts and measurement
+    caches (rules AR2xx);
+  * ``contracts``      — ``jax.eval_shape``-based output shape/dtype
+    verification of every registered (candidate, op, config) and static
+    tile-config validation (rules KC3xx).
+
+``python -m repro.analysis.lint`` runs them all; findings carry
+file:line, severity and a rule id, and a committed baseline file
+(``baseline.json``) suppresses known findings — each entry must carry a
+justification string, so every accepted bypass is a documented decision.
+"""
+
+from .findings import (
+    Baseline,
+    Finding,
+    RULES,
+    SEVERITIES,
+)
+
+__all__ = ["Baseline", "Finding", "RULES", "SEVERITIES"]

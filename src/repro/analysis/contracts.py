@@ -1,0 +1,190 @@
+"""Kernel-contract checker: every candidate's shape/dtype contract, traced.
+
+Every registered candidate promises ``f(a, b) -> c`` in its op's storage
+layout (``core.measure.operand_shapes``) with the output in the input
+dtype.  ``jax.eval_shape`` proves that promise abstractly — no FLOP is
+executed, no accelerator needed — over a deliberately *ragged* shape
+grid (extents off the 128 MXU edge), because padding/clamping bugs hide
+at aligned shapes.  Coverage is total by construction: the checker walks
+``CANDIDATES`` x ``Candidate.ops``, so registering a new candidate or
+adding an op to an existing one enrols it automatically; tests assert
+the report covers every registered (candidate, op) pair.
+
+Two rules:
+
+  * ``KC301`` — eval_shape produced the wrong output shape/dtype (or the
+    trace itself raised) for a (candidate, op, config) cell.
+  * ``KC302`` — an enumerated tile config fails static validation:
+    edges must be positive multiples of the MXU edge, clamped to the
+    padded extent of their axis, and the double-buffered working set
+    must fit the VMEM budget.
+
+Imports jax; use the artifact pass for jax-free contexts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from .findings import Finding
+
+__all__ = ["ContractReport", "SHAPE_GRID", "check_contracts", "run"]
+
+# Ragged (m, n, k, g) probes: one aligned anchor, the rest deliberately
+# off the 128 edge (sub-tile dims, prime-ish extents, padding-heavy
+# remainders).  g > 1 applies only to the batched ops.
+SHAPE_GRID: Tuple[Tuple[int, int, int, int], ...] = (
+    (256, 256, 256, 2),  # aligned anchor
+    (96, 160, 224, 3),   # everything sub-/off-tile
+    (257, 129, 65, 2),   # remainder-of-1 padding on every axis
+    (48, 512, 100, 5),   # mixed: one aligned axis, two ragged
+)
+
+_DTYPES = ("float32", "bfloat16")
+
+
+@dataclass
+class ContractReport:
+    """Findings plus the (candidate, op) pairs actually checked."""
+
+    findings: List[Finding] = field(default_factory=list)
+    pairs: Tuple[Tuple[str, str], ...] = ()
+    cells: int = 0  # (candidate, op, shape, dtype, config) cells traced
+
+
+def _expected_out(op: str, m: int, n: int, k: int, g: int):
+    return (g, m, n) if op in ("BNT", "BNN") else (m, n)
+
+
+def _candidate_location(cand, repo_root: Optional[str]) -> Tuple[str, int]:
+    import inspect
+    import os
+
+    try:
+        path = inspect.getsourcefile(cand.fn) or ""
+        line = cand.fn.__code__.co_firstlineno
+        if repo_root:
+            try:
+                path = os.path.relpath(path, repo_root)
+            except ValueError:
+                pass
+        return (path.replace(os.sep, "/"), line)
+    except (TypeError, AttributeError):
+        return ("src/repro/core/candidates.py", 1)
+
+
+def check_contracts(
+    shapes: Tuple[Tuple[int, int, int, int], ...] = SHAPE_GRID,
+    dtypes: Tuple[str, ...] = _DTYPES,
+    repo_root: Optional[str] = None,
+) -> ContractReport:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.candidates import CANDIDATES, candidate_op_pairs
+    from repro.core.measure import operand_shapes
+    from repro.kernels.common import MXU_EDGE, round_up
+    from repro.kernels.tiling import fits_vmem
+
+    report = ContractReport()
+    report.pairs = candidate_op_pairs()
+    for name, cand in CANDIDATES.items():
+        path, line = _candidate_location(cand, repo_root)
+
+        def add(rule, message, context):
+            report.findings.append(
+                Finding(
+                    rule=rule, path=path, line=line, message=message,
+                    context=context,
+                )
+            )
+
+        for op in cand.ops:
+            for (m, n, k, g) in shapes:
+                g = g if op in ("BNT", "BNN") else 1
+                sa, sb = operand_shapes(op, m, n, k, g)
+                want = _expected_out(op, m, n, k, g)
+                for dtype in dtypes:
+                    if cand.dtypes is not None and dtype not in cand.dtypes:
+                        continue
+                    dsize = jnp.dtype(dtype).itemsize
+                    # default tiling, plus (for tunables) the top
+                    # shortlisted explicit config — the two paths
+                    # Candidate.run actually takes
+                    configs = [None]
+                    space = cand.config_space(m, n, k, dsize=dsize)
+                    if space:
+                        configs.append(space[0])
+                    # KC302: every enumerated config must be statically
+                    # admissible, not just the one we trace
+                    for cfg in space:
+                        for edge, dim in zip(cfg, (m, n, k)):
+                            if edge <= 0 or edge % MXU_EDGE:
+                                add(
+                                    "KC302",
+                                    f"candidate {name!r} enumerates tile "
+                                    f"{cfg} at {op} {m}x{n}x{k}: edge "
+                                    f"{edge} is not a positive multiple "
+                                    f"of the MXU edge ({MXU_EDGE})",
+                                    f"tile:{name}:{op}:{m}x{n}x{k}",
+                                )
+                            elif edge > round_up(dim, MXU_EDGE):
+                                add(
+                                    "KC302",
+                                    f"candidate {name!r} enumerates tile "
+                                    f"{cfg} at {op} {m}x{n}x{k}: edge "
+                                    f"{edge} exceeds the padded extent "
+                                    f"of its axis (dim {dim})",
+                                    f"tile:{name}:{op}:{m}x{n}x{k}",
+                                )
+                        if not fits_vmem(cfg, dsize):
+                            add(
+                                "KC302",
+                                f"candidate {name!r} enumerates tile {cfg} "
+                                f"at {op} {m}x{n}x{k} dtype {dtype}: "
+                                "working set exceeds the VMEM budget",
+                                f"tile:{name}:{op}:{m}x{n}x{k}",
+                            )
+                    for cfg in configs:
+                        report.cells += 1
+                        cell = (
+                            f"contract:{name}:{op}:{m}x{n}x{k}x{g}:{dtype}"
+                            f":{'default' if cfg is None else 'tiled'}"
+                        )
+                        a = jax.ShapeDtypeStruct(sa, jnp.dtype(dtype))
+                        b = jax.ShapeDtypeStruct(sb, jnp.dtype(dtype))
+                        try:
+                            out = jax.eval_shape(
+                                lambda x, y, _c=cfg: cand.run(x, y, _c),
+                                a,
+                                b,
+                            )
+                        except Exception as exc:  # trace failure IS a finding
+                            add(
+                                "KC301",
+                                f"candidate {name!r} failed to trace op "
+                                f"{op} at {m}x{n}x{k} (g={g}, {dtype}, "
+                                f"config={cfg}): {type(exc).__name__}: "
+                                f"{exc}",
+                                cell,
+                            )
+                            continue
+                        if tuple(out.shape) != want or (
+                            jnp.dtype(out.dtype) != jnp.dtype(dtype)
+                        ):
+                            add(
+                                "KC301",
+                                f"candidate {name!r} op {op} at "
+                                f"{m}x{n}x{k} (g={g}, {dtype}, "
+                                f"config={cfg}) returned "
+                                f"{tuple(out.shape)}/{out.dtype}, "
+                                f"contract requires {want}/{dtype}",
+                                cell,
+                            )
+    return report
+
+
+def run(repo_root: Optional[str] = None) -> List[Finding]:
+    """The pass entry point the lint CLI calls."""
+    return check_contracts(repo_root=repo_root).findings

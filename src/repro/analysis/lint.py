@@ -1,0 +1,173 @@
+"""``python -m repro.analysis.lint`` — the repo's own static analyzer.
+
+Runs the four passes (dispatch bypass, registry consistency, artifact
+schemas, kernel contracts) and exits non-zero when any *unsuppressed*
+error-severity finding remains.  Findings print as
+``path:line: severity RULE message`` — the gcc format editors and CI
+annotators already parse.
+
+Suppression goes through a committed baseline file
+(``src/repro/analysis/baseline.json``): a JSON map from finding
+fingerprint to a human-written justification.  Empty justifications do
+not suppress (``BL901``), stale entries warn (``BL902``).  Seed new
+entries with ``--write-baseline`` and then *fill in the justification by
+hand* — that is the point.
+
+Pass selection matters for dependencies: ``--passes artifacts`` (and
+``dispatch``) never import jax, so artifact validation runs on
+checkouts without the accelerator stack; ``registry`` and ``contracts``
+import ``repro.core`` lazily only when selected.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from .findings import RULES, Baseline, Finding, apply_baseline
+
+__all__ = ["PASSES", "main", "run_passes"]
+
+# pass name -> (module, needs_jax); modules are imported lazily so the
+# jax-free passes stay jax-free under --passes
+PASSES = ("dispatch", "registry", "artifacts", "contracts")
+_NEEDS_JAX = {"dispatch": False, "artifacts": False,
+              "registry": True, "contracts": True}
+
+
+def _default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.json")
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/lint.py -> repo root is three parents up from src
+    return os.path.abspath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     os.pardir, os.pardir, os.pardir)
+    )
+
+
+def run_passes(
+    passes: Sequence[str], repo_root: Optional[str] = None
+) -> List[Finding]:
+    """All findings from the selected passes, in pass order."""
+    repo_root = repo_root or _repo_root()
+    findings: List[Finding] = []
+    for name in passes:
+        if name == "dispatch":
+            from . import dispatch_lint
+
+            findings.extend(dispatch_lint.run(repo_root))
+        elif name == "registry":
+            from . import registry_lint
+
+            findings.extend(registry_lint.run(repo_root))
+        elif name == "artifacts":
+            from . import artifacts_lint
+
+            findings.extend(artifacts_lint.run(repo_root))
+        elif name == "contracts":
+            from . import contracts
+
+            findings.extend(contracts.run(repo_root))
+        else:
+            raise ValueError(
+                f"unknown pass {name!r}; have {', '.join(PASSES)}"
+            )
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Dispatch/registry/artifact/contract static analysis.",
+    )
+    parser.add_argument(
+        "--passes",
+        default=",".join(PASSES),
+        help="comma-separated subset of: " + ", ".join(PASSES),
+    )
+    parser.add_argument(
+        "--baseline",
+        default=_default_baseline_path(),
+        help="baseline JSON path (default: the committed package baseline)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline: every finding is active",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="write current unsuppressed findings into the baseline with "
+        "empty justifications (fill them in by hand), then exit 0",
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="repo root (default: derived from the package location)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalogue"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULES):
+            print(f"{rule}  {RULES[rule]}")
+        return 0
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        parser.error(
+            f"unknown pass(es) {', '.join(unknown)}; have {', '.join(PASSES)}"
+        )
+
+    repo_root = os.path.abspath(args.root) if args.root else _repo_root()
+    findings = run_passes(passes, repo_root)
+
+    baseline: Optional[Baseline] = None
+    if not args.no_baseline and not args.write_baseline:
+        if os.path.exists(args.baseline):
+            baseline = Baseline.load(args.baseline)
+
+    if args.write_baseline:
+        existing = (
+            Baseline.load(args.baseline)
+            if os.path.exists(args.baseline)
+            else Baseline(path=args.baseline)
+        )
+        added = 0
+        for f in findings:
+            if f.fingerprint not in existing.entries:
+                existing.entries[f.fingerprint] = ""
+                added += 1
+        existing.save(args.baseline)
+        print(
+            f"baseline: {args.baseline} ({added} new entries, "
+            f"{len(existing.entries)} total) — add a justification to "
+            "each new entry or the lint will fail with BL901"
+        )
+        return 0
+
+    active, suppressed = apply_baseline(findings, baseline)
+    for f in sorted(active, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.render())
+
+    errors = [f for f in active if f.severity == "error"]
+    warnings = [f for f in active if f.severity == "warning"]
+    print(
+        f"repro-lint: {len(passes)} pass(es) "
+        f"[{', '.join(passes)}]: {len(errors)} error(s), "
+        f"{len(warnings)} warning(s), {len(suppressed)} baselined"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

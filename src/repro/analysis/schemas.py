@@ -1,0 +1,115 @@
+"""Jax-free mirror of the persistence-layer schemas.
+
+The artifact validator must run without importing jax (CI validates
+committed JSON on checkouts where pulling in the accelerator stack is
+pointless), but the authoritative schema constants live in modules that
+import jax at module scope (``core.measure``, ``core.selector``).  This
+module mirrors exactly the constants and key grammars the validator
+needs; ``tests/test_analysis.py`` asserts each mirror equals its
+authoritative source, so the two cannot drift silently — the same
+machine-checked-contract move the validator itself applies to the
+artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+__all__ = [
+    "OPS",
+    "BATCHED_OPS",
+    "MEASURE_SCHEMA_VERSION",
+    "SELECTOR_SCHEMA_VERSION",
+    "SERVE_SCHEMA_VERSION",
+    "BENCH_KERNELS_TOP_KEYS",
+    "BENCH_KERNELS_ROW_KEYS",
+    "BENCH_SERVE_TOP_KEYS",
+    "BENCH_SERVE_CLASS_KEYS",
+    "DEFAULT_CONFIG_KEY",
+    "parse_config_key",
+    "parse_cache_key",
+]
+
+# mirrors repro.core.opkey.OPS / BATCHED_OPS
+OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN")
+BATCHED_OPS: Tuple[str, ...] = ("BNT", "BNN")
+
+# mirrors repro.core.measure.MEASURE_SCHEMA_VERSION
+MEASURE_SCHEMA_VERSION = 4
+# mirrors repro.core.selector.SCHEMA_VERSION
+SELECTOR_SCHEMA_VERSION = 4
+# mirrors benchmarks.serve_load.SCHEMA_VERSION
+SERVE_SCHEMA_VERSION = 1
+
+# mirrors repro.kernels.tiling.DEFAULT_CONFIG_KEY
+DEFAULT_CONFIG_KEY = "default"
+
+# mirrors benchmarks.bench_drift.REQUIRED_TOP_KEYS / REQUIRED_ROW_KEYS
+BENCH_KERNELS_TOP_KEYS = frozenset(
+    {"mode", "dtype", "hardware", "backend", "default_block", "results"}
+)
+BENCH_KERNELS_ROW_KEYS = frozenset(
+    {
+        "op", "g", "m", "n", "k", "candidate", "config",
+        "is_default_config", "median_ms", "gflops", "roofline_gflops",
+        "best",
+    }
+)
+
+# mirrors benchmarks.bench_drift.REQUIRED_SERVE_TOP_KEYS / _CLASS_KEYS
+BENCH_SERVE_TOP_KEYS = frozenset(
+    {
+        "schema_version", "mode", "arch", "backend", "n_slots", "max_seq",
+        "buckets", "warmup", "cold_misses_after_warmup", "totals",
+        "classes",
+    }
+)
+BENCH_SERVE_CLASS_KEYS = frozenset(
+    {"policy", "requests", "tokens", "p50_ms", "p99_ms", "dispatch"}
+)
+
+
+def parse_config_key(key: str) -> Optional[Tuple[int, ...]]:
+    """Tile-config key grammar (mirrors ``kernels.tiling.parse_config_key``
+    but accepts both the 3-D matmul and 2-D transpose arities).
+    ``'default'`` maps to None; raises ``ValueError`` on malformed keys."""
+    if key == DEFAULT_CONFIG_KEY:
+        return None
+    try:
+        parts = tuple(int(p) for p in key.split("x"))
+    except ValueError:
+        raise ValueError(f"malformed tile-config key {key!r}") from None
+    if len(parts) not in (2, 3) or any(p <= 0 for p in parts):
+        raise ValueError(f"malformed tile-config key {key!r}")
+    return parts
+
+
+def parse_cache_key(
+    s: str, version: int = MEASURE_SCHEMA_VERSION
+) -> Tuple[str, str, str, str, int, int, int, int]:
+    """Measurement-cache key grammar, per schema version (mirrors
+    ``core.measure._parse_key``).  Raises ``ValueError`` on malformed
+    keys, including op/batch-extent violations."""
+    try:
+        if version >= 4:
+            head, op, g, m, n, k = s.rsplit("|", 5)
+        elif version == 3:
+            head, op, m, n, k = s.rsplit("|", 4)
+            g = 1
+        else:
+            head, m, n, k = s.rsplit("|", 3)
+            op, g = "NT", 1
+        platform, rest = head.split("|", 1)
+        hardware, dtype = rest.rsplit("|", 1)
+        g, m, n, k = int(g), int(m), int(n), int(k)
+    except ValueError:
+        raise ValueError(f"malformed measurement-cache key {s!r}") from None
+    if op not in OPS:
+        raise ValueError(f"cache key {s!r} names unknown op {op!r}")
+    if m < 1 or n < 1 or k < 1 or g < 1:
+        raise ValueError(f"cache key {s!r} has non-positive extents")
+    if g != 1 and op not in BATCHED_OPS:
+        raise ValueError(
+            f"cache key {s!r} gives unbatched op {op!r} batch extent g={g}"
+        )
+    return (platform, hardware, dtype, op, g, m, n, k)

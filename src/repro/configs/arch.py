@@ -9,7 +9,7 @@ mamba+shared-attention units) are expressed as multi-block units.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from repro.models.blocks import BlockCfg

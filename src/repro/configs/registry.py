@@ -23,7 +23,7 @@ from . import (
     smollm_135m,
     zamba2_7b,
 )
-from .arch import ArchConfig, BlockCfg, MoEConfig, SSMConfig
+from .arch import ArchConfig, MoEConfig, SSMConfig
 
 __all__ = ["ARCHS", "get_config", "list_archs", "smoke_config"]
 

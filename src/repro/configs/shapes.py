@@ -8,7 +8,7 @@ without allocating anything (ShapeDtypeStruct stand-ins only).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

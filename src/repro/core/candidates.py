@@ -69,6 +69,7 @@ __all__ = [
     "unregister_candidate",
     "get_candidate",
     "candidate_names",
+    "candidate_op_pairs",
     "candidates_for",
     "current_platform",
     "candidate_fits_memory",
@@ -221,6 +222,15 @@ def get_candidate(name: str) -> Candidate:
 def candidate_names(distributed_only: bool = False) -> Tuple[str, ...]:
     return tuple(
         n for n, c in _REGISTRY.items() if c.distributed_safe or not distributed_only
+    )
+
+
+def candidate_op_pairs() -> Tuple[Tuple[str, str], ...]:
+    """Every registered (candidate, op) pair, registration order — the
+    coverage universe for introspection tooling (``repro.analysis``
+    contract checks walk exactly this set)."""
+    return tuple(
+        (name, op) for name, c in _REGISTRY.items() for op in c.ops
     )
 
 

@@ -30,9 +30,8 @@ from __future__ import annotations
 
 import hashlib
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
-import numpy as np
 
 from .hardware import HardwareSpec
 

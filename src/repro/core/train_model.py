@@ -15,7 +15,6 @@ set (argmin of predicted log-time).
 
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 

@@ -13,7 +13,6 @@ when *not* to enable it).
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence, Tuple
 
 import jax

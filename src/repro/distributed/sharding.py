@@ -10,7 +10,7 @@ regardless of its head/expert counts (DESIGN.md §5).
 
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -18,7 +18,6 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .common import DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret

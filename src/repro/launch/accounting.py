@@ -23,7 +23,7 @@ All probes lower on the SAME production mesh as the artifact, so sharding
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +31,9 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import cache_specs, input_specs
-from repro.distributed.context import use_mesh
 from repro.distributed import batch_specs, cache_specs_tree, named, param_specs
-from repro.launch.roofline import HW_V5E, parse_collectives
+from repro.distributed.context import use_mesh
+from repro.launch.roofline import parse_collectives
 from repro.models import lm
 from repro.optim import make_optimizer
 

@@ -27,7 +27,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (

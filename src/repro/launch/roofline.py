@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 __all__ = ["HW_V5E", "CollectiveStats", "parse_collectives", "roofline", "RooflineReport"]
 

@@ -10,8 +10,7 @@ for the production meshes without allocating a single parameter.
 from __future__ import annotations
 
 import contextlib
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,6 @@ from jax.sharding import PartitionSpec as P
 from repro.core.policy import SelectionPolicy, use_policy
 from repro.distributed import (
     batch_specs,
-    cache_specs_tree,
     named,
     opt_state_specs,
     param_specs,
@@ -154,7 +152,7 @@ def make_train_step(
 
             def body(carry, mb):
                 acc_loss, acc_g = carry
-                l, g = _grad(params, mb)
+                loss_mb, g = _grad(params, mb)
                 if g_shardings is not None and sc.zero1_grads:
                     # land each microbatch's grads reduce-scattered
                     g = jax.tree.map(
@@ -163,7 +161,7 @@ def make_train_step(
                 acc_g = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), acc_g, g
                 )
-                return (acc_loss + l, acc_g), None
+                return (acc_loss + loss_mb, acc_g), None
 
             (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), micro)
             loss = loss / sc.accum

@@ -26,7 +26,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager

@@ -9,7 +9,7 @@ by ``lm.init_lm`` for ``lax.scan``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +22,8 @@ from .attention import (
     init_attn_cache,
 )
 from .layers import Param, gated_mlp, init_gated_mlp, init_rmsnorm, rmsnorm
-from .moe import MoEConfig, init_moe, moe_layer
-from .ssm import SSMConfig, init_ssm, init_ssm_cache, ssm_decode, ssm_layer
+from .moe import init_moe, moe_layer
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_layer
 
 __all__ = ["BlockCfg", "init_block", "apply_block", "decode_block", "init_block_cache"]
 

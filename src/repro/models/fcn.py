@@ -9,7 +9,7 @@ through MTNN.  The two paper configurations (MNIST-sized and the large
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

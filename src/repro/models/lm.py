@@ -14,14 +14,12 @@ embeddings prepended as a bidirectional prefix).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .blocks import (
-    BlockCfg,
     apply_block,
     decode_block,
     init_block,
@@ -31,9 +29,7 @@ from .blocks import (
 from .layers import (
     Param,
     cross_entropy_loss,
-    dense,
     embed,
-    init_dense,
     init_embedding,
     init_rmsnorm,
     rmsnorm,
@@ -118,7 +114,7 @@ def _embed_input(params: Param, cfg, batch: Dict[str, jax.Array]):
 
 
 def _unit_slice(slot_params, i):
-    return tuple(jax.tree.map(lambda l: l[i], sp) for sp in slot_params)
+    return tuple(jax.tree.map(lambda leaf: leaf[i], sp) for sp in slot_params)
 
 
 def _run_stack(params, cfg, x, positions, prefix_len):
@@ -234,7 +230,7 @@ def init_lm_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
     for count, blocks in cfg.segments:
         seg = tuple(
             jax.tree.map(
-                lambda l: jnp.zeros((count,) + l.shape, l.dtype),
+                lambda leaf: jnp.zeros((count,) + leaf.shape, leaf.dtype),
                 init_block_cache(b, cfg, batch, max_seq, dtype),
             )
             for b in blocks
@@ -247,7 +243,7 @@ def init_lm_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
 def _read_unit_cache(seg_cache, i):
     """Dynamic per-unit slice of the stacked segment cache."""
     return tuple(
-        jax.tree.map(lambda l: jax.lax.dynamic_index_in_dim(l, i, 0, False), sc)
+        jax.tree.map(lambda leaf: jax.lax.dynamic_index_in_dim(leaf, i, 0, False), sc)
         for sc in seg_cache
     )
 

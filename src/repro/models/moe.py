@@ -16,10 +16,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.engine import dispatch
 
 from .layers import Param, init_dense
 
@@ -89,14 +91,13 @@ def moe_layer(p: Param, x: jax.Array, cfg: MoEConfig) -> jax.Array:
     xg = x.reshape(G, group, d)
     capacity = cfg.capacity(group)
 
-    router_logits = jnp.einsum(
-        "gtd,ed->gte", xg.astype(jnp.float32), p["router"]["w"]
-    )
-    dispatch, combine = _route(router_logits, cfg, capacity)
+    # router GEMM: (G*T, d) @ (E, d)^T — an NT op, policy-dispatched
+    router_logits = dispatch("NT", xg.astype(jnp.float32), p["router"]["w"])
+    dispatch_mask, combine = _route(router_logits, cfg, capacity)
 
     # dispatch: gather expert inputs (E, G, C, d)
     expert_in = jnp.einsum(
-        "gtec,gtd->egcd", dispatch.astype(x.dtype), xg
+        "gtec,gtd->egcd", dispatch_mask.astype(x.dtype), xg
     )
     # expert FFN: batched NT matmuls over the expert axis
     g = jnp.einsum("egcd,efd->egcf", expert_in, p["gate"])

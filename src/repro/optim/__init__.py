@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

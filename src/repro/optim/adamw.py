@@ -3,7 +3,7 @@ dtype (bf16-safe master statistics)."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

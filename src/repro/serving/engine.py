@@ -45,7 +45,7 @@ import dataclasses
 import enum
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -187,7 +187,7 @@ class ServeEngine:
             # time, so this class's policy governs every GEMM in the step
             with _policy_scope(policy):
                 gathered = jax.tree.map(
-                    lambda l: jnp.take(l, slot_ids, axis=1), segments
+                    lambda leaf: jnp.take(leaf, slot_ids, axis=1), segments
                 )
                 logits, new = lm.lm_decode(
                     params, cfg,

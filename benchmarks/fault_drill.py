@@ -1,0 +1,115 @@
+"""Fault-tolerance drill: what a candidate fault costs the dispatcher.
+
+Exercises the chaos plane end-to-end in eager dispatch and reports the
+three latencies that matter for graceful degradation:
+
+  1. healthy    — steady-state dispatch with the selected candidate fine;
+  2. first hit  — the faulted call itself: the injected failure fires,
+     the engine quarantines the arm and walks the fallback chain to the
+     XLA default (this is the one-off recovery cost);
+  3. degraded   — steady state after quarantine: the policy's admissible
+     set already excludes the quarantined arm, so dispatch goes straight
+     to the fallback with no exception machinery on the path.
+
+Also verifies the numerics: all three phases must produce the same
+result (the fallback computes the same GEMM), and prints the engine's
+``health_report`` so the quarantine ledger and fallback counters are
+visible in benchmark logs.
+
+  PYTHONPATH=src python -m benchmarks.fault_drill --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import faults
+
+from .common import save_json, section
+
+_SHAPE = (256, 512, 384)  # m, n, k — MXU-aligned, small enough for CI
+
+
+def _timed_dispatch(a, b, reps: int) -> float:
+    """Median eager-dispatch wall time in ms over ``reps`` calls."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(core.dispatch("NT", a, b))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3
+
+
+def fault_drill(quick: bool = True):
+    section("Fault drill — dispatch latency healthy / faulted / quarantined")
+    reps = 10 if quick else 50
+    m, n, k = _SHAPE
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(m, k), jnp.float32)
+    b = jnp.asarray(rng.randn(n, k), jnp.float32)
+    pallas = "PALLAS_TNN_FUSED" if "PALLAS_TNN_FUSED" in core.CANDIDATES \
+        else core.PAPER_PAIR[1]
+    policy = core.FixedPolicy(pallas)
+    expect = np.asarray(a @ b.T)
+
+    faults.clear_quarantine()
+    out = {"shape": _SHAPE, "candidate": pallas, "reps": reps}
+    with core.use_policy(policy):
+        # 1. healthy steady state
+        ref = core.dispatch("NT", a, b)  # warm compile caches
+        np.testing.assert_allclose(np.asarray(ref), expect, rtol=2e-2)
+        out["healthy_ms"] = _timed_dispatch(a, b, reps)
+
+        # 2. the faulted call: injection fires, engine quarantines + falls
+        #    back down the chain to the XLA default
+        with faults.inject_faults(f"raise:{pallas}.NT"):
+            t0 = time.perf_counter()
+            hit = core.dispatch("NT", a, b)
+            jax.block_until_ready(hit)
+            out["first_fault_ms"] = (time.perf_counter() - t0) * 1e3
+            np.testing.assert_allclose(np.asarray(hit), expect, rtol=2e-2)
+
+            # 3. degraded steady state: the arm is quarantined, so the
+            #    policy routes around it before any kernel runs
+            assert faults.is_quarantined(pallas, "NT")
+            out["degraded_ms"] = _timed_dispatch(a, b, reps)
+
+    out["quarantined_arms"] = [
+        f"{e.op}:{e.label()}" for e in faults.quarantine_entries()
+    ]
+    out["fallbacks"] = {
+        f"{op}:{sel}->{ex}": cnt
+        for (op, sel, ex), cnt in sorted(faults.fallback_counts().items())
+    }
+    print(f"  candidate under test: {pallas}  shape m,n,k={_SHAPE}")
+    print(f"  {'healthy':<12s} {out['healthy_ms']:8.3f} ms/dispatch")
+    print(f"  {'first fault':<12s} {out['first_fault_ms']:8.3f} ms "
+          f"(fallback walk + quarantine, one-off)")
+    print(f"  {'degraded':<12s} {out['degraded_ms']:8.3f} ms/dispatch "
+          f"(quarantine routes around the arm)")
+    print(core.health_report())
+    faults.clear_quarantine()
+    save_json("fault_drill", out)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument(
+        "--quick", action="store_true", help="fast reps (the default; CI)"
+    )
+    grp.add_argument("--full", action="store_true", help="more reps")
+    args = ap.parse_args(argv)
+    fault_drill(quick=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,7 @@ import numpy as np
 from repro import core
 from repro.checkpoint import CheckpointManager
 from repro.core.engine import POLICY_SPEC_HELP
+from repro.core.faults import add_chaos_argument, chaos_scope
 from repro.models.fcn import FCNConfig, fcn_loss, init_fcn
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
 
@@ -36,8 +37,14 @@ def main():
                     help="disable MTNN (the CaffeNT baseline)")
     ap.add_argument("--policy", default=None,
                     help=f"override the trained-here selector; {POLICY_SPEC_HELP}")
+    add_chaos_argument(ap)
     args = ap.parse_args()
 
+    with chaos_scope(args.chaos):
+        _run(args)
+
+
+def _run(args):
     if args.smoke:
         args.steps = min(args.steps, 5)
     if args.tiny or args.smoke:
@@ -103,6 +110,7 @@ def main():
     print(f"[fcn] done; median {med*1e3:.0f} ms/step "
           f"({2*3*args.batch*n_params/med/1e9:.1f} GFLOP/s effective)")
     print(core.dispatch_report(policy))
+    print(core.health_report())
 
 
 if __name__ == "__main__":

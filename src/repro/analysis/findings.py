@@ -45,6 +45,8 @@ RULES: Dict[str, str] = {
              "resolve to a registered candidate",
     "RC104": "tunable candidate enumerates an empty tile-config space",
     "RC105": "no candidate enumerable for an (op, platform) cell",
+    "RC106": "candidate's fallback chain does not terminate at the per-op "
+             "default (or contains unregistered/repeated members)",
     # artifact/schema pass
     "AR201": "artifact file unreadable or not a JSON object",
     "AR202": "artifact schema_version missing, non-integer, or newer than "

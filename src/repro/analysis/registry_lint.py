@@ -51,6 +51,7 @@ def run(repo_root: Optional[str] = None) -> List[Finding]:
         CANDIDATES,
         DEFAULT_BY_OP,
         candidates_for,
+        fallback_chain,
     )
     from repro.core.opkey import OPS
     from repro.core.selector import _sim_to_candidate
@@ -192,5 +193,51 @@ def run(repo_root: Optional[str] = None) -> List[Finding]:
                     f"{platform!r} — dispatch there would have no "
                     "implementation",
                     f"enum:{op}:{platform}",
+                )
+
+    # RC106: graceful degradation — every (candidate, op) pair must resolve
+    # a fallback chain whose members are registered implementors of the op,
+    # with no repeats, terminating at the per-op always-runnable default
+    for name, cand in CANDIDATES.items():
+        path, line = _candidate_location(cand, repo_root)
+        for op in cand.ops:
+            default = DEFAULT_BY_OP.get(op)
+            if default is None:
+                continue  # already an RC101 finding
+            try:
+                chain = fallback_chain(op, name)
+            except Exception as e:  # noqa: BLE001 — any failure is the finding
+                add(
+                    "RC106",
+                    f"fallback_chain({op!r}, {name!r}) raised {e!r} — "
+                    "dispatch could not degrade after a candidate fault",
+                    f"chain:{op}:{name}",
+                    path=path,
+                    line=line,
+                )
+                continue
+            problems = []
+            if not chain or chain[-1] != default:
+                problems.append(
+                    f"does not terminate at the default {default!r}"
+                )
+            if len(set(chain)) != len(chain):
+                problems.append("repeats a member (retry loop)")
+            for member in chain:
+                mc = CANDIDATES.get(member)
+                if mc is None:
+                    problems.append(f"member {member!r} is not registered")
+                elif op not in mc.ops:
+                    problems.append(
+                        f"member {member!r} does not implement {op!r}"
+                    )
+            if problems:
+                add(
+                    "RC106",
+                    f"fallback chain for ({name!r}, {op!r}) = {chain!r} "
+                    f"{'; '.join(problems)}",
+                    f"chain:{op}:{name}",
+                    path=path,
+                    line=line,
                 )
     return findings

@@ -60,6 +60,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import faults
 from .opkey import BATCHED_OPS, OPS, check_op
 
 __all__ = [
@@ -74,6 +75,7 @@ __all__ = [
     "current_platform",
     "candidate_fits_memory",
     "candidate_allowed",
+    "fallback_chain",
     "PAPER_PAIR",
     "DEFAULT_BY_OP",
     "BINARY_PAIRS_BY_OP",
@@ -292,10 +294,45 @@ def candidate_fits_memory(
 def candidate_allowed(
     cand: Candidate, distributed: bool, config=None, op: Optional[str] = None
 ) -> bool:
-    """Distributed-safety + runtime-platform (+ tile-config, + op) filter."""
+    """Distributed-safety + runtime-platform (+ tile-config, + op) filter,
+    plus the process-wide quarantine ledger: an arm that failed at dispatch
+    (``core/faults.py``) stops being admissible everywhere — every policy's
+    selection and the autotune measurement sweep route through here, so
+    quarantine feeds back into the whole zoo without per-policy plumbing."""
     if distributed and not cand.distributed_safe:
         return False
+    if op is not None and faults.is_quarantined(cand.name, op, config):
+        return False
     return cand.supports(platform=current_platform(), config=config, op=op)
+
+
+def fallback_chain(op: str, name: Optional[str] = None) -> Tuple[str, ...]:
+    """The ordered candidate names dispatch retries when ``name`` fails on
+    ``op``: the selected candidate itself, then its binary-pair partner
+    (the paper's other arm — closest in semantics, likely to share warm
+    tiles), terminating at the op's always-runnable XLA reference
+    (``DEFAULT_BY_OP``; RC101 guarantees it exists and RC106 lints that
+    every chain built here actually lands on it).  Members all implement
+    ``op``; the terminal default is attempted by the engine even when
+    quarantined — there is nothing beneath it."""
+    check_op(op)
+    default = DEFAULT_BY_OP[op]
+    chain: list = []
+    if name is not None and name != default:
+        cand = _REGISTRY.get(name)
+        if cand is not None and op in cand.ops:
+            chain.append(name)
+        pair = BINARY_PAIRS_BY_OP.get(op, ())
+        if name in pair:
+            partner = pair[1] if pair[0] == name else pair[0]
+            pc = _REGISTRY.get(partner)
+            if (
+                partner != default and partner not in chain
+                and pc is not None and op in pc.ops
+            ):
+                chain.append(partner)
+    chain.append(default)
+    return tuple(chain)
 
 
 # -- built-in candidates ------------------------------------------------------

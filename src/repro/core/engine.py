@@ -40,7 +40,8 @@ from typing import Optional
 
 import jax
 
-from .candidates import DEFAULT_BY_OP, get_candidate
+from . import faults
+from .candidates import DEFAULT_BY_OP, fallback_chain, get_candidate
 from .opkey import BATCHED_OPS, OPS, OpKey, check_op
 from .policy import (
     AnalyticPolicy,
@@ -59,6 +60,9 @@ __all__ = [
     "dispatch",
     "dispatch_batched",
     "dispatch_report",
+    "health_report",
+    "run_decision",
+    "DispatchError",
     "policy_select",
     "policy_from_spec",
     "add_policy_argument",
@@ -66,6 +70,12 @@ __all__ = [
     "current_policy",
     "default_policy",
 ]
+
+
+class DispatchError(RuntimeError):
+    """Every arm of an OpKey's fallback chain failed — raised only when
+    even the op's XLA reference cannot run (the chain's terminal arm is
+    always attempted, quarantined or not)."""
 
 POLICY_SPEC_HELP = (
     "dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
@@ -117,6 +127,61 @@ def policy_select(policy: SelectionPolicy, key: OpKey) -> Decision:
     return decision
 
 
+def _decision_chain(op: str, decision: Decision) -> list:
+    """The decisions dispatch will attempt, in order: the selected arm;
+    the same candidate degraded to its default tiling (an explicit tile
+    is the most fragile part of a decision — shed it before shedding the
+    algorithm); then the registry's per-op fallback chain, terminating at
+    the op's XLA reference."""
+    chain = [decision]
+    if decision.config is not None:
+        chain.append(Decision(decision.name, None))
+    for name in fallback_chain(op, decision.name):
+        if name != decision.name:
+            chain.append(Decision(name, None))
+    return chain
+
+
+def run_decision(key: OpKey, decision: Decision, a, b):
+    """Execute a policy decision fault-tolerantly.
+
+    Walks the decision's fallback chain: a candidate that raises is
+    recorded in the quarantine ledger (``core/faults.py`` — every policy's
+    admissible set excludes it from then on) and the next arm runs.
+    Quarantined non-terminal arms are skipped without attempting them; the
+    terminal arm — the op's always-runnable XLA reference — is attempted
+    even when quarantined, because there is nothing beneath it.  Raises
+    ``DispatchError`` only when the whole chain failed."""
+    chain = _decision_chain(key.op, decision)
+    last_err: Optional[BaseException] = None
+    for i, dec in enumerate(chain):
+        terminal = i == len(chain) - 1
+        if not terminal and faults.is_quarantined(dec.name, key.op, dec.config):
+            continue
+        try:
+            faults.check_candidate_fault(dec.name, key.op)
+            out = get_candidate(dec.name).run(a, b, dec.config)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            faults.quarantine(dec.name, key.op, dec.config, e)
+            _warn_once(
+                f"quarantined:{dec.label()}:{key.op}",
+                f"candidate {dec.label()!r} failed on op {key.op!r} "
+                f"({type(e).__name__}: {e}); quarantined for this process, "
+                "dispatch degrades down the fallback chain",
+            )
+            last_err = e
+            continue
+        if (dec.name, dec.config) != (decision.name, decision.config):
+            faults.record_fallback(key.op, decision.label(), dec.label())
+        return out
+    raise DispatchError(
+        f"every arm of the fallback chain for {key} failed: "
+        f"{[d.label() for d in chain]}"
+    ) from last_err
+
+
 def _run(op: str, a, b):
     """Select and execute one 2-D GEMM (the custom_vjp core)."""
     import jax.numpy as jnp
@@ -132,7 +197,7 @@ def _run(op: str, a, b):
         n = b.shape[1]
     key = OpKey(op, int(m), int(n), int(k), int(jnp.dtype(a.dtype).itemsize))
     decision = policy_select(current_policy(), key)
-    return get_candidate(decision.name).run(a, b, decision.config)
+    return run_decision(key, decision, a, b)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -175,7 +240,7 @@ def _run3(op: str, a, b):
         op, int(m), int(n), int(k), int(jnp.dtype(a.dtype).itemsize), int(g)
     )
     decision = policy_select(current_policy(), key)
-    return get_candidate(decision.name).run(a, b, decision.config)
+    return run_decision(key, decision, a, b)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -296,6 +361,13 @@ def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
     pol = policy if policy is not None else current_policy()
     stats = pol.stats
     lines = [f"dispatch report — {pol!r}"]
+    quarantined = faults.quarantine_entries()
+    if quarantined:
+        lines.append(
+            f"  quarantined arms: {len(quarantined)} "
+            f"({', '.join(e.label() for e in quarantined)}) — see "
+            "health_report()"
+        )
     if not stats.calls:
         lines.append("  (no dispatches recorded)")
         return "\n".join(lines)
@@ -322,6 +394,40 @@ def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
             f"{100.0 * count / stats.calls:6.1f}%"
         )
     lines.append(f"  {'':<3s} {'total':<{width}s} {stats.calls:8d}")
+    return "\n".join(lines)
+
+
+def health_report() -> str:
+    """Render the process-wide dispatch health: armed fault-injection
+    rules, the quarantine ledger (which arms failed, how, how often), and
+    the fallbacks taken — the operator's view of graceful degradation.
+    Returns the rendered text; callers print it."""
+    lines = ["health report — dispatch fault tolerance"]
+    rules = faults.active_faults()
+    if rules:
+        lines.append(f"  fault injection: {len(rules)} armed rule(s)")
+        for rule in rules:
+            lines.append(f"    {rule.describe()}")
+    else:
+        lines.append("  fault injection: (none armed)")
+    entries = faults.quarantine_entries()
+    if entries:
+        lines.append(f"  quarantined arms: {len(entries)}")
+        for e in entries:
+            lines.append(
+                f"    {e.op:<3s} {e.label():<24s} failures={e.count} "
+                f"[{e.error}]"
+            )
+    else:
+        lines.append("  quarantined arms: (none)")
+    fallbacks = faults.fallback_counts()
+    if fallbacks:
+        total = sum(fallbacks.values())
+        lines.append(f"  fallbacks taken: {total}")
+        for (op, selected, executed), n in sorted(fallbacks.items()):
+            lines.append(f"    {op:<3s} {selected} -> {executed} x{n}")
+    else:
+        lines.append("  fallbacks taken: (none)")
     return "\n".join(lines)
 
 
@@ -393,7 +499,11 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
     if kind == "model":
         if not arg:
             return default_policy()  # builtin selector: distributed-safe
-        return ModelPolicy.from_artifact(arg, distributed=distributed)
+        # recover=True: the CLI is the production path — a corrupt artifact
+        # is moved aside and a fallback selector trained, never a crash
+        return ModelPolicy.from_artifact(
+            arg, distributed=distributed, recover=True
+        )
     if kind == "fixed":
         if not arg:
             raise _spec_error("fixed policy needs a candidate: fixed:<NAME>")

@@ -32,6 +32,7 @@ import tempfile
 import time
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
+from . import faults
 from .candidates import (
     CANDIDATES,
     candidate_allowed,
@@ -69,6 +70,10 @@ __all__ = [
 #   v4: keys gain the batch extent ("plat|hw|dtype|op|g|m|n|k") so the
 #       batched attention contractions (BNT/BNN) are first-class entries.
 #       v3 keys — necessarily unbatched — migrate on load with g=1.
+#       v4 files may additionally carry a top-level "attempts" map
+#       ({key: {name: {config_key: n}}} — how many bench tries each
+#       measurement took, retry-with-backoff observability).  Optional and
+#       schema-neutral: readers without the field ignore it.
 MEASURE_SCHEMA_VERSION = 4
 
 # select() receives an element size, not a dtype; measurement needs a real
@@ -208,37 +213,90 @@ class MeasurementCache:
     accepted by ``get``/``put`` and normalised the same way.  ``save``
     writes atomically (tmp + rename) so a crash mid-write cannot corrupt a
     warm cache.
+
+    ``load(..., recover=True)`` is the production posture (AutotunePolicy
+    uses it): a corrupt/truncated/newer-schema file is moved aside to
+    ``<path>.corrupt`` with a warning and the cache rebuilds empty, and a
+    malformed individual entry is skipped — intact entries survive.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._entries: Dict[MeasurementKey, Dict[str, Dict[str, float]]] = {}
+        # per-measurement bench attempt counts (retry observability):
+        # {key: {name: {config_key: attempts}}} — parallel to _entries
+        self._attempts: Dict[MeasurementKey, Dict[str, Dict[str, int]]] = {}
         # (mtime_ns, size) of the file state we last loaded/wrote
         self._synced_sig: Optional[Tuple[int, int]] = None
 
     @classmethod
-    def load(cls, path: str, missing_ok: bool = True) -> "MeasurementCache":
+    def load(
+        cls, path: str, missing_ok: bool = True, recover: bool = False
+    ) -> "MeasurementCache":
         cache = cls(path)
         if not os.path.exists(path):
             if missing_ok:
                 return cache  # cold cache: starts empty, persists to `path`
             raise FileNotFoundError(f"measurement cache {path!r} does not exist")
-        with open(path) as fh:
-            payload = json.load(fh)
+        try:
+            with open(path, "rb") as fh:
+                raw = faults.corrupt_on_read("cache", fh.read())
+            payload = json.loads(raw.decode("utf-8"))
+            if not isinstance(payload, dict):
+                raise ValueError(
+                    f"measurement cache {path!r} is not a JSON object"
+                )
+            version = payload.get("schema_version", 0)
+            if version > MEASURE_SCHEMA_VERSION:
+                raise ValueError(
+                    f"measurement cache schema v{version} is newer than "
+                    f"supported v{MEASURE_SCHEMA_VERSION}; upgrade the code "
+                    "or re-measure"
+                )
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            if not recover:
+                raise
+            _move_aside_cache(path, e)
+            return cache  # rebuilt empty; next save repopulates the path
         cache._synced_sig = _file_sig(path)
-        version = payload.get("schema_version", 0)
-        if version > MEASURE_SCHEMA_VERSION:
-            raise ValueError(
-                f"measurement cache schema v{version} is newer than supported "
-                f"v{MEASURE_SCHEMA_VERSION}; upgrade the code or re-measure"
-            )
         # v1 (and unversioned v0-era) entries hold flat {name: seconds}
         # values; _normalize_times folds them under the "default" config
         # key — a v1 cache keeps answering warm hits after the upgrade.
         # Pre-v3 keys carry no op component and migrate as op="NT";
         # pre-v4 keys carry no batch component and migrate as g=1.
+        n_bad = 0
         for ks, times in payload.get("entries", {}).items():
-            cache._entries[_parse_key(ks, version)] = _normalize_times(times)
+            try:
+                cache._entries[_parse_key(ks, version)] = _normalize_times(
+                    times
+                )
+            except (ValueError, TypeError, AttributeError):
+                # recover: one rotten entry must not void the warm ones
+                if not recover:
+                    raise
+                n_bad += 1
+        for ks, per_cand in (payload.get("attempts") or {}).items():
+            try:
+                cache._attempts[_parse_key(ks, version)] = {
+                    str(name): {str(ck): int(n) for ck, n in cfgs.items()}
+                    for name, cfgs in per_cand.items()
+                }
+            except (ValueError, TypeError, AttributeError):
+                if not recover:
+                    raise
+                n_bad += 1
+        if n_bad:
+            import warnings
+
+            warnings.warn(
+                f"measurement cache {path!r}: skipped {n_bad} malformed "
+                f"entr{'y' if n_bad == 1 else 'ies'}; "
+                f"{len(cache._entries)} intact entries loaded",
+                UserWarning,
+                stacklevel=2,
+            )
         return cache
 
     def save(self, path: Optional[str] = None) -> None:
@@ -266,6 +324,8 @@ class MeasurementCache:
                 if on_disk is not None:
                     for k, v in on_disk._entries.items():
                         self._entries.setdefault(k, v)
+                    for k, v in on_disk._attempts.items():
+                        self._attempts.setdefault(k, v)
             payload = {
                 "schema_version": MEASURE_SCHEMA_VERSION,
                 "entries": {
@@ -273,6 +333,11 @@ class MeasurementCache:
                     for k, times in sorted(self._entries.items())
                 },
             }
+            if self._attempts:
+                payload["attempts"] = {
+                    _key_str(k): per_cand
+                    for k, per_cand in sorted(self._attempts.items())
+                }
             # unique tmp per writer: a fixed sibling name would let two
             # unlocked writers truncate each other's half-written file
             fd, tmp = tempfile.mkstemp(
@@ -294,11 +359,24 @@ class MeasurementCache:
     def get(self, key) -> Optional[Dict[str, Dict[str, float]]]:
         return self._entries.get(_normalize_mkey(key))
 
-    def put(self, key, times: Dict) -> None:
+    def put(self, key, times: Dict, attempts: Optional[Dict] = None) -> None:
         """Store timings for one (op, shape).  Accepts the canonical nested
         times form or the flat v1 form (normalised under ``"default"``),
-        and legacy op-less 6-tuple keys (normalised to op="NT")."""
-        self._entries[_normalize_mkey(key)] = _normalize_times(times)
+        and legacy op-less 6-tuple keys (normalised to op="NT").
+        ``attempts`` optionally records the bench try count per
+        (candidate, config) alongside the entry."""
+        mkey = _normalize_mkey(key)
+        self._entries[mkey] = _normalize_times(times)
+        if attempts:
+            self._attempts[mkey] = {
+                str(name): {str(ck): int(n) for ck, n in cfgs.items()}
+                for name, cfgs in attempts.items()
+            }
+
+    def get_attempts(self, key) -> Optional[Dict[str, Dict[str, int]]]:
+        """Bench attempt counts recorded with an entry (None when the
+        entry predates retry tracking)."""
+        return self._attempts.get(_normalize_mkey(key))
 
     def records(
         self,
@@ -314,6 +392,25 @@ class MeasurementCache:
 
     def __repr__(self):
         return f"MeasurementCache({len(self)} shapes, path={self.path!r})"
+
+
+def _move_aside_cache(path: str, reason: BaseException) -> None:
+    """Quarantine a corrupt cache file as ``<path>.corrupt`` (warns; a
+    rename failure is itself only warned — recovery must not raise)."""
+    import warnings
+
+    corrupt = path + ".corrupt"
+    try:
+        os.replace(path, corrupt)
+        moved = f"moved aside to {corrupt!r}"
+    except OSError as e:
+        moved = f"could not be moved aside ({e})"
+    warnings.warn(
+        f"measurement cache {path!r} is unreadable "
+        f"({type(reason).__name__}: {reason}); {moved} — rebuilding empty",
+        UserWarning,
+        stacklevel=3,
+    )
 
 
 def _trace_state_clean() -> bool:
@@ -400,6 +497,9 @@ def measure_candidates(
     seed: int = 0,
     tune: bool = True,
     max_tile_configs: int = 4,
+    retries: int = 1,
+    retry_backoff_s: float = 0.02,
+    attempts: Optional[Dict[str, Dict[str, int]]] = None,
 ) -> Dict[str, Dict[str, float]]:
     """Time every admissible (candidate, tile config) for one
     (op, g, shape) on this backend; returns ``{name: {config_key:
@@ -416,6 +516,14 @@ def measure_candidates(
     per config — so an autotune run can never execute a pair the dispatch
     engine would refuse.  Inadmissible pairs are skipped, not timed; the
     result may be empty.
+
+    A pair that raises is retried up to ``retries`` more times with
+    exponential backoff (transient allocation/compile hiccups recover; a
+    pair that keeps failing is simply not a measurement).
+    ``KeyboardInterrupt``/``SystemExit`` always propagate.  When the
+    caller passes an ``attempts`` dict, the try count of every successful
+    measurement is recorded into it as ``{name: {config_key: n}}`` —
+    AutotunePolicy persists that beside the cache entry.
     """
     import functools
 
@@ -452,19 +560,33 @@ def measure_candidates(
             else:
                 sweep = [(DEFAULT_CONFIG_KEY, None)]
             entry: Dict[str, float] = {}
+            entry_tries: Dict[str, int] = {}
             for ck, cfg in sweep:
                 # Candidate.run is the dispatch engine's invocation path —
                 # time exactly what a dispatch at this config would execute
                 fn = functools.partial(cand.run, config=cfg)
-                try:
-                    entry[ck] = bench_fn(jax.jit(fn), a, b, reps, warmup)
-                except Exception:
-                    # a pair that cannot run here (kernel unsupported under
-                    # the eval trace, allocation failure, ...) is simply not
-                    # a measurement — selection proceeds over those that ran
-                    continue
+                n_try = 0
+                while n_try <= retries:
+                    n_try += 1
+                    try:
+                        faults.check_measure_fault(name, op)
+                        entry[ck] = bench_fn(jax.jit(fn), a, b, reps, warmup)
+                        entry_tries[ck] = n_try
+                        break
+                    except (KeyboardInterrupt, SystemExit):
+                        raise  # user/runtime interrupts are never a retry
+                    except Exception:
+                        # a pair that cannot run here (kernel unsupported
+                        # under the eval trace, allocation failure, ...):
+                        # back off and retry a bounded number of times; a
+                        # persistent failure is simply not a measurement —
+                        # selection proceeds over those that ran
+                        if n_try <= retries:
+                            time.sleep(retry_backoff_s * (2 ** (n_try - 1)))
             if entry:
                 times[name] = entry
+                if attempts is not None:
+                    attempts[name] = entry_tries
     return times
 
 
@@ -594,6 +716,8 @@ def measure_transpose_configs(
                     jax.block_until_ready(fn(b))
                     ts.append(time.perf_counter() - t0)
                 times[ck] = float(statistics.median(ts))
+            except (KeyboardInterrupt, SystemExit):
+                raise  # user/runtime interrupts are never swallowed
             except Exception:
                 continue  # an unrunnable tile is simply not a measurement
     return times

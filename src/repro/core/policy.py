@@ -59,6 +59,7 @@ from typing import (
     runtime_checkable,
 )
 
+from . import faults
 from .candidates import (
     CANDIDATES,
     DEFAULT_BY_OP,
@@ -138,6 +139,18 @@ class PolicyBase:
         self.distributed = distributed
         self.mem_budget_frac = mem_budget_frac
         self.stats = SelectorStats()
+        self._q_epoch = faults.quarantine_epoch()
+
+    def _sync_quarantine(self, *memos: Dict) -> None:
+        """Drop memoised decisions when the quarantine ledger changed
+        since they were cached: a memo hit must never resurrect an arm
+        that has since been quarantined (or keep avoiding one that was
+        cleared).  One int compare when nothing changed."""
+        epoch = faults.quarantine_epoch()
+        if epoch != self._q_epoch:
+            self._q_epoch = epoch
+            for memo in memos:
+                memo.clear()
 
     def _admissible(self, cand: Candidate, key: OpKey, config=None) -> bool:
         return candidate_fits_memory(
@@ -328,6 +341,7 @@ class AnalyticPolicy(PolicyBase):
         from .simulate import simulate_time
 
         key = coerce_key(key)
+        self._sync_quarantine(self._cache)
         cache_key = (current_platform(), key)
         decision = self._cache.get(cache_key)
         if decision is None:
@@ -436,8 +450,10 @@ class AutotunePolicy(PolicyBase):
 
         super().__init__(hardware=hardware or host_spec(), **kw)
         if cache is None:
+            # recover=True: a corrupt/truncated cache file is moved aside
+            # and rebuilt empty — autotune re-measures instead of crashing
             cache = (
-                MeasurementCache.load(cache_path)
+                MeasurementCache.load(cache_path, recover=True)
                 if cache_path
                 else MeasurementCache()
             )
@@ -490,6 +506,7 @@ class AutotunePolicy(PolicyBase):
         from .measure import DTYPE_BY_DSIZE, measure_candidates
 
         key = coerce_key(key)
+        self._sync_quarantine(self._decisions)
         platform = current_platform()
         memo_key = (platform, key)
         hit = self._decisions.get(memo_key)
@@ -514,6 +531,7 @@ class AutotunePolicy(PolicyBase):
         elif cache_key not in self._unmeasurable and self._can_measure(
             dtype, 2.0 * key.g * key.m * key.n * key.k
         ):
+            attempts: Dict[str, Dict[str, int]] = {}
             times = measure_candidates(
                 key.m, key.n, key.k,
                 dtype=dtype,
@@ -527,9 +545,10 @@ class AutotunePolicy(PolicyBase):
                 reps=self.reps,
                 tune=self.tune,
                 max_tile_configs=self.max_tile_configs,
+                attempts=attempts,
             )
             if times:
-                self.cache.put(cache_key, times)
+                self.cache.put(cache_key, times, attempts=attempts)
                 self.n_measured += 1
                 if self.cache.path:
                     self.cache.save()

@@ -35,6 +35,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from . import faults
 from .candidates import (
     BINARY_PAIRS_BY_OP,
     CANDIDATES,
@@ -194,6 +195,7 @@ class MTNNSelector:
         # keyed by platform too: admissibility depends on jax.default_backend(),
         # so a decision cached under one backend must not replay on another
         self._cache: Dict[Tuple[str, OpKey], str] = {}
+        self._q_epoch = faults.quarantine_epoch()
 
     @property
     def binary_pair(self) -> Tuple[str, str]:
@@ -288,6 +290,12 @@ class MTNNSelector:
         """Candidate name for an ``OpKey``.  O(1) features,
         O(trees*depth) walk."""
         key = coerce_key(key)
+        # memoised decisions must not outlive a quarantine-ledger change
+        # (same epoch dance as the policy zoo's memos)
+        epoch = faults.quarantine_epoch()
+        if epoch != self._q_epoch:
+            self._q_epoch = epoch
+            self._cache.clear()
         cache_key = (current_platform(), key)
         hit = self._cache.get(cache_key)
         if hit is not None:
@@ -336,6 +344,11 @@ class MTNNSelector:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
+        """Write the artifact atomically (unique tmp + rename): a crash
+        mid-write leaves the previous artifact intact, never a truncated
+        JSON that would poison the next load."""
+        import tempfile
+
         parent = os.path.dirname(path)
         if parent:  # bare filenames have no directory to create
             os.makedirs(parent, exist_ok=True)
@@ -358,23 +371,58 @@ class MTNNSelector:
                 for op, table in self.tile_tables.items()
             },
         }
-        with open(path, "w") as fh:
-            json.dump(payload, fh)
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(path) + ".", dir=parent or "."
+        )
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(payload, fh)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @staticmethod
     def load(
         path: str,
         hardware: Optional[HardwareSpec] = None,
         distributed: bool = False,
+        recover: bool = False,
     ) -> "MTNNSelector":
-        with open(path) as fh:
-            payload = json.load(fh)
-        payload = _migrate_payload(payload)
-        model_d = payload["model"]
-        if model_d.get("kind") == "kway":
-            model = KWayModel.from_dict(model_d)
-        else:
-            model = GBDTClassifier.from_dict(model_d)
+        """Load an artifact.  Strict by default: corrupt/truncated JSON or
+        an unsupported schema raises.  ``recover=True`` is the production
+        posture (``ModelPolicy`` via ``policy_from_spec`` uses it): an
+        unreadable artifact is moved aside to ``<path>.corrupt`` with a
+        warning and a freshly trained analytic-dataset selector is
+        returned, so serving never dies on a bad file."""
+        try:
+            with open(path, "rb") as fh:
+                raw = faults.corrupt_on_read("artifact", fh.read())
+            payload = json.loads(raw.decode("utf-8"))
+            if not isinstance(payload, dict):
+                raise ValueError(
+                    f"selector artifact {path!r} is not a JSON object"
+                )
+            payload = _migrate_payload(payload)
+            model_d = payload["model"]
+            if model_d.get("kind") == "kway":
+                model = KWayModel.from_dict(model_d)
+            else:
+                model = GBDTClassifier.from_dict(model_d)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except FileNotFoundError:
+            raise  # a missing file is a caller error, not corruption
+        except Exception as e:
+            if not recover:
+                raise
+            _move_aside(path, e)
+            return _fresh_fallback_selector(
+                hardware=hardware, distributed=distributed
+            )
         hw = hardware or SIMULATED_CHIPS.get(payload.get("hardware", ""), TPU_V5E)
         # tolerate hand-authored v3 payloads omitting the field: the
         # standard per-op pairs are the documented default
@@ -391,6 +439,43 @@ class MTNNSelector:
             distributed=distributed,
             tile_tables=payload.get("tile_tables", {}),
         )
+
+
+def _move_aside(path: str, reason: BaseException) -> None:
+    """Quarantine a corrupt artifact file as ``<path>.corrupt`` (warns; a
+    failure to rename is itself only warned — recovery must not raise)."""
+    import warnings
+
+    corrupt = path + ".corrupt"
+    try:
+        os.replace(path, corrupt)
+        moved = f"moved aside to {corrupt!r}"
+    except OSError as e:
+        moved = f"could not be moved aside ({e})"
+    warnings.warn(
+        f"selector artifact {path!r} is unreadable "
+        f"({type(reason).__name__}: {reason}); {moved} — recovering with a "
+        "freshly trained fallback selector",
+        UserWarning,
+        stacklevel=3,
+    )
+
+
+def _fresh_fallback_selector(
+    hardware: Optional[HardwareSpec] = None, distributed: bool = False
+) -> "MTNNSelector":
+    """Train a small selector on the analytic dataset — the same fallback
+    ``_builtin_selector`` uses when no artifact ships.  A standalone
+    helper (not ``default_selector()``) so corruption recovery of the
+    *default* artifact cannot recurse through the lru-cached loader."""
+    from .dataset import collect_analytic
+    from .train_model import train_paper_model
+
+    ds = collect_analytic(lo=7, hi=13)
+    clf, _ = train_paper_model(ds)
+    return MTNNSelector(
+        clf, hardware=hardware, distributed=distributed
+    )
 
 
 def _migrate_payload(payload: Dict) -> Dict:
@@ -480,14 +565,14 @@ def set_default_selector(sel: Optional[MTNNSelector]) -> None:
 @functools.lru_cache(maxsize=1)
 def _builtin_selector() -> MTNNSelector:
     if os.path.exists(DEFAULT_ARTIFACT):
-        return MTNNSelector.load(DEFAULT_ARTIFACT, distributed=True)
+        # recover=True: a corrupted shipped artifact degrades to the
+        # trained-on-the-spot fallback below instead of poisoning every
+        # dispatch in the process
+        return MTNNSelector.load(
+            DEFAULT_ARTIFACT, distributed=True, recover=True
+        )
     # fall back: train a small model on the analytic dataset right here.
-    from .dataset import collect_analytic
-    from .train_model import train_paper_model
-
-    ds = collect_analytic(lo=7, hi=13)
-    clf, _ = train_paper_model(ds)
-    return MTNNSelector(clf, distributed=True)
+    return _fresh_fallback_selector(distributed=True)
 
 
 def default_selector() -> MTNNSelector:

@@ -28,8 +28,10 @@ from repro.core.engine import (
     POLICY_SPEC_HELP,
     add_policy_argument,
     dispatch_report,
+    health_report,
     policy_from_spec,
 )
+from repro.core.faults import add_chaos_argument, chaos_scope
 from repro.distributed import named, param_specs
 from repro.launch.common import add_mesh_argument, resolve_mesh_and_policy
 from repro.launch.steps import make_prefill_step, make_serve_step
@@ -53,6 +55,12 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="cache extent per slot (default: prompt-len + gen)")
     ap.add_argument("--budget-tokens", type=int, default=0,
                     help="max-tokens admission budget (default: slots * max-seq)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission queue bound (default: 8 * slots); "
+                         "submits beyond it are rejected")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds; overdue requests "
+                         "are evicted as DEADLINE_EXCEEDED")
     ap.add_argument("--class-policy", action="append", default=[],
                     metavar="CLS=SPEC",
                     help=f"per-class policy override, e.g. bulk=analytic; "
@@ -66,6 +74,7 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     add_mesh_argument(ap)
     add_policy_argument(ap)
+    add_chaos_argument(ap)
     return ap
 
 
@@ -91,7 +100,7 @@ def _class_policies(args, parser, distributed: bool):
 
 
 def _engine_main(args, parser):
-    from repro.serving import ServeEngine
+    from repro.serving import QueueFullError, ServeEngine
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh, _ = resolve_mesh_and_policy(args, parser)
@@ -106,6 +115,7 @@ def _engine_main(args, parser):
         cfg, params, n_slots=args.slots, max_seq=max_seq,
         policies=policies, mesh=mesh,
         budget_tokens=args.budget_tokens or None,
+        max_queue=args.max_queue or None,
     )
     t0 = time.perf_counter()
     warm = engine.warmup()
@@ -119,7 +129,13 @@ def _engine_main(args, parser):
     for i in range(args.requests):
         p_len = int(rng.randint(1, args.prompt_len + 1))
         prompt = rng.randint(0, cfg.vocab, (p_len,)).astype(np.int32)
-        engine.submit(prompt, max_new=args.gen, cls=classes[i % len(classes)])
+        try:
+            engine.submit(prompt, max_new=args.gen,
+                          cls=classes[i % len(classes)],
+                          deadline_s=args.deadline_s)
+        except QueueFullError:
+            print(f"[serve] request {i} rejected: admission queue full "
+                  f"(max_queue={engine.max_queue})")
     t0 = time.perf_counter()
     engine.run()
     t_run = time.perf_counter() - t0
@@ -136,9 +152,16 @@ def _engine_main(args, parser):
               f"max {max(lats) * 1e3:.2f} ms")
     misses = engine.cold_misses()
     print(f"[serve] post-warmup cold-miss measurements: {misses}")
+    health = engine.health()
+    print(f"[serve] health: finished={health.get('finished', 0)} "
+          f"deadline_exceeded={health.get('deadline_exceeded', 0)} "
+          f"evicted={health.get('evicted', 0)} "
+          f"crashed_steps={health['crashed_steps']} "
+          f"rejected_submits={health['rejected_submits']}")
     for cls, report in sorted(engine.class_reports().items()):
         print(f"[serve] class {cls!r}:")
         print(report)
+    print(health_report())
     return engine
 
 
@@ -196,15 +219,17 @@ def _legacy_main(args, parser):
     )
     print("[serve] sample generations:", gen[:2, :8].tolist())
     print(dispatch_report(policy))
+    print(health_report())
     return gen
 
 
 def main(argv=None):
     parser = _build_parser()
     args = parser.parse_args(argv)
-    if args.legacy:
-        return _legacy_main(args, parser)
-    return _engine_main(args, parser)
+    with chaos_scope(args.chaos):
+        if args.legacy:
+            return _legacy_main(args, parser)
+        return _engine_main(args, parser)
 
 
 if __name__ == "__main__":

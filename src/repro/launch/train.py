@@ -30,7 +30,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
-from repro.core.engine import add_policy_argument, dispatch_report
+from repro.core.engine import add_policy_argument, dispatch_report, health_report
+from repro.core.faults import add_chaos_argument, chaos_scope
 from repro.data import make_train_batch
 from repro.distributed import batch_specs, named
 from repro.launch.common import add_mesh_argument, resolve_mesh_and_policy
@@ -77,8 +78,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     add_mesh_argument(ap)
     add_policy_argument(ap)
+    add_chaos_argument(ap)
     args = ap.parse_args(argv)
+    with chaos_scope(args.chaos):
+        return _run(args, ap)
 
+
+def _run(args, ap):
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh, policy = resolve_mesh_and_policy(args, ap)
 
@@ -143,6 +149,7 @@ def main(argv=None):
     print(f"[train] done: {args.steps - start_step} steps, "
           f"median {statistics.median(times)*1e3:.0f} ms/step")
     print(dispatch_report(policy))
+    print(health_report())
     return state
 
 

@@ -3,13 +3,14 @@ decode-shape bucketing with autotune warmup, and per-request-class
 dispatch-policy scopes.  See ``engine.ServeEngine``."""
 
 from .buckets import BucketSpec, default_buckets
-from .engine import Request, RequestState, ServeEngine
+from .engine import QueueFullError, Request, RequestState, ServeEngine
 from .kv_cache import PagedKVCache
 
 __all__ = [
     "BucketSpec",
     "default_buckets",
     "PagedKVCache",
+    "QueueFullError",
     "Request",
     "RequestState",
     "ServeEngine",

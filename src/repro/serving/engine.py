@@ -7,10 +7,29 @@ machinery, replacing the fixed-batch prefill/decode demo.
 
 Lifecycle of a request (``Request``/``RequestState``):
 
-  QUEUED   submitted, waiting FCFS for a slot + admission budget
-  ACTIVE   admitted: prefilled into a ``PagedKVCache`` slot, decoding
-  FINISHED emitted ``max_new`` tokens (or hit the cache extent)
-  EVICTED  cancelled mid-stream; its slot is freed and reused
+  QUEUED            submitted, waiting FCFS for a slot + admission budget
+  ACTIVE            admitted: prefilled into a ``PagedKVCache`` slot, decoding
+  FINISHED          emitted ``max_new`` tokens (or hit the cache extent)
+  EVICTED           cancelled mid-stream (or its decode step crashed);
+                    its slot is freed and reused
+  DEADLINE_EXCEEDED its wall-clock deadline passed; evicted between
+                    decode steps (queued or active alike)
+
+Robustness (the fault-tolerance layer, ``core/faults.py``):
+
+  * **Deadlines** — ``submit(..., deadline_s=...)`` bounds a request's
+    wall-clock residency; ``step()`` expires overdue requests *before*
+    spending a decode step on them.
+  * **Backpressure** — the admission queue is bounded (``max_queue``);
+    ``submit`` raises ``QueueFullError`` instead of growing without
+    bound (callers shed load explicitly).
+  * **Crash containment** — a decode/prefill step that raises evicts
+    only the requests in that batch and counts a ``crashed_steps``;
+    the serve loop keeps going.  Candidate-level failures never get
+    this far: dispatch degrades down the fallback chain inside the
+    trace (``core/engine.run_decision``), so a fault-injected Pallas
+    kernel quarantines itself and the step completes on the XLA
+    reference — chaos-tested in ``tests/test_faults.py``.
 
 Between decode steps the scheduler **admits** queued requests (FCFS,
 gated by free slots and a max-tokens admission budget) and **evicts**
@@ -44,6 +63,7 @@ import contextlib
 import dataclasses
 import enum
 import time
+import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -58,7 +78,7 @@ from repro.models import lm
 from .buckets import BucketSpec, default_buckets
 from .kv_cache import PagedKVCache
 
-__all__ = ["Request", "RequestState", "ServeEngine"]
+__all__ = ["Request", "RequestState", "ServeEngine", "QueueFullError"]
 
 
 class RequestState(enum.Enum):
@@ -66,6 +86,20 @@ class RequestState(enum.Enum):
     ACTIVE = "active"
     FINISHED = "finished"
     EVICTED = "evicted"
+    DEADLINE_EXCEEDED = "deadline_exceeded"
+
+
+# states a request never leaves (slot released, out of queue)
+TERMINAL_STATES = (
+    RequestState.FINISHED,
+    RequestState.EVICTED,
+    RequestState.DEADLINE_EXCEEDED,
+)
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue at capacity — explicit backpressure; the caller
+    sheds or retries instead of the queue growing without bound."""
 
 
 @dataclasses.dataclass
@@ -76,6 +110,7 @@ class Request:
     tokens: np.ndarray  # (prompt_len,) int32 prompt
     max_new: int
     cls: str = "interactive"
+    deadline_s: Optional[float] = None  # wall-clock budget from submit
     # runtime state (engine-owned)
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
@@ -84,6 +119,13 @@ class Request:
     submit_step: int = -1
     admit_step: int = -1
     finish_step: int = -1
+    submit_time: float = 0.0  # monotonic wall clock at submit
+
+    def overdue(self, now: float) -> bool:
+        return (
+            self.deadline_s is not None
+            and now - self.submit_time >= self.deadline_s
+        )
 
     @property
     def prompt_len(self) -> int:
@@ -111,7 +153,11 @@ class ServeEngine:
     ``budget_tokens`` caps the sum of ``prompt_len + max_new`` over
     admitted requests (default: ``n_slots * max_seq``, i.e. cache-bound).
     Admission is strictly FCFS: the head of the queue blocks until it
-    fits (no starvation by skip-ahead).
+    fits (no starvation by skip-ahead).  ``max_queue`` bounds the waiting
+    queue (default ``8 * n_slots``); a full queue rejects ``submit`` with
+    ``QueueFullError``.  Per-request ``deadline_s`` budgets are enforced
+    between decode steps (``DEADLINE_EXCEEDED``); ``health()`` reports the
+    degradation counters.
     """
 
     def __init__(
@@ -124,6 +170,7 @@ class ServeEngine:
         policies: Optional[Dict[str, Optional[SelectionPolicy]]] = None,
         bucket_spec: Optional[BucketSpec] = None,
         budget_tokens: Optional[int] = None,
+        max_queue: Optional[int] = None,
         cache_dtype=jnp.bfloat16,
         mesh=None,
     ):
@@ -162,6 +209,14 @@ class ServeEngine:
         self.budget_tokens = (
             int(budget_tokens) if budget_tokens else n_slots * self.max_seq
         )
+        # bounded admission queue: default 8 waiting requests per slot —
+        # deep enough to keep slots fed, shallow enough that rejected
+        # traffic surfaces as backpressure instead of unbounded latency
+        self.max_queue = int(max_queue) if max_queue else 8 * n_slots
+        # graceful-degradation counters (health())
+        self.crashed_steps = 0
+        self.deadline_evictions = 0
+        self.rejected_submits = 0
         self.queue: deque = deque()
         self.requests: Dict[int, Request] = {}
         self.clock = 0  # engine iterations (the virtual timeline)
@@ -231,8 +286,20 @@ class ServeEngine:
         tokens,
         max_new: int,
         cls: str = "interactive",
+        deadline_s: Optional[float] = None,
     ) -> Request:
-        """Queue one request (FCFS).  Returns its ``Request`` handle."""
+        """Queue one request (FCFS).  Returns its ``Request`` handle.
+
+        ``deadline_s`` bounds its wall-clock residency from this moment;
+        an overdue request is evicted as ``DEADLINE_EXCEEDED`` between
+        decode steps.  Raises ``QueueFullError`` when the admission queue
+        is at ``max_queue`` — explicit backpressure."""
+        if len(self.queue) >= self.max_queue:
+            self.rejected_submits += 1
+            raise QueueFullError(
+                f"admission queue is full ({self.max_queue} waiting); "
+                "shed load or retry after the queue drains"
+            )
         if cls not in self.policies:
             raise KeyError(
                 f"unknown request class {cls!r}; engine classes: "
@@ -250,36 +317,55 @@ class ServeEngine:
             )
         if not self.exact_prefill:
             self.buckets.bucket_len(tokens.size)  # fail fast on oversize
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
         req = Request(
             rid=self._next_rid, tokens=tokens, max_new=int(max_new), cls=cls,
-            submit_step=self.clock,
+            deadline_s=deadline_s, submit_step=self.clock,
+            submit_time=time.monotonic(),
         )
         self._next_rid += 1
         self.requests[req.rid] = req
         self.queue.append(req)
         return req
 
+    def _release(self, req: Request, state: RequestState) -> None:
+        """Move a live request to a terminal state, returning its
+        resources: an ACTIVE request's slot + budget reservation, a
+        QUEUED one's queue position."""
+        if req.state is RequestState.ACTIVE:
+            self.kv.free(req.slot)
+            self._reserved -= req.reserve
+        elif req.state is RequestState.QUEUED:
+            self.queue.remove(req)
+        req.state = state
+        req.finish_step = self.clock
+
     def evict(self, rid: int) -> Request:
         """Cancel a request mid-stream.  An ACTIVE request's slot returns
         to the pool immediately (reused by the next admission); a QUEUED
         one just leaves the queue."""
         req = self.requests[rid]
-        if req.state in (RequestState.FINISHED, RequestState.EVICTED):
+        if req.state in TERMINAL_STATES:
             return req
-        if req.state is RequestState.ACTIVE:
-            self.kv.free(req.slot)
-            self._reserved -= req.reserve
-        else:
-            self.queue.remove(req)
-        req.state = RequestState.EVICTED
-        req.finish_step = self.clock
+        self._release(req, RequestState.EVICTED)
         return req
 
     def _finish(self, req: Request) -> None:
-        req.state = RequestState.FINISHED
-        req.finish_step = self.clock
-        self.kv.free(req.slot)
-        self._reserved -= req.reserve
+        self._release(req, RequestState.FINISHED)
+
+    def _expire_deadlines(self) -> List[Request]:
+        """Evict every live request past its wall-clock deadline — runs
+        between decode steps, so an overdue request costs at most one
+        step's latency past its budget, never a whole generation."""
+        now = time.monotonic()
+        expired = []
+        for req in self.requests.values():
+            if req.state not in TERMINAL_STATES and req.overdue(now):
+                self._release(req, RequestState.DEADLINE_EXCEEDED)
+                self.deadline_evictions += 1
+                expired.append(req)
+        return expired
 
     def _admit(self) -> List[Request]:
         """FCFS admission: pop the queue head while a slot is free and the
@@ -302,12 +388,27 @@ class ServeEngine:
             padded = np.zeros((1, Lb), np.int32)
             padded[0, :P] = req.tokens
             t0 = time.perf_counter()
-            with self._mesh_scope():
-                tok, cache = self._prefill_steps[req.cls](
-                    self.params, jnp.asarray(padded), jnp.int32(P)
+            try:
+                with self._mesh_scope():
+                    tok, cache = self._prefill_steps[req.cls](
+                        self.params, jnp.asarray(padded), jnp.int32(P)
+                    )
+                    self.kv.insert(cache, slot, P)
+                    tok = int(jax.block_until_ready(tok)[0])
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                # contain the blast radius: this request dies, the engine
+                # lives (candidate failures degrade inside the trace and
+                # never reach here — this catches whole-step failures)
+                self.crashed_steps += 1
+                self._release(req, RequestState.EVICTED)
+                warnings.warn(
+                    f"prefill for request {req.rid} (class {req.cls!r}) "
+                    f"crashed ({type(e).__name__}: {e}); request evicted",
+                    UserWarning,
                 )
-                self.kv.insert(cache, slot, P)
-                tok = int(jax.block_until_ready(tok)[0])
+                continue
             req.generated.append(tok)
             req.token_lat.append(time.perf_counter() - t0)
             admitted.append(req)
@@ -353,13 +454,31 @@ class ServeEngine:
     # -- the serve loop ------------------------------------------------------
 
     def step(self) -> int:
-        """One engine iteration: admit, then one decode step per class
-        with active requests.  Returns the number of tokens emitted."""
+        """One engine iteration: expire overdue deadlines, admit, then one
+        decode step per class with active requests.  Returns the number of
+        tokens emitted.  A class whose decode step raises loses only that
+        batch (evicted, ``crashed_steps`` counted); other classes and the
+        loop itself keep serving."""
         before = sum(len(r.generated) for r in self.requests.values())
+        self._expire_deadlines()
         self._admit()
         by_cls = self._active_by_class()
         for cls in sorted(by_cls):
-            self._decode_class(cls, by_cls[cls])
+            try:
+                self._decode_class(cls, by_cls[cls])
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                self.crashed_steps += 1
+                for req in by_cls[cls]:
+                    if req.state is RequestState.ACTIVE:
+                        self._release(req, RequestState.EVICTED)
+                warnings.warn(
+                    f"decode step for class {cls!r} crashed "
+                    f"({type(e).__name__}: {e}); {len(by_cls[cls])} "
+                    "request(s) evicted, engine continues",
+                    UserWarning,
+                )
         self.clock += 1
         return sum(len(r.generated) for r in self.requests.values()) - before
 
@@ -417,6 +536,19 @@ class ServeEngine:
             n = getattr(policy, "n_measured", 0)
             out[cls] = n - self._measured_at_warmup.get(cls, 0)
         return out
+
+    def health(self) -> Dict[str, int]:
+        """Graceful-degradation counters + terminal-state tallies — the
+        serve-side complement of ``core.engine.health_report()``."""
+        by_state: Dict[str, int] = {s.value: 0 for s in RequestState}
+        for req in self.requests.values():
+            by_state[req.state.value] += 1
+        return {
+            "crashed_steps": self.crashed_steps,
+            "deadline_evictions": self.deadline_evictions,
+            "rejected_submits": self.rejected_submits,
+            **by_state,
+        }
 
     def class_reports(self) -> Dict[str, str]:
         """One rendered ``dispatch_report`` per request class."""

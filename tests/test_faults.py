@@ -1,0 +1,620 @@
+"""Fault tolerance: the chaos harness (spec grammar, scoping, deterministic
+firing), the quarantine ledger and its policy integration, fallback-chain
+dispatch, artifact/cache corruption recovery, measurement retry, the RC106
+registry rule, and the serve loop staying correct under injected Pallas
+faults."""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.configs.arch import ArchConfig, BlockCfg
+from repro.core import faults
+from repro.core.candidates import DEFAULT_BY_OP, fallback_chain
+from repro.core.engine import DispatchError, health_report
+from repro.core.faults import (
+    FaultRule,
+    InjectedFault,
+    InjectedOOM,
+    InjectedTimeout,
+    inject_faults,
+    parse_chaos_spec,
+)
+from repro.core.measure import MeasurementCache, measure_candidates
+from repro.core.policy import (
+    AnalyticPolicy,
+    CascadePolicy,
+    Decision,
+    FixedPolicy,
+)
+from repro.core.selector import MTNNSelector
+from repro.models import lm
+from repro.serving import RequestState, ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _clean_ledger():
+    """The quarantine ledger is process-global by design (a failed kernel
+    stays barred across policies) — tests must not leak arms into each
+    other."""
+    faults.clear_quarantine()
+    yield
+    faults.clear_quarantine()
+
+
+# -- chaos spec grammar -------------------------------------------------------
+
+
+class TestChaosSpec:
+    def test_single_clause(self):
+        (rule,) = parse_chaos_spec("raise:PALLAS_*")
+        assert rule.mode == "raise"
+        assert rule.target == "PALLAS_*" and rule.op == "*"
+        assert rule.p == 1.0 and rule.times is None and rule.after == 0
+
+    def test_op_qualified_target(self):
+        (rule,) = parse_chaos_spec("raise:PALLAS_BNT.BNT")
+        assert rule.target == "PALLAS_BNT" and rule.op == "BNT"
+        assert rule.matches("PALLAS_BNT", "BNT")
+        assert not rule.matches("PALLAS_BNT", "BNN")
+
+    def test_plane_targets_and_options(self):
+        rules = parse_chaos_spec(
+            "corrupt:cache;delay:XLA_NT:s=0.01;"
+            "raise:measure:cand=PALLAS_*:times=2:after=1:seed=3"
+        )
+        corrupt, delay, meas = rules
+        assert corrupt.is_plane and corrupt.target == "cache"
+        assert delay.seconds == 0.01
+        assert meas.target == "measure" and meas.cand == "PALLAS_*"
+        assert (meas.times, meas.after, meas.seed) == (2, 1, 3)
+
+    @pytest.mark.parametrize(
+        "spec",
+        [
+            "",
+            "raise",
+            "raise:",
+            ":PALLAS_NT",
+            "bogus:XLA_NT",
+            "raise:XLA_NT:p=notafloat",
+            "raise:XLA_NT:frobnicate=1",
+            "raise:XLA_NT:times",
+            "raise:.NT",
+        ],
+    )
+    def test_malformed_specs_raise_with_grammar(self, spec):
+        with pytest.raises(ValueError, match="chaos"):
+            parse_chaos_spec(spec)
+
+    def test_probability_bounds_validated(self):
+        with pytest.raises(ValueError, match="outside"):
+            parse_chaos_spec("raise:XLA_NT:p=1.5")
+
+    def test_times_and_after_are_deterministic(self):
+        (rule,) = parse_chaos_spec("raise:XLA_NT:times=2:after=1")
+        fired = [rule.should_fire() for _ in range(5)]
+        assert fired == [False, True, True, False, False]
+
+    def test_seeded_probability_is_reproducible(self):
+        draws = []
+        for _ in range(2):
+            (rule,) = parse_chaos_spec("raise:XLA_NT:p=0.5:seed=7")
+            draws.append([rule.should_fire() for _ in range(20)])
+        assert draws[0] == draws[1]
+        assert any(draws[0]) and not all(draws[0])
+
+
+# -- fault scoping ------------------------------------------------------------
+
+
+class TestInjectFaults:
+    def test_no_faults_outside_scope(self):
+        faults.check_candidate_fault("PALLAS_NT", "NT")  # no-op
+
+    def test_raise_inside_scope_only(self):
+        with inject_faults("raise:PALLAS_NT"):
+            with pytest.raises(InjectedFault):
+                faults.check_candidate_fault("PALLAS_NT", "NT")
+            faults.check_candidate_fault("XLA_NT", "NT")  # glob excludes
+        faults.check_candidate_fault("PALLAS_NT", "NT")  # scope exited
+
+    def test_oom_and_timeout_modes(self):
+        with inject_faults("oom:A;timeout:B"):
+            with pytest.raises(InjectedOOM):
+                faults.check_candidate_fault("A", "NT")
+            with pytest.raises(InjectedTimeout):
+                faults.check_candidate_fault("B", "NT")
+
+    def test_nested_scopes_compose(self):
+        with inject_faults("raise:A"):
+            with inject_faults("raise:B"):
+                assert len(faults.active_faults()) == 2
+                for name in ("A", "B"):
+                    with pytest.raises(InjectedFault):
+                        faults.check_candidate_fault(name, "NT")
+            assert len(faults.active_faults()) == 1
+            faults.check_candidate_fault("B", "NT")
+
+    def test_delay_sleeps(self):
+        with inject_faults("delay:SLOW:s=0.02"):
+            t0 = time.perf_counter()
+            faults.check_candidate_fault("SLOW", "NT")
+            assert time.perf_counter() - t0 >= 0.015
+
+    def test_corrupt_on_read_scoped(self):
+        data = b'{"schema_version": 4, "entries": {}}'
+        assert faults.corrupt_on_read("cache", data) == data
+        with inject_faults("corrupt:cache"):
+            mangled = faults.corrupt_on_read("cache", data)
+            assert mangled != data and len(mangled) < len(data)
+            with pytest.raises(ValueError):
+                json.loads(mangled.decode("utf-8", errors="replace"))
+            # the other plane is untouched
+            assert faults.corrupt_on_read("artifact", data) == data
+
+    def test_accepts_rule_objects(self):
+        rule = FaultRule(mode="raise", target="X")
+        with inject_faults(rule):
+            with pytest.raises(InjectedFault):
+                faults.check_candidate_fault("X", "NN")
+        with inject_faults([rule]):
+            assert faults.active_faults() == (rule,)
+
+
+# -- quarantine ledger --------------------------------------------------------
+
+
+class TestQuarantine:
+    def test_default_config_entry_bars_all_tiles(self):
+        faults.quarantine("PALLAS_NT", "NT", None, RuntimeError("boom"))
+        assert faults.is_quarantined("PALLAS_NT", "NT")
+        assert faults.is_quarantined("PALLAS_NT", "NT", (128, 128, 128))
+        assert not faults.is_quarantined("PALLAS_NT", "NN")
+        assert not faults.is_quarantined("XLA_NT", "NT")
+
+    def test_explicit_tile_entry_bars_only_that_tile(self):
+        faults.quarantine("PALLAS_NT", "NT", (128, 128, 128), ValueError("x"))
+        assert faults.is_quarantined("PALLAS_NT", "NT", (128, 128, 128))
+        assert not faults.is_quarantined("PALLAS_NT", "NT")
+        assert not faults.is_quarantined("PALLAS_NT", "NT", (256, 256, 256))
+
+    def test_epoch_bumps_on_new_entry_and_clear(self):
+        e0 = faults.quarantine_epoch()
+        faults.quarantine("A", "NT", None, RuntimeError("x"))
+        e1 = faults.quarantine_epoch()
+        assert e1 > e0
+        faults.quarantine("A", "NT", None, RuntimeError("x"))  # repeat
+        assert faults.quarantine_epoch() == e1  # same arm: count, no bump
+        faults.clear_quarantine()
+        assert faults.quarantine_epoch() > e1
+        assert not faults.quarantine_entries()
+
+    def test_repeat_failures_counted(self):
+        faults.quarantine("A", "NT", None, RuntimeError("first"))
+        faults.quarantine("A", "NT", None, RuntimeError("second"))
+        (entry,) = faults.quarantine_entries()
+        assert entry.count == 2
+        assert "first" in entry.error  # the original failure is kept
+
+    def test_quarantine_feeds_cascade_admissible_set(self):
+        policy = CascadePolicy(["PALLAS_TNN_FUSED", "XLA_NT"])
+        key = core.OpKey("NT", 128, 128, 128)
+        assert policy.select(key).name == "PALLAS_TNN_FUSED"
+        faults.quarantine("PALLAS_TNN_FUSED", "NT", None, RuntimeError("x"))
+        assert policy.select(key).name == "XLA_NT"
+
+    def test_analytic_policy_memo_invalidated_by_epoch(self):
+        policy = AnalyticPolicy()
+        key = core.OpKey("NT", 512, 512, 512)
+        first = policy.select(key).name
+        assert policy.select(key).name == first  # memo hit
+        faults.quarantine(first, "NT", None, RuntimeError("x"))
+        assert policy.select(key).name != first
+        faults.clear_quarantine()
+        assert policy.select(key).name == first  # re-admitted
+
+
+# -- fallback-chain dispatch --------------------------------------------------
+
+
+class TestFallbackChain:
+    def test_chain_terminates_at_default(self):
+        for op, default in DEFAULT_BY_OP.items():
+            assert fallback_chain(op)[-1] == default
+            assert fallback_chain(op, default) == (default,)
+
+    def test_chain_includes_binary_partner(self):
+        chain = fallback_chain("NN", "PALLAS_NN")
+        assert chain == ("PALLAS_NN", "XLA_NN")
+        chain = fallback_chain("NT", "XLA_TNN")
+        assert chain == ("XLA_TNN", "XLA_NT")
+
+    def test_unknown_op_rejected(self):
+        with pytest.raises(ValueError):
+            fallback_chain("XX")
+
+
+class TestEngineDegradation:
+    def _operands(self, m=64, n=64, k=64, seed=0):
+        rng = np.random.RandomState(seed)
+        a = jnp.asarray(rng.randn(m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(n, k), jnp.float32)
+        return a, b
+
+    def test_faulted_candidate_falls_back_to_default(self):
+        a, b = self._operands()
+        expect = np.asarray(a) @ np.asarray(b).T
+        with core.use_policy(FixedPolicy("PALLAS_TNN_FUSED")):
+            with inject_faults("raise:PALLAS_TNN_FUSED.NT"):
+                with pytest.warns(UserWarning, match="quarantined"):
+                    out = core.dispatch("NT", a, b)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-2)
+        assert faults.is_quarantined("PALLAS_TNN_FUSED", "NT")
+        counts = faults.fallback_counts()
+        assert counts.get(("NT", "PALLAS_TNN_FUSED", "XLA_NT"), 0) >= 1
+
+    def test_quarantined_arm_skipped_without_injection(self):
+        """Once quarantined, the arm is routed around even with no fault
+        armed — and still computes the right answer."""
+        a, b = self._operands(seed=1)
+        expect = np.asarray(a) @ np.asarray(b).T
+        faults.quarantine("PALLAS_TNN_FUSED", "NT", None, RuntimeError("x"))
+        with core.use_policy(FixedPolicy("PALLAS_TNN_FUSED")):
+            out = core.dispatch("NT", a, b)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-2)
+        (entry,) = faults.quarantine_entries()
+        assert entry.count == 1  # skipped, not re-attempted (no new failure)
+
+    def test_tile_failure_degrades_to_default_tiling(self):
+        """An explicit-tile failure sheds the tile before the algorithm:
+        the same candidate re-runs at its default tiling."""
+        a, b = self._operands(m=128, n=128, k=128, seed=2)
+        expect = np.asarray(a) @ np.asarray(b).T
+        cand = core.get_candidate("PALLAS_TNN_FUSED")
+        cfg = cand.config_space(128, 128, 128, dsize=4)[0]
+        key = core.OpKey("NT", 128, 128, 128)
+        from repro.core.engine import run_decision
+
+        with inject_faults("raise:PALLAS_TNN_FUSED.NT:times=1"):
+            with pytest.warns(UserWarning, match="quarantined"):
+                out = run_decision(key, Decision("PALLAS_TNN_FUSED", cfg), a, b)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-2)
+        (entry,) = faults.quarantine_entries()
+        assert entry.config_key is not None  # only the tile is barred
+        assert not faults.is_quarantined("PALLAS_TNN_FUSED", "NT")
+
+    def test_whole_chain_faulted_raises_dispatch_error(self):
+        a, b = self._operands(seed=3)
+        with core.use_policy(FixedPolicy("XLA_NT")):
+            with inject_faults("raise:*.NT"):
+                with pytest.raises(DispatchError):
+                    with pytest.warns(UserWarning):
+                        core.dispatch("NT", a, b)
+
+    def test_terminal_arm_attempted_even_when_quarantined(self):
+        """A transient failure of the XLA default must not deadlock
+        dispatch: the terminal arm is always attempted."""
+        a, b = self._operands(seed=4)
+        expect = np.asarray(a) @ np.asarray(b).T
+        faults.quarantine("XLA_NT", "NT", None, RuntimeError("transient"))
+        with core.use_policy(FixedPolicy("XLA_NT")):
+            out = core.dispatch("NT", a, b)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-2)
+
+    def test_health_report_renders_rules_and_ledger(self):
+        faults.quarantine("PALLAS_NT", "NT", None, RuntimeError("boom"))
+        faults.record_fallback("NT", "PALLAS_NT", "XLA_NT")
+        with inject_faults("raise:PALLAS_*"):
+            text = health_report()
+        assert "1 armed rule" in text
+        assert "PALLAS_NT" in text and "boom" in text
+        assert "PALLAS_NT -> XLA_NT x1" in text
+
+    def test_dispatch_report_mentions_quarantine(self):
+        faults.quarantine("PALLAS_NT", "NT", None, RuntimeError("boom"))
+        text = core.dispatch_report(FixedPolicy("XLA_NT"))
+        assert "quarantined arms: 1" in text
+
+
+# -- cache / artifact corruption recovery -------------------------------------
+
+
+def _seed_cache(path):
+    cache = MeasurementCache(path)
+    key = ("cpu", "host_cpu", "float32", "NT", 1, 64, 64, 64)
+    cache.put(key, {"XLA_NT": {"default": 1e-5}},
+              attempts={"XLA_NT": {"default": 2}})
+    cache.save()
+    return key
+
+
+class TestCacheRecovery:
+    def test_truncated_json_strict_raises(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        _seed_cache(p)
+        with open(p, "r+b") as fh:
+            fh.truncate(os.path.getsize(p) // 2)
+        with pytest.raises(ValueError):
+            MeasurementCache.load(p)
+
+    def test_truncated_json_recovers_empty_and_moves_aside(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        _seed_cache(p)
+        with open(p, "r+b") as fh:
+            fh.truncate(os.path.getsize(p) // 2)
+        with pytest.warns(UserWarning, match="moved aside"):
+            cache = MeasurementCache.load(p, recover=True)
+        assert len(cache) == 0
+        assert os.path.exists(p + ".corrupt")
+        assert not os.path.exists(p)
+        cache.save()  # the rebuilt cache persists to the original path
+        assert len(MeasurementCache.load(p)) == 0
+
+    def test_future_schema_recovers(self, tmp_path):
+        p = str(tmp_path / "future.json")
+        with open(p, "w") as fh:
+            json.dump({"schema_version": 99, "entries": {}}, fh)
+        with pytest.raises(ValueError, match="newer than supported"):
+            MeasurementCache.load(p)
+        with pytest.warns(UserWarning, match="moved aside"):
+            cache = MeasurementCache.load(p, recover=True)
+        assert len(cache) == 0 and os.path.exists(p + ".corrupt")
+
+    def test_rotten_entry_skipped_intact_entries_survive(self, tmp_path):
+        """Per-entry damage must not cost the whole cache: the bad record
+        is dropped (with a warning), the good ones answer."""
+        p = str(tmp_path / "cache.json")
+        key = _seed_cache(p)
+        with open(p) as fh:
+            payload = json.load(fh)
+        payload["entries"]["not|a|valid|key"] = {"XLA_NT": {"default": 1.0}}
+        with open(p, "w") as fh:
+            json.dump(payload, fh)
+        with pytest.raises(ValueError):
+            MeasurementCache.load(p)  # strict: any rot raises
+        with pytest.warns(UserWarning, match="skipped"):
+            cache = MeasurementCache.load(p, recover=True)
+        assert cache.get(key) == {"XLA_NT": {"default": 1e-5}}
+        assert cache.get_attempts(key) == {"XLA_NT": {"default": 2}}
+        assert os.path.exists(p)  # partial rot: file stays in place
+
+    def test_mid_write_crash_leaves_previous_cache_intact(
+        self, tmp_path, monkeypatch
+    ):
+        """Atomic temp+rename: a crash during save never truncates the
+        published file, and the stray temp does not shadow it."""
+        p = str(tmp_path / "cache.json")
+        key = _seed_cache(p)
+        cache = MeasurementCache.load(p)
+        cache.put(("cpu", "host_cpu", "float32", "NN", 1, 8, 8, 8),
+                  {"XLA_NN": {"default": 2e-5}})
+        real_replace = os.replace
+        calls = {"n": 0}
+
+        def crashing_replace(src, dst):
+            if dst == p:
+                calls["n"] += 1
+                raise OSError("simulated crash mid-publish")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(os, "replace", crashing_replace)
+        with pytest.raises(OSError, match="mid-publish"):
+            cache.save()
+        monkeypatch.undo()
+        assert calls["n"] == 1
+        survivor = MeasurementCache.load(p)
+        assert survivor.get(key) == {"XLA_NT": {"default": 1e-5}}
+
+    def test_corrupt_plane_injection_triggers_recovery(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        _seed_cache(p)
+        with inject_faults("corrupt:cache"):
+            with pytest.warns(UserWarning, match="moved aside"):
+                cache = MeasurementCache.load(p, recover=True)
+        assert len(cache) == 0 and os.path.exists(p + ".corrupt")
+
+
+class TestSelectorArtifactRecovery:
+    @pytest.fixture(scope="class")
+    def small_selector(self):
+        ds = core.collect_analytic(lo=7, hi=10)
+        clf, _ = core.train_paper_model(ds)
+        return MTNNSelector(clf)
+
+    def test_save_is_atomic_under_write_failure(
+        self, tmp_path, small_selector, monkeypatch
+    ):
+        p = str(tmp_path / "sel.json")
+        small_selector.save(p)
+        before = open(p).read()
+        real_replace = os.replace
+
+        def crashing_replace(src, dst):
+            if dst == p:
+                raise OSError("simulated crash mid-publish")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(os, "replace", crashing_replace)
+        with pytest.raises(OSError, match="mid-publish"):
+            small_selector.save(p)
+        monkeypatch.undo()
+        assert open(p).read() == before  # previous artifact untouched
+        assert [f for f in os.listdir(tmp_path) if f != "sel.json"] == []
+
+    def test_corrupt_artifact_strict_raises(self, tmp_path, small_selector):
+        p = str(tmp_path / "sel.json")
+        small_selector.save(p)
+        with open(p, "w") as fh:
+            fh.write('{"schema_version":')  # truncated mid-write
+        with pytest.raises(ValueError):
+            MTNNSelector.load(p)
+
+    def test_corrupt_artifact_recovers_with_fallback_selector(
+        self, tmp_path, small_selector
+    ):
+        p = str(tmp_path / "sel.json")
+        small_selector.save(p)
+        with open(p, "w") as fh:
+            fh.write("not json at all")
+        with pytest.warns(UserWarning, match="fallback selector"):
+            sel = MTNNSelector.load(p, recover=True)
+        assert os.path.exists(p + ".corrupt")
+        # the fallback is a working selector, not a stub
+        name = sel.select(core.OpKey("NT", 256, 256, 256))
+        assert name in core.CANDIDATES
+
+
+# -- measurement retry --------------------------------------------------------
+
+
+class TestMeasureRetry:
+    def test_transient_fault_retried_and_attempts_recorded(self):
+        attempts = {}
+        with inject_faults("raise:measure:cand=XLA_NT:times=1"):
+            times = measure_candidates(
+                32, 32, 32, candidates=["XLA_NT"], reps=1, warmup=0,
+                retries=2, retry_backoff_s=0.001, attempts=attempts,
+            )
+        assert "XLA_NT" in times  # the retry succeeded
+        assert attempts["XLA_NT"]["default"] == 2  # and was counted
+
+    def test_persistent_fault_drops_candidate_not_run(self):
+        attempts = {}
+        with inject_faults("raise:measure:cand=XLA_NT"):
+            times = measure_candidates(
+                32, 32, 32, candidates=["XLA_NT", "XLA_TNN"], reps=1,
+                warmup=0, retries=1, retry_backoff_s=0.001, attempts=attempts,
+            )
+        assert "XLA_NT" not in times  # never measured, selection skips it
+        assert "XLA_TNN" in times
+        assert "XLA_NT" not in attempts
+
+    def test_keyboard_interrupt_never_swallowed(self, monkeypatch):
+        from repro.core import measure as measure_mod
+
+        def interrupting_bench(*a, **kw):
+            raise KeyboardInterrupt
+
+        monkeypatch.setattr(measure_mod, "bench_fn", interrupting_bench)
+        with pytest.raises(KeyboardInterrupt):
+            measure_candidates(32, 32, 32, candidates=["XLA_NT"],
+                               reps=1, retries=3)
+
+    def test_attempts_roundtrip_through_cache_file(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        key = ("cpu", "host_cpu", "float32", "NT", 1, 32, 32, 32)
+        cache = MeasurementCache(p)
+        cache.put(key, {"XLA_NT": {"default": 1e-5}},
+                  attempts={"XLA_NT": {"default": 3}})
+        cache.save()
+        loaded = MeasurementCache.load(p)
+        assert loaded.get_attempts(key) == {"XLA_NT": {"default": 3}}
+        assert loaded.get_attempts(
+            ("cpu", "host_cpu", "float32", "NT", 1, 8, 8, 8)
+        ) is None
+
+
+# -- RC106: registry fallback-chain lint --------------------------------------
+
+
+class TestRC106:
+    def test_registry_chains_are_clean(self):
+        from repro.analysis import registry_lint
+
+        rc106 = [f for f in registry_lint.run() if f.rule == "RC106"]
+        assert rc106 == []
+
+    def test_unregistered_default_is_flagged(self, monkeypatch):
+        from repro.analysis import registry_lint
+
+        monkeypatch.setitem(DEFAULT_BY_OP, "NT", "NO_SUCH_CANDIDATE")
+        rc106 = [f for f in registry_lint.run() if f.rule == "RC106"]
+        assert rc106, "seeded violation must be caught"
+        assert any("not registered" in f.message for f in rc106)
+
+    def test_rule_is_registered(self):
+        from repro.analysis.findings import RULES
+
+        assert "RC106" in RULES
+
+
+# -- serve loop under chaos ---------------------------------------------------
+
+TINY = ArchConfig(
+    name="tiny-faults",
+    family="dense",
+    d_model=32,
+    n_heads=2,
+    n_kv=2,
+    d_head=16,
+    d_ff=64,
+    vocab=64,
+    segments=((2, (BlockCfg("attn", "mlp"),)),),
+    param_dtype="float32",
+    compute_dtype="float32",
+    attn_chunk=16,
+    remat="none",
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return lm.init_lm(jax.random.PRNGKey(0), TINY)
+
+
+def reference_generate(cfg, params, prompt, max_new, max_seq=32):
+    logits, cache = lm.lm_prefill(
+        params, cfg, {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+        max_seq=max_seq, cache_dtype=jnp.float32,
+    )
+    toks = [int(jnp.argmax(logits[0, -1, : cfg.vocab]))]
+    for _ in range(max_new - 1):
+        step = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = lm.lm_decode(params, cfg, cache, {"tokens": step})
+        toks.append(int(jnp.argmax(logits[0, -1, : cfg.vocab])))
+    return toks
+
+
+class TestServeChaos:
+    def test_serve_completes_on_fallback_under_pallas_faults(
+        self, tiny_params
+    ):
+        """The chaos acceptance test: with every Pallas candidate fault-
+        injected to raise, a serve engine whose policies *select* Pallas
+        arms still finishes every request with token-exact output — the
+        batch never crashes, dispatch degrades inside the trace, and the
+        quarantine is visible afterwards."""
+        policies = {
+            "interactive": FixedPolicy(by_op={
+                "BNT": ("PALLAS_BNT", None), "BNN": ("PALLAS_BNN", None),
+            }),
+        }
+        engine = ServeEngine(
+            TINY, tiny_params, n_slots=2, max_seq=32,
+            policies=policies, cache_dtype=jnp.float32,
+        )
+        rng = np.random.RandomState(11)
+        prompts = [rng.randint(0, TINY.vocab, (n,)).astype(np.int32)
+                   for n in (4, 7)]
+        with inject_faults("raise:PALLAS_*"):
+            with pytest.warns(UserWarning, match="quarantined"):
+                reqs = [engine.submit(p, max_new=5) for p in prompts]
+                engine.run()
+        health = engine.health()
+        assert health["crashed_steps"] == 0
+        assert health["finished"] == len(prompts)
+        for req, prompt in zip(reqs, prompts):
+            assert req.state is RequestState.FINISHED
+            expect = reference_generate(TINY, tiny_params, prompt, 5)
+            assert req.generated == expect, f"rid={req.rid}"
+        quarantined = {(e.name, e.op) for e in faults.quarantine_entries()}
+        assert ("PALLAS_BNT", "BNT") in quarantined
+        counts = faults.fallback_counts()
+        assert counts.get(("BNT", "PALLAS_BNT", "XLA_BNT"), 0) >= 1

@@ -1,8 +1,11 @@
 """Continuous-batching serving engine: bucket math, paged KV slot
 lifecycle, admit/evict mid-stream with slot reuse, ragged-length decode
 equivalence against the unbatched reference, warmup covering every
-bucketed OpKey (zero post-warmup autotune measurements), and the shared
-launcher mesh-spec parsing."""
+bucketed OpKey (zero post-warmup autotune measurements), per-request
+deadlines + bounded-queue backpressure, and the shared launcher
+mesh-spec parsing."""
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +19,7 @@ from repro.models import lm
 from repro.serving import (
     BucketSpec,
     PagedKVCache,
+    QueueFullError,
     RequestState,
     ServeEngine,
     default_buckets,
@@ -286,6 +290,79 @@ class TestServeEngine:
         frames = TINY.replace(input_mode="frames")
         with pytest.raises(ValueError):
             ServeEngine(frames, tiny_params, n_slots=2, max_seq=16)
+
+
+# -- deadlines + backpressure (the fault-tolerance layer) ---------------------
+
+
+class TestDeadlinesAndBackpressure:
+    def test_queued_request_past_deadline_expires(self, tiny_params):
+        """A request whose deadline lapses while waiting in the queue is
+        evicted as DEADLINE_EXCEEDED before a slot is ever spent on it."""
+        engine = make_engine(tiny_params, n_slots=1)
+        r0 = engine.submit(mixed_prompts([4])[0], max_new=4)
+        r1 = engine.submit(mixed_prompts([4])[0], max_new=4, deadline_s=0.0)
+        engine.run()
+        assert r0.state is RequestState.FINISHED
+        assert r1.state is RequestState.DEADLINE_EXCEEDED
+        assert r1.slot is None and not engine.queue
+        assert engine.health()["deadline_evictions"] == 1
+        assert engine.health()["deadline_exceeded"] == 1
+
+    def test_active_request_past_deadline_evicted_midstream(self, tiny_params):
+        """An admitted request is expired between decode steps: it stops
+        mid-generation and its slot returns to the pool."""
+        engine = make_engine(tiny_params, n_slots=2)
+        req = engine.submit(mixed_prompts([4])[0], max_new=24, deadline_s=0.05)
+        engine.step()
+        assert req.state is RequestState.ACTIVE
+        time.sleep(0.06)
+        engine.step()
+        assert req.state is RequestState.DEADLINE_EXCEEDED
+        assert len(req.generated) < 24
+        assert engine.kv.n_free == 2  # slot released
+        engine.run()  # the drained engine is still healthy
+
+    def test_no_deadline_never_expires(self, tiny_params):
+        engine = make_engine(tiny_params)
+        req = engine.submit(mixed_prompts([4])[0], max_new=4)
+        assert not req.overdue(time.monotonic() + 1e6)
+        engine.run()
+        assert req.state is RequestState.FINISHED
+
+    def test_negative_deadline_rejected(self, tiny_params):
+        engine = make_engine(tiny_params)
+        with pytest.raises(ValueError, match="deadline_s"):
+            engine.submit(mixed_prompts([4])[0], max_new=4, deadline_s=-1.0)
+
+    def test_full_queue_rejects_submit(self, tiny_params):
+        engine = make_engine(tiny_params, n_slots=1, max_queue=2)
+        engine.submit(mixed_prompts([4])[0], max_new=2)
+        engine.submit(mixed_prompts([4])[0], max_new=2)
+        with pytest.raises(QueueFullError):
+            engine.submit(mixed_prompts([4])[0], max_new=2)
+        assert engine.health()["rejected_submits"] == 1
+        # draining the queue re-opens admission
+        engine.run()
+        r = engine.submit(mixed_prompts([4])[0], max_new=2)
+        engine.run()
+        assert r.state is RequestState.FINISHED
+
+    def test_default_queue_bound_scales_with_slots(self, tiny_params):
+        engine = make_engine(tiny_params, n_slots=4)
+        assert engine.max_queue == 32
+
+    def test_health_counts_terminal_states(self, tiny_params):
+        engine = make_engine(tiny_params, n_slots=2)
+        r0 = engine.submit(mixed_prompts([4])[0], max_new=4)
+        r1 = engine.submit(mixed_prompts([4])[0], max_new=4)
+        engine.step()
+        engine.evict(r1.rid)
+        engine.run()
+        health = engine.health()
+        assert health["finished"] == 1 and health["evicted"] == 1
+        assert health["crashed_steps"] == 0
+        assert r0.state is RequestState.FINISHED
 
 
 # -- launcher mesh-spec parsing (shared CLI setup) ----------------------------

@@ -13,7 +13,6 @@ import numpy as np
 
 from repro import core
 from repro.core import simulate
-from repro.core.hardware import TPU_V5E
 
 from .common import analytic_dataset, save_json, section
 

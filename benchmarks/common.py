@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -18,10 +18,23 @@ invariants statically, before a kernel ever runs:
     caches (rules AR2xx);
   * ``contracts``      — ``jax.eval_shape``-based output shape/dtype
     verification of every registered (candidate, op, config) and static
-    tile-config validation (rules KC3xx).
+    tile-config validation (rules KC301/KC302);
+  * ``coverage``       — symbolic evaluation of every Pallas
+    ``BlockSpec`` index map over the full grid, proving each output
+    block is written exactly once and operand accesses stay in the
+    padded extents, for every (candidate, op, tile) schedule declared
+    in ``kernels/gridspec.py`` (rules KC31x);
+  * ``numerics``       — bf16 jaxpr walk asserting f32 accumulation
+    discipline (``preferred_element_type``, f32 VMEM scratch, no
+    downcast before accumulation; rules NM401–NM403), plus the dynamic
+    poison-padding ``sanitize`` mode (NM404, ``lint --sanitize``);
+  * ``concurrency``    — AST checker for ``# guarded-by: <lock>``
+    annotations, ContextVar set/reset pairing, and thread/acquire
+    hygiene (rules CC5xx).
 
-``python -m repro.analysis.lint`` runs them all; findings carry
-file:line, severity and a rule id, and a committed baseline file
+``python -m repro.analysis.lint`` runs them all (AST passes overlap the
+tracing passes on worker threads, one shared parse per file); findings
+carry file:line, severity and a rule id, and a committed baseline file
 (``baseline.json``) suppresses known findings — each entry must carry a
 justification string, so every accepted bypass is a documented decision.
 """

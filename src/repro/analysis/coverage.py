@@ -1,0 +1,303 @@
+"""Index-map/coverage pass: symbolic proof of every Pallas schedule.
+
+For every registered (candidate, op) pair and every tile in {default +
+roofline shortlist}, fetch the candidate's declared ``KernelGridSpec``
+(the *same* object its ``pallas_call`` is built from — see
+``kernels/gridspec.py``) and evaluate its ``BlockSpec`` index maps over
+the full grid with plain Python ints.  This proves, per schedule:
+
+  KC310  every output block index in the cdiv grid is produced (no gaps)
+  KC311  no two grid points that differ on a *parallel* axis write the
+         same output block (no overlap: parallel semantics make that a
+         race, sequential revisits along the k axis are the accumulator
+         pattern and are fine)
+  KC312  every operand access stays inside the padded operand extent
+  KC313  the parallel grid extent equals the product of
+         cdiv(padded extent, block edge) over the output axes
+  KC314  index maps have the right arity and result rank
+  KC315  every tunable candidate has a registered grid spec at all
+
+This is the static complement of the tile-sweep's dynamic bit-exactness
+check: the sweep samples (shape, config) cells, this pass proves the
+schedule for every enumerable cell without running a kernel.
+
+Non-tunable (XLA-backed) candidates have no Pallas schedule; they are
+counted as trivially covered so the report can assert 100% pair
+coverage.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+__all__ = [
+    "CoverageReport",
+    "verify_spec",
+    "check_coverage",
+    "run",
+]
+
+# keep the symbolic evaluation honest-but-bounded; every real schedule in
+# this repo is a few hundred grid points at the lint shapes
+MAX_GRID_POINTS = 1_000_000
+
+
+@dataclass
+class CoverageReport:
+    findings: List[Finding] = field(default_factory=list)
+    # every registered (candidate, op) pair seen
+    pairs: List[Tuple[str, str]] = field(default_factory=list)
+    # (candidate, op) pairs whose schedules were symbolically verified
+    proven_pairs: List[Tuple[str, str]] = field(default_factory=list)
+    # (candidate, op, shape-key, config-key) cells checked
+    cells: int = 0
+
+
+def _check_map_shape(
+    bm, n_grid_axes: int, what: str
+) -> Tuple[Optional[Tuple[int, ...]], Optional[str]]:
+    """Probe an index map at the grid origin; KC314 detail on failure."""
+    try:
+        idx = bm.index_map(*([0] * n_grid_axes))
+    except TypeError as exc:
+        return None, f"{what} index map rejects {n_grid_axes} grid axes: {exc}"
+    if not isinstance(idx, (tuple, list)):
+        return None, f"{what} index map returned {type(idx).__name__}, not a tuple"
+    if len(idx) != len(bm.block):
+        return None, (
+            f"{what} index map returned rank {len(idx)} for a "
+            f"rank-{len(bm.block)} block"
+        )
+    if len(bm.block) != len(bm.extent):
+        return None, (
+            f"{what} block rank {len(bm.block)} != extent rank {len(bm.extent)}"
+        )
+    return tuple(idx), None
+
+
+def verify_spec(spec) -> List[Tuple[str, str]]:
+    """Symbolically verify one ``KernelGridSpec``.
+
+    Returns ``(rule, detail)`` tuples — at most one per rule, each with a
+    concrete witness (the first offending grid point / block index) so a
+    failure is reproducible by hand.
+    """
+    problems: List[Tuple[str, str]] = []
+    n_axes = len(spec.grid)
+
+    # KC314: arity/rank probes first — the other checks evaluate the maps
+    operands = [(f"operand[{i}]", s) for i, s in enumerate(spec.in_specs)]
+    operands.append(("output", spec.out_spec))
+    bad_maps = set()
+    for what, bm in operands:
+        _, err = _check_map_shape(bm, n_axes, what)
+        if err is not None:
+            problems.append(("KC314", err))
+            bad_maps.add(what)
+    if any(a < 0 or a >= n_axes for a in spec.sequential):
+        problems.append(
+            ("KC314", f"sequential axes {spec.sequential} outside grid rank {n_axes}")
+        )
+        return problems
+
+    total = 1
+    for e in spec.grid:
+        total *= max(int(e), 0)
+    if total == 0 or total > MAX_GRID_POINTS:
+        problems.append(
+            ("KC314", f"grid {spec.grid} has {total} points; cannot verify")
+        )
+        return problems
+
+    out = spec.out_spec
+    parallel_axes = [a for a in range(n_axes) if a not in spec.sequential]
+
+    # KC313: parallel grid extent vs cdiv(extent, block) over output axes
+    if "output" not in bad_maps:
+        expected_blocks = 1
+        for blk, ext in zip(out.block, out.extent):
+            expected_blocks *= -(-ext // blk)  # cdiv
+        n_parallel = 1
+        for a in parallel_axes:
+            n_parallel *= spec.grid[a]
+        if n_parallel != expected_blocks:
+            problems.append(
+                (
+                    "KC313",
+                    f"parallel grid extent {n_parallel} != "
+                    f"cdiv(out extent {out.extent}, block {out.block}) "
+                    f"= {expected_blocks} output blocks",
+                )
+            )
+
+    seen_oob = {what: False for what, _ in operands}
+    overlap_done = False
+    gap_possible = "output" not in bad_maps
+    # out block index -> parallel coords of the first writer
+    writers: dict = {}
+
+    for pt in itertools.product(*(range(e) for e in spec.grid)):
+        for what, bm in operands:
+            if what in bad_maps or seen_oob[what]:
+                continue
+            idx = bm.index_map(*pt)
+            for axis, (bi, blk, ext) in enumerate(
+                zip(idx, bm.block, bm.extent)
+            ):
+                start = int(bi) * blk
+                if start < 0 or start + blk > ext:
+                    problems.append(
+                        (
+                            "KC312",
+                            f"{what} map at grid point {pt} addresses "
+                            f"block {tuple(idx)} -> axis {axis} range "
+                            f"[{start}, {start + blk}) outside extent {ext}",
+                        )
+                    )
+                    seen_oob[what] = True
+                    break
+        if gap_possible and not overlap_done:
+            oidx = tuple(out.index_map(*pt))
+            pcoords = tuple(pt[a] for a in parallel_axes)
+            prev = writers.get(oidx)
+            if prev is None:
+                writers[oidx] = pcoords
+            elif prev != pcoords:
+                problems.append(
+                    (
+                        "KC311",
+                        f"output block {oidx} written by parallel grid "
+                        f"points {prev} and {pcoords}: racy double-write",
+                    )
+                )
+                overlap_done = True
+
+    # KC310: every cdiv block index must have a writer
+    if gap_possible:
+        block_counts = [-(-ext // blk) for blk, ext in zip(out.block, out.extent)]
+        for oidx in itertools.product(*(range(c) for c in block_counts)):
+            if oidx not in writers:
+                problems.append(
+                    (
+                        "KC310",
+                        f"output block {oidx} (of {tuple(block_counts)}) "
+                        "is never written: coverage gap",
+                    )
+                )
+                break
+
+    return problems
+
+
+def _lint_shapes():
+    # reuse the contract pass's ragged shape grid (aligned, unaligned,
+    # degenerate edges) so both semantic passes speak the same cells
+    from .contracts import SHAPE_GRID
+
+    return SHAPE_GRID
+
+
+def check_coverage(
+    shapes: Optional[Sequence[Tuple[int, int, int, int]]] = None,
+    repo_root: Optional[str] = None,
+    dsizes: Iterable[int] = (4, 2),
+) -> CoverageReport:
+    from repro.core.candidates import CANDIDATES
+    from repro.kernels.gridspec import GRID_SPEC_BUILDERS, candidate_grid_specs
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
+
+    from .contracts import _candidate_location
+
+    if shapes is None:
+        shapes = _lint_shapes()
+
+    report = CoverageReport()
+    for name, cand in sorted(CANDIDATES.items()):
+        path, line = _candidate_location(cand, repo_root)
+        for op in cand.ops:
+            report.pairs.append((name, op))
+            if not cand.tunable:
+                # XLA-backed: no Pallas schedule to verify — trivially
+                # covered (XLA owns its own tiling)
+                continue
+            if name not in GRID_SPEC_BUILDERS:
+                report.findings.append(
+                    Finding(
+                        rule="KC315",
+                        path=path,
+                        line=line,
+                        message=(
+                            f"tunable candidate {name} has no grid-spec "
+                            "builder in kernels/gridspec.py; its schedule "
+                            "cannot be verified"
+                        ),
+                        context=f"gridspec:{name}:{op}",
+                    )
+                )
+                continue
+            pair_clean = True
+            for m, n, k, g in shapes:
+                batched = op.startswith("B")
+                gg = g if batched else 1
+                configs = [None]
+                seen_keys = {DEFAULT_CONFIG_KEY}
+                for dsize in dsizes:
+                    for cfg in cand.config_space(m, n, k, dsize):
+                        ck = config_key(cfg)
+                        if ck not in seen_keys:
+                            seen_keys.add(ck)
+                            configs.append(tuple(cfg))
+                for cfg in configs:
+                    ck = DEFAULT_CONFIG_KEY if cfg is None else config_key(cfg)
+                    cell = f"{op}:{m}x{n}x{k}x{gg}:{ck}"
+                    report.cells += 1
+                    try:
+                        specs = candidate_grid_specs(
+                            name, op, m, n, k, g=gg, block=cfg
+                        )
+                    except Exception as exc:
+                        pair_clean = False
+                        report.findings.append(
+                            Finding(
+                                rule="KC314",
+                                path=path,
+                                line=line,
+                                message=(
+                                    f"{name} grid-spec builder failed at "
+                                    f"{cell}: {exc}"
+                                ),
+                                context=f"coverage:{name}:{cell}:builder",
+                            )
+                        )
+                        continue
+                    for spec in specs:
+                        for rule, detail in verify_spec(spec):
+                            pair_clean = False
+                            report.findings.append(
+                                Finding(
+                                    rule=rule,
+                                    path=path,
+                                    line=line,
+                                    message=(
+                                        f"{name} schedule {spec.name} at "
+                                        f"{cell}: {detail}"
+                                    ),
+                                    context=(
+                                        f"coverage:{name}:{cell}:"
+                                        f"{spec.name}:{rule}"
+                                    ),
+                                )
+                            )
+            if pair_clean:
+                report.proven_pairs.append((name, op))
+    return report
+
+
+def run(repo_root: Optional[str] = None, cache=None) -> List[Finding]:
+    """Lint-driver entry point (the AST cache is unused: this pass is
+    symbolic, not source-based)."""
+    return check_coverage(repo_root=repo_root).findings

@@ -161,18 +161,23 @@ class _BypassVisitor(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-def lint_file(path: str, relpath: Optional[str] = None) -> List[Finding]:
+def lint_file(
+    path: str, relpath: Optional[str] = None, cache=None
+) -> List[Finding]:
     """All dispatch-bypass findings in one python file."""
-    with open(path) as fh:
-        source = fh.read()
-    tree = ast.parse(source, filename=path)
+    if cache is not None:
+        _source, tree = cache.parse(path)
+    else:
+        with open(path) as fh:
+            source = fh.read()
+        tree = ast.parse(source, filename=path)
     visitor = _BypassVisitor((relpath or path).replace(os.sep, "/"))
     visitor.visit(tree)
     return visitor.findings
 
 
 def lint_paths(
-    roots: Iterable[str], repo_root: Optional[str] = None
+    roots: Iterable[str], repo_root: Optional[str] = None, cache=None
 ) -> List[Finding]:
     """Findings across every ``*.py`` under ``roots`` (files accepted
     too); paths in findings are relative to ``repo_root``."""
@@ -194,10 +199,12 @@ def lint_paths(
             )
         for fp in files:
             rel = os.path.relpath(fp, repo_root) if repo_root else fp
-            findings.extend(lint_file(fp, rel))
+            findings.extend(lint_file(fp, rel, cache))
     return findings
 
 
-def run(repo_root: str, roots: Sequence[str] = DEFAULT_ROOTS) -> List[Finding]:
+def run(
+    repo_root: str, roots: Sequence[str] = DEFAULT_ROOTS, cache=None
+) -> List[Finding]:
     """The pass entry point the lint CLI calls."""
-    return lint_paths(roots, repo_root=repo_root)
+    return lint_paths(roots, repo_root=repo_root, cache=cache)

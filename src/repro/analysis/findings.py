@@ -57,9 +57,36 @@ RULES: Dict[str, str] = {
     "KC301": "candidate produces wrong output shape/dtype under eval_shape",
     "KC302": "enumerated tile config fails static validation "
              "(MXU alignment / extent clamp / VMEM budget)",
+    # index-map/coverage pass (symbolic BlockSpec evaluation)
+    "KC310": "output blocks left unwritten: index maps never produce some "
+             "output block index (coverage gap)",
+    "KC311": "two parallel grid points write the same output block "
+             "(overlap: racy double-write under parallel semantics)",
+    "KC312": "operand index map addresses a block outside the padded "
+             "operand extent",
+    "KC313": "grid extent does not match cdiv(padded extent, block edge) "
+             "over the output axes",
+    "KC314": "index map malformed: wrong arity for the grid or wrong "
+             "result rank for the block",
+    "KC315": "tunable candidate has no registered grid spec, so its "
+             "schedule cannot be verified",
+    # numerics-accumulation pass
+    "NM401": "low-precision dot_general without "
+             "preferred_element_type=float32",
+    "NM402": "VMEM accumulator scratch is not float32",
+    "NM403": "value downcast below float32 before being accumulated",
+    "NM404": "poison-padding sanitizer: padding leaked into the logical "
+             "output region (or output deviates from the oracle)",
+    # concurrency/lock-discipline pass
+    "CC501": "guarded-by attribute mutated outside a 'with <lock>' block",
+    "CC502": "guarded-by annotation names a lock that is never defined",
+    "CC503": "ContextVar.set without a matching reset in a finally block",
+    "CC504": "thread spawned in a module that never joins any thread",
+    "CC505": "bare lock.acquire() call; use the 'with lock:' form",
     # baseline hygiene
     "BL901": "baseline entry carries no justification",
     "BL902": "baseline entry matches no current finding (stale)",
+    "BL903": "baseline file contains duplicate fingerprint keys",
 }
 
 
@@ -100,11 +127,24 @@ class Baseline:
 
     entries: Dict[str, str] = field(default_factory=dict)
     path: Optional[str] = None
+    # fingerprints that appeared more than once in the loaded JSON (the
+    # parser keeps the last occurrence) — surfaced as BL903 warnings
+    duplicates: List[str] = field(default_factory=list)
 
     @classmethod
     def load(cls, path: str) -> "Baseline":
+        duplicates: List[str] = []
+
+        def _record_dups(pairs):
+            seen: Dict[str, object] = {}
+            for key, value in pairs:
+                if key in seen:
+                    duplicates.append(key)
+                seen[key] = value
+            return seen
+
         with open(path) as fh:
-            payload = json.load(fh)
+            payload = json.load(fh, object_pairs_hook=_record_dups)
         if not isinstance(payload, dict) or not isinstance(
             payload.get("entries"), dict
         ):
@@ -115,7 +155,9 @@ class Baseline:
         entries = {
             str(fp): str(just) for fp, just in payload["entries"].items()
         }
-        return cls(entries=entries, path=path)
+        return cls(
+            entries=entries, path=path, duplicates=sorted(set(duplicates))
+        )
 
     def save(self, path: Optional[str] = None) -> None:
         path = path or self.path
@@ -149,7 +191,10 @@ def apply_baseline(
     Appends the baseline's own hygiene findings to the active list:
     ``BL901`` (error) for suppressions without a justification — the
     matched finding stays *active* in that case, an empty string must
-    not buy suppression — and ``BL902`` (warning) for stale entries.
+    not buy suppression — ``BL902`` (warning) for stale entries, and
+    ``BL903`` (warning) for duplicate fingerprint keys in the committed
+    file (JSON keeps the last one silently; the diff reviewer must see
+    it).
     """
     if baseline is None:
         return list(findings), []
@@ -193,4 +238,17 @@ def apply_baseline(
                     severity="warning",
                 )
             )
+    for fp in baseline.duplicates:
+        active.append(
+            Finding(
+                rule="BL903",
+                path=bl_path,
+                line=1,
+                message=f"duplicate fingerprint {fp!r} in baseline; JSON "
+                "silently keeps the last occurrence — deduplicate "
+                "(re-run --write-baseline)",
+                context=fp,
+                severity="warning",
+            )
+        )
     return active, suppressed

@@ -1,40 +1,104 @@
 """``python -m repro.analysis.lint`` — the repo's own static analyzer.
 
-Runs the four passes (dispatch bypass, registry consistency, artifact
-schemas, kernel contracts) and exits non-zero when any *unsuppressed*
-error-severity finding remains.  Findings print as
+Runs the seven passes and exits non-zero when any *unsuppressed*
+error-severity finding remains:
+
+  dispatch     AST: GEMM-shaped calls bypassing core.dispatch (DL0xx)
+  registry     candidate-registry consistency (RC1xx)
+  artifacts    jax-free schema validation of committed JSON (AR2xx)
+  contracts    eval_shape output shape/dtype + tile validation (KC30x)
+  coverage     symbolic BlockSpec index-map proofs over the full grid
+               for every (candidate, op, tile) schedule (KC31x)
+  numerics     bf16 jaxpr walk: f32 accumulation discipline (NM40x)
+  concurrency  AST: guarded-by lock discipline, ContextVar set/reset
+               pairing, thread/acquire hygiene (CC50x)
+
+``--sanitize`` additionally runs the dynamic poison-padding sanitizer
+(NM404, interpret mode — see ``sanitize.py``).  Findings print as
 ``path:line: severity RULE message`` — the gcc format editors and CI
-annotators already parse.
+annotators already parse; ``--format json`` emits one machine-readable
+object instead.
 
 Suppression goes through a committed baseline file
 (``src/repro/analysis/baseline.json``): a JSON map from finding
 fingerprint to a human-written justification.  Empty justifications do
-not suppress (``BL901``), stale entries warn (``BL902``).  Seed new
-entries with ``--write-baseline`` and then *fill in the justification by
-hand* — that is the point.
+not suppress (``BL901``), stale entries warn (``BL902``), duplicate
+fingerprints warn (``BL903``).  Seed new entries with
+``--write-baseline`` (output is sorted and deduplicated for reviewable
+diffs) and then *fill in the justification by hand* — that is the point.
 
-Pass selection matters for dependencies: ``--passes artifacts`` (and
-``dispatch``) never import jax, so artifact validation runs on
-checkouts without the accelerator stack; ``registry`` and ``contracts``
-import ``repro.core`` lazily only when selected.
+Pass selection matters for dependencies: ``dispatch``, ``artifacts``
+and ``concurrency`` never import jax, so they run on checkouts without
+the accelerator stack; the tracing passes import ``repro.core`` lazily
+only when selected.  The driver overlaps the jax-free passes on worker
+threads with the tracing passes on the main thread (``--jobs 1``
+serialises); every AST pass shares one parsed-source cache, so no file
+is parsed twice per run (``--stats`` shows the timings and cache
+counters).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
-from typing import List, Optional, Sequence
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .findings import RULES, Baseline, Finding, apply_baseline
 
-__all__ = ["PASSES", "main", "run_passes"]
+__all__ = ["PASSES", "RULE_SECTIONS", "main", "run_passes"]
 
-# pass name -> (module, needs_jax); modules are imported lazily so the
-# jax-free passes stay jax-free under --passes
-PASSES = ("dispatch", "registry", "artifacts", "contracts")
-_NEEDS_JAX = {"dispatch": False, "artifacts": False,
-              "registry": True, "contracts": True}
+PASSES = (
+    "dispatch",
+    "registry",
+    "artifacts",
+    "contracts",
+    "coverage",
+    "numerics",
+    "concurrency",
+)
+# modules are imported lazily so the jax-free passes stay jax-free
+# under --passes
+_NEEDS_JAX = {
+    "dispatch": False,
+    "artifacts": False,
+    "concurrency": False,
+    "registry": True,
+    "contracts": True,
+    "coverage": True,
+    "numerics": True,
+}
+_PASS_MODULES = {
+    "dispatch": "dispatch_lint",
+    "registry": "registry_lint",
+    "artifacts": "artifacts_lint",
+    "contracts": "contracts",
+    "coverage": "coverage",
+    "numerics": "numerics",
+    "concurrency": "concurrency",
+}
+# which pass entry points accept the shared SourceCache
+_TAKES_CACHE = {"dispatch", "numerics", "concurrency"}
+
+# rule catalogue sections for --list-rules --format md; a test asserts
+# every registered rule appears in exactly one section
+RULE_SECTIONS: Tuple[Tuple[str, str, Tuple[str, ...]], ...] = (
+    ("Dispatch bypass", "dispatch", ("DL001", "DL002")),
+    ("Registry consistency", "registry",
+     ("RC101", "RC102", "RC103", "RC104", "RC105", "RC106")),
+    ("Artifact schemas", "artifacts", ("AR201", "AR202", "AR203", "AR204")),
+    ("Kernel contracts", "contracts", ("KC301", "KC302")),
+    ("Index-map coverage", "coverage",
+     ("KC310", "KC311", "KC312", "KC313", "KC314", "KC315")),
+    ("Numerics accumulation", "numerics + --sanitize",
+     ("NM401", "NM402", "NM403", "NM404")),
+    ("Concurrency discipline", "concurrency",
+     ("CC501", "CC502", "CC503", "CC504", "CC505")),
+    ("Baseline hygiene", "(any)", ("BL901", "BL902", "BL903")),
+)
 
 
 def _default_baseline_path() -> str:
@@ -50,40 +114,109 @@ def _repo_root() -> str:
     )
 
 
+def _run_one(name: str, repo_root: str, cache) -> List[Finding]:
+    import importlib
+
+    module = importlib.import_module(
+        f".{_PASS_MODULES[name]}", package=__package__
+    )
+    if name in _TAKES_CACHE:
+        return module.run(repo_root, cache=cache)
+    return module.run(repo_root)
+
+
 def run_passes(
-    passes: Sequence[str], repo_root: Optional[str] = None
+    passes: Sequence[str],
+    repo_root: Optional[str] = None,
+    jobs: int = 0,
+    stats: Optional[Dict[str, float]] = None,
 ) -> List[Finding]:
-    """All findings from the selected passes, in pass order."""
+    """All findings from the selected passes, in pass order.
+
+    ``jobs != 1`` overlaps the jax-free passes (worker threads) with the
+    tracing passes (main thread, serial — jax tracing stays on one
+    thread).  ``stats``, when given, is filled with per-pass wall times.
+    """
+    from .cache import SourceCache
+
     repo_root = repo_root or _repo_root()
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        raise ValueError(
+            f"unknown pass(es) {', '.join(unknown)}; have {', '.join(PASSES)}"
+        )
+    cache = SourceCache()
+    results: Dict[str, List[Finding]] = {}
+
+    def timed(name: str) -> List[Finding]:
+        t0 = time.perf_counter()
+        try:
+            return _run_one(name, repo_root, cache)
+        finally:
+            if stats is not None:
+                stats[name] = time.perf_counter() - t0
+
+    ast_passes = [p for p in passes if not _NEEDS_JAX[p]]
+    jax_passes = [p for p in passes if _NEEDS_JAX[p]]
+    if jobs == 1 or not ast_passes or not jax_passes:
+        for name in passes:
+            results[name] = timed(name)
+    else:
+        workers = jobs if jobs > 0 else len(ast_passes)
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futures = {p: pool.submit(timed, p) for p in ast_passes}
+            for name in jax_passes:
+                results[name] = timed(name)
+            for name, fut in futures.items():
+                results[name] = fut.result()
+
+    if stats is not None:
+        stats["_cache"] = cache  # type: ignore[assignment]
     findings: List[Finding] = []
     for name in passes:
-        if name == "dispatch":
-            from . import dispatch_lint
-
-            findings.extend(dispatch_lint.run(repo_root))
-        elif name == "registry":
-            from . import registry_lint
-
-            findings.extend(registry_lint.run(repo_root))
-        elif name == "artifacts":
-            from . import artifacts_lint
-
-            findings.extend(artifacts_lint.run(repo_root))
-        elif name == "contracts":
-            from . import contracts
-
-            findings.extend(contracts.run(repo_root))
-        else:
-            raise ValueError(
-                f"unknown pass {name!r}; have {', '.join(PASSES)}"
-            )
+        findings.extend(results[name])
     return findings
+
+
+def _finding_payload(f: Finding) -> Dict:
+    return {
+        "rule": f.rule,
+        "path": f.path,
+        "line": f.line,
+        "severity": f.severity,
+        "message": f.message,
+        "context": f.context,
+        "fingerprint": f.fingerprint,
+        "suppressed": f.suppressed,
+        "justification": f.justification,
+    }
+
+
+def _render_rules_md() -> str:
+    lines = [
+        "# repro.analysis lint rules",
+        "",
+        "Generated by `python -m repro.analysis.lint --list-rules "
+        "--format md`.  Do not edit by hand — CI diffs this file against "
+        "a fresh render.",
+        "",
+    ]
+    for title, pass_name, rules in RULE_SECTIONS:
+        lines.append(f"## {title} (`{pass_name}`)")
+        lines.append("")
+        lines.append("| rule | description |")
+        lines.append("| --- | --- |")
+        for rule in rules:
+            lines.append(f"| {rule} | {RULES[rule]} |")
+        lines.append("")
+    return "\n".join(lines)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="Dispatch/registry/artifact/contract static analysis.",
+        description="Dispatch/registry/artifact/contract/coverage/"
+        "numerics/concurrency static analysis.",
     )
     parser.add_argument(
         "--passes",
@@ -114,12 +247,45 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument(
         "--list-rules", action="store_true", help="print the rule catalogue"
     )
+    parser.add_argument(
+        "--format",
+        choices=("text", "json", "md"),
+        default="text",
+        help="output format; 'md' is only valid with --list-rules",
+    )
+    parser.add_argument(
+        "--sanitize",
+        action="store_true",
+        help="also run the poison-padding sanitizer (NM404; runs every "
+        "registered candidate in interpret mode — slower)",
+    )
+    parser.add_argument(
+        "--stats",
+        action="store_true",
+        help="print per-pass wall time and parse-cache counters",
+    )
+    parser.add_argument(
+        "--jobs",
+        type=int,
+        default=0,
+        help="worker threads for the jax-free passes (0 = auto, "
+        "1 = fully serial)",
+    )
     args = parser.parse_args(argv)
 
     if args.list_rules:
-        for rule in sorted(RULES):
-            print(f"{rule}  {RULES[rule]}")
+        if args.format == "md":
+            print(_render_rules_md())
+        elif args.format == "json":
+            print(json.dumps(
+                {"rules": RULES, "passes": list(PASSES)}, indent=2
+            ))
+        else:
+            for rule in sorted(RULES):
+                print(f"{rule}  {RULES[rule]}")
         return 0
+    if args.format == "md":
+        parser.error("--format md is only valid with --list-rules")
 
     passes = [p.strip() for p in args.passes.split(",") if p.strip()]
     unknown = [p for p in passes if p not in PASSES]
@@ -129,7 +295,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         )
 
     repo_root = os.path.abspath(args.root) if args.root else _repo_root()
-    findings = run_passes(passes, repo_root)
+    stats: Dict[str, float] = {}
+    findings = run_passes(passes, repo_root, jobs=args.jobs, stats=stats)
+    if args.sanitize:
+        from . import sanitize
+
+        t0 = time.perf_counter()
+        findings.extend(sanitize.run(repo_root))
+        stats["sanitize"] = time.perf_counter() - t0
 
     baseline: Optional[Baseline] = None
     if not args.no_baseline and not args.write_baseline:
@@ -156,14 +329,47 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
 
     active, suppressed = apply_baseline(findings, baseline)
-    for f in sorted(active, key=lambda f: (f.path, f.line, f.rule)):
-        print(f.render())
-
+    active.sort(key=lambda f: (f.path, f.line, f.rule))
     errors = [f for f in active if f.severity == "error"]
     warnings = [f for f in active if f.severity == "warning"]
+    stage_names = passes + (["sanitize"] if args.sanitize else [])
+
+    if args.format == "json":
+        cache = stats.pop("_cache", None)
+        payload = {
+            "passes": stage_names,
+            "findings": [_finding_payload(f) for f in active],
+            "suppressed": [_finding_payload(f) for f in suppressed],
+            "summary": {
+                "errors": len(errors),
+                "warnings": len(warnings),
+                "baselined": len(suppressed),
+            },
+            "stats": {
+                name: round(seconds, 3)
+                for name, seconds in sorted(stats.items())
+            },
+        }
+        if cache is not None:
+            payload["stats"]["files_parsed"] = cache.misses
+            payload["stats"]["reparses_avoided"] = cache.hits
+        print(json.dumps(payload, indent=2))
+        return 1 if errors else 0
+
+    for f in active:
+        print(f.render())
+    if args.stats:
+        cache = stats.pop("_cache", None)
+        for name in stage_names:
+            if name in stats:
+                print(f"repro-lint: pass {name}: {stats[name]:.2f}s")
+        if cache is not None:
+            print(f"repro-lint: parse cache: {cache.stats()}")
+    else:
+        stats.pop("_cache", None)
     print(
-        f"repro-lint: {len(passes)} pass(es) "
-        f"[{', '.join(passes)}]: {len(errors)} error(s), "
+        f"repro-lint: {len(stage_names)} pass(es) "
+        f"[{', '.join(stage_names)}]: {len(errors)} error(s), "
         f"{len(warnings)} warning(s), {len(suppressed)} baselined"
     )
     return 1 if errors else 0

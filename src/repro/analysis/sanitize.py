@@ -1,0 +1,256 @@
+"""Poison-padding sanitizer (NM404): dynamic proof of padding masking.
+
+The static passes prove the *schedule* (coverage) and the *accumulation
+dtype* (numerics), but neither can prove the kernels' zero-padding
+actually masks the padded region — that the values in the pad rows and
+columns can never reach a logical output element.  This mode proves it
+empirically, the way MSan proves uninitialised reads:
+
+For each registered (candidate, op) pair and each tile config in
+{default + first shortlist entry}, build operands *pre-padded to the
+kernel's own padded extents* (so the kernel pads nothing further — the
+pad regions are exactly the ones we control), then:
+
+  * fill output-axis padding (pad rows of A, pad rows/cols of B that map
+    to output rows/cols >= m/n) with a poison value (NaN, +inf, -inf)
+  * keep contraction-axis padding (k >= logical k) at zero — those
+    elements ARE accumulated, by design, and zero is the masking the
+    kernels rely on
+
+Run the candidate on the poisoned operands and on an identical
+zero-filled pair.  The logical [:m, :n] region must be **bit-identical**
+between the two runs — one poisoned lane anywhere in the reduction makes
+NaN/inf absorb the whole element, so equality is a leak-proof oracle —
+and must match the f64 reference (``ref.matmul_ref``) within tolerance.
+
+Everything runs in interpret mode on CPU (``should_interpret``), which
+is the point: this is a lint mode (``lint --sanitize``) and an opt-in
+pytest fixture, not a TPU job.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+__all__ = ["SanitizeReport", "sanitize_candidates", "run"]
+
+# one ragged cell: every axis unaligned so every axis has a pad region
+DEFAULT_SHAPES: Tuple[Tuple[int, int, int, int], ...] = ((129, 127, 65, 3),)
+DEFAULT_POISONS: Tuple[str, ...] = ("nan", "+inf", "-inf")
+
+
+@dataclass
+class SanitizeReport:
+    findings: List[Finding] = field(default_factory=list)
+    pairs: List[Tuple[str, str]] = field(default_factory=list)
+    cells: int = 0
+
+
+def _padded_extents(m: int, n: int, k: int, cfg):
+    from repro.kernels.common import DEFAULT_BLOCK, normalize_block, round_up
+
+    bm, bn, bk = normalize_block((m, n, k), cfg, DEFAULT_BLOCK)
+    return round_up(m, bm), round_up(n, bn), round_up(k, bk)
+
+
+def _build_operands(op, m, n, k, g, mp, np_, kp, dtype, poison, rng):
+    """Pre-padded (A, B) with poison in output-axis padding and zeros in
+    contraction-axis padding.  Returns numpy arrays."""
+    import numpy as np
+
+    def body(rows, cols):
+        return (rng.standard_normal((rows, cols)) * 0.5).astype(dtype)
+
+    if op in ("NT", "NN", "TN"):
+        if op == "NT":  # A:(m,k) B:(n,k)
+            a = np.full((mp, kp), poison, dtype)
+            a[:m, :k] = body(m, k)
+            a[:m, k:] = 0  # contraction pad: accumulated, must be zero
+            b = np.full((np_, kp), poison, dtype)
+            b[:n, :k] = body(n, k)
+            b[:n, k:] = 0
+        elif op == "NN":  # A:(m,k) B:(k,n)
+            a = np.full((mp, kp), poison, dtype)
+            a[:m, :k] = body(m, k)
+            a[:m, k:] = 0
+            b = np.full((kp, np_), poison, dtype)
+            b[:k, :n] = body(k, n)
+            b[k:, :n] = 0
+        else:  # TN: A:(k,m) B:(k,n)
+            a = np.full((kp, mp), poison, dtype)
+            a[:k, :m] = body(k, m)
+            a[k:, :m] = 0
+            b = np.full((kp, np_), poison, dtype)
+            b[:k, :n] = body(k, n)
+            b[k:, :n] = 0
+        return a, b
+    # batched: per-slice layout over the trailing two axes
+    if op == "BNT":
+        a = np.full((g, mp, kp), poison, dtype)
+        b = np.full((g, np_, kp), poison, dtype)
+        for gi in range(g):
+            a[gi, :m, :k] = body(m, k)
+            a[gi, :m, k:] = 0
+            b[gi, :n, :k] = body(n, k)
+            b[gi, :n, k:] = 0
+        return a, b
+    if op == "BNN":
+        a = np.full((g, mp, kp), poison, dtype)
+        b = np.full((g, kp, np_), poison, dtype)
+        for gi in range(g):
+            a[gi, :m, :k] = body(m, k)
+            a[gi, :m, k:] = 0
+            b[gi, :k, :n] = body(k, n)
+            b[gi, k:, :n] = 0
+        return a, b
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _logical(out, op, m, n):
+    if op.startswith("B"):
+        return out[:, :m, :n]
+    return out[:m, :n]
+
+
+def _reference(op, a_live, b_live):
+    """f64 oracle on the *live* (unpadded) operand regions."""
+    import numpy as np
+
+    a64 = np.asarray(a_live, np.float64)
+    b64 = np.asarray(b_live, np.float64)
+    if op == "NT":
+        return a64 @ b64.T
+    if op == "NN":
+        return a64 @ b64
+    if op == "TN":
+        return a64.T @ b64
+    if op == "BNT":
+        return np.einsum("gmk,gnk->gmn", a64, b64)
+    if op == "BNN":
+        return np.einsum("gmk,gkn->gmn", a64, b64)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _live(arr, op, m, n, k):
+    if op == "NT":
+        return arr[0][:m, :k], arr[1][:n, :k]
+    if op == "NN":
+        return arr[0][:m, :k], arr[1][:k, :n]
+    if op == "TN":
+        return arr[0][:k, :m], arr[1][:k, :n]
+    if op == "BNT":
+        return arr[0][:, :m, :k], arr[1][:, :n, :k]
+    if op == "BNN":
+        return arr[0][:, :m, :k], arr[1][:, :k, :n]
+    raise ValueError(f"unknown op {op!r}")
+
+
+def sanitize_candidates(
+    shapes: Sequence[Tuple[int, int, int, int]] = DEFAULT_SHAPES,
+    dtypes: Sequence[str] = ("float32", "bfloat16"),
+    poisons: Sequence[str] = DEFAULT_POISONS,
+    repo_root: Optional[str] = None,
+    candidates: Optional[Sequence[str]] = None,
+) -> SanitizeReport:
+    import numpy as np
+
+    import jax.numpy as jnp
+    from repro.core.candidates import CANDIDATES
+    from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
+
+    from .contracts import _candidate_location
+
+    poison_values = {"nan": float("nan"), "+inf": float("inf"),
+                     "-inf": float("-inf")}
+    report = SanitizeReport()
+    rng = np.random.default_rng(20260809)
+    for name, cand in sorted(CANDIDATES.items()):
+        if candidates is not None and name not in candidates:
+            continue
+        path, line = _candidate_location(cand, repo_root)
+        for op in cand.ops:
+            report.pairs.append((name, op))
+            for m, n, k, g in shapes:
+                gg = g if op.startswith("B") else 1
+                for dtype_name in dtypes:
+                    if cand.dtypes is not None and dtype_name not in cand.dtypes:
+                        continue
+                    dtype = jnp.dtype(dtype_name)
+                    space = cand.config_space(m, n, k, dtype.itemsize)
+                    configs = [None] + ([tuple(space[0])] if space else [])
+                    for cfg in configs:
+                        ck = (DEFAULT_CONFIG_KEY if cfg is None
+                              else config_key(cfg))
+                        mp, np_, kp = _padded_extents(m, n, k, cfg)
+                        cell = f"{name}:{op}:{m}x{n}x{k}x{gg}:{dtype_name}:{ck}"
+                        report.cells += 1
+                        # the zero-filled twin is the leak oracle
+                        az, bz = _build_operands(
+                            op, m, n, k, gg, mp, np_, kp, dtype_name, 0.0,
+                            np.random.default_rng(20260809),
+                        )
+                        out_z = np.asarray(
+                            _logical(cand.run(jnp.asarray(az),
+                                              jnp.asarray(bz), cfg),
+                                     op, m, n)
+                        )
+                        a_live, b_live = _live((az, bz), op, m, n, k)
+                        ref = _reference(op, a_live, b_live)
+                        tol = 1e-5 if dtype_name == "float32" else 2e-2
+                        if not np.allclose(
+                            np.asarray(out_z, np.float64), ref,
+                            rtol=tol, atol=tol * max(1.0, float(
+                                np.abs(ref).max())),
+                        ):
+                            report.findings.append(
+                                Finding(
+                                    rule="NM404",
+                                    path=path,
+                                    line=line,
+                                    message=(
+                                        f"{cell}: output deviates from the "
+                                        "f64 oracle on pre-padded operands"
+                                    ),
+                                    context=f"sanitize:{cell}:oracle",
+                                )
+                            )
+                            continue
+                        for plabel in poisons:
+                            ap, bp = _build_operands(
+                                op, m, n, k, gg, mp, np_, kp, dtype_name,
+                                poison_values[plabel],
+                                np.random.default_rng(20260809),
+                            )
+                            out_p = np.asarray(
+                                _logical(cand.run(jnp.asarray(ap),
+                                                  jnp.asarray(bp), cfg),
+                                         op, m, n)
+                            )
+                            if not np.array_equal(out_p, out_z):
+                                bad = int(
+                                    (~np.isclose(out_p, out_z,
+                                                 equal_nan=True)).sum()
+                                )
+                                report.findings.append(
+                                    Finding(
+                                        rule="NM404",
+                                        path=path,
+                                        line=line,
+                                        message=(
+                                            f"{cell}: {plabel}-poisoned "
+                                            "padding leaked into the "
+                                            f"logical output ({bad} "
+                                            "elements differ from the "
+                                            "zero-padded run)"
+                                        ),
+                                        context=f"sanitize:{cell}:{plabel}",
+                                    )
+                                )
+    return report
+
+
+def run(repo_root: Optional[str] = None, cache=None) -> List[Finding]:
+    return sanitize_candidates(repo_root=repo_root).findings

@@ -349,9 +349,9 @@ class QuarantineEntry:
 
 
 _LOCK = threading.Lock()
-_QUARANTINE: Dict[Tuple[str, str, Optional[str]], QuarantineEntry] = {}
-_FALLBACKS: Dict[Tuple[str, str, str], int] = {}  # (op, from, to) -> n
-_EPOCH = 0
+_QUARANTINE: Dict[Tuple[str, str, Optional[str]], QuarantineEntry] = {}  # guarded-by: _LOCK
+_FALLBACKS: Dict[Tuple[str, str, str], int] = {}  # (op, from, to) -> n; guarded-by: _LOCK
+_EPOCH = 0  # guarded-by: _LOCK
 
 
 def _config_key(config) -> Optional[str]:

@@ -29,6 +29,7 @@ import json
 import os
 import statistics
 import tempfile
+import threading
 import time
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
@@ -222,10 +223,13 @@ class MeasurementCache:
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
-        self._entries: Dict[MeasurementKey, Dict[str, Dict[str, float]]] = {}
+        # in-process counterpart of the cross-process _file_lock: policies
+        # share one cache across serving threads
+        self._lock = threading.Lock()
+        self._entries: Dict[MeasurementKey, Dict[str, Dict[str, float]]] = {}  # guarded-by: _lock
         # per-measurement bench attempt counts (retry observability):
         # {key: {name: {config_key: attempts}}} — parallel to _entries
-        self._attempts: Dict[MeasurementKey, Dict[str, Dict[str, int]]] = {}
+        self._attempts: Dict[MeasurementKey, Dict[str, Dict[str, int]]] = {}  # guarded-by: _lock
         # (mtime_ns, size) of the file state we last loaded/wrote
         self._synced_sig: Optional[Tuple[int, int]] = None
 
@@ -314,30 +318,31 @@ class MeasurementCache:
         # state we last loaded/wrote — single-writer runs stay O(1) reads.
         with _file_lock(path):
             disk_sig = _file_sig(path)
-            if disk_sig is not None and disk_sig != (
-                self._synced_sig if path == self.path else None
-            ):
-                try:
-                    on_disk = MeasurementCache.load(path)
-                except (ValueError, OSError, json.JSONDecodeError):
-                    on_disk = None  # unreadable/foreign file: overwrite it
-                if on_disk is not None:
-                    for k, v in on_disk._entries.items():
-                        self._entries.setdefault(k, v)
-                    for k, v in on_disk._attempts.items():
-                        self._attempts.setdefault(k, v)
-            payload = {
-                "schema_version": MEASURE_SCHEMA_VERSION,
-                "entries": {
-                    _key_str(k): times
-                    for k, times in sorted(self._entries.items())
-                },
-            }
-            if self._attempts:
-                payload["attempts"] = {
-                    _key_str(k): per_cand
-                    for k, per_cand in sorted(self._attempts.items())
+            with self._lock:
+                if disk_sig is not None and disk_sig != (
+                    self._synced_sig if path == self.path else None
+                ):
+                    try:
+                        on_disk = MeasurementCache.load(path)
+                    except (ValueError, OSError, json.JSONDecodeError):
+                        on_disk = None  # unreadable/foreign file: overwrite
+                    if on_disk is not None:
+                        for k, v in on_disk._entries.items():
+                            self._entries.setdefault(k, v)
+                        for k, v in on_disk._attempts.items():
+                            self._attempts.setdefault(k, v)
+                payload = {
+                    "schema_version": MEASURE_SCHEMA_VERSION,
+                    "entries": {
+                        _key_str(k): times
+                        for k, times in sorted(self._entries.items())
+                    },
                 }
+                if self._attempts:
+                    payload["attempts"] = {
+                        _key_str(k): per_cand
+                        for k, per_cand in sorted(self._attempts.items())
+                    }
             # unique tmp per writer: a fixed sibling name would let two
             # unlocked writers truncate each other's half-written file
             fd, tmp = tempfile.mkstemp(
@@ -366,12 +371,13 @@ class MeasurementCache:
         ``attempts`` optionally records the bench try count per
         (candidate, config) alongside the entry."""
         mkey = _normalize_mkey(key)
-        self._entries[mkey] = _normalize_times(times)
-        if attempts:
-            self._attempts[mkey] = {
-                str(name): {str(ck): int(n) for ck, n in cfgs.items()}
-                for name, cfgs in attempts.items()
-            }
+        with self._lock:
+            self._entries[mkey] = _normalize_times(times)
+            if attempts:
+                self._attempts[mkey] = {
+                    str(name): {str(ck): int(n) for ck, n in cfgs.items()}
+                    for name, cfgs in attempts.items()
+                }
 
     def get_attempts(self, key) -> Optional[Dict[str, Dict[str, int]]]:
         """Bench attempt counts recorded with an entry (None when the

@@ -33,8 +33,45 @@ from .common import (
     round_up,
     should_interpret,
 )
+from .gridspec import BlockMap, KernelGridSpec
 
-__all__ = ["matmul_bnt", "matmul_bnn"]
+__all__ = ["matmul_bnt", "matmul_bnn", "batched_grid_spec"]
+
+
+def batched_grid_spec(
+    g: int,
+    m: int,
+    n: int,
+    k: int,
+    *,
+    nt: bool,
+    block: Optional[Tuple[int, int, int]] = None,
+) -> KernelGridSpec:
+    """The batched NT/NN schedule at logical shape (g, m, n, k): one
+    leading parallel batch axis over the unbatched grid.  Consumed by
+    ``_matmul_batched`` and verified by ``repro.analysis.coverage``."""
+    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    if nt:
+        b_map = BlockMap(
+            (1, bn, bk), lambda gi, i, j, kk: (gi, j, kk), (g, np_, kp)
+        )
+    else:
+        b_map = BlockMap(
+            (1, bk, bn), lambda gi, i, j, kk: (gi, kk, j), (g, kp, np_)
+        )
+    return KernelGridSpec(
+        name="matmul_bnt" if nt else "matmul_bnn",
+        grid=(g, cdiv(mp, bm), cdiv(np_, bn), cdiv(kp, bk)),
+        in_specs=(
+            BlockMap((1, bm, bk), lambda gi, i, j, kk: (gi, i, kk), (g, mp, kp)),
+            b_map,
+        ),
+        out_spec=BlockMap(
+            (1, bm, bn), lambda gi, i, j, kk: (gi, i, j), (g, mp, np_)
+        ),
+        sequential=(3,),
+    )
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, nt: bool):
@@ -76,32 +113,27 @@ def _matmul_batched(
     else:  # b: (g, k, n)
         g2, k2, n = b.shape
     assert g == g2 and k == k2, f"batched operand mismatch: {a.shape} vs {b.shape}"
-    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
-    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    spec = batched_grid_spec(g, m, n, k, nt=nt, block=block)
+    _, mp, kp = spec.in_specs[0].extent
+    np_ = spec.out_spec.extent[2]
     ap = _pad3(a, mp, kp)
-    bp = _pad3(b, np_ if nt else kp, kp if nt else np_)
-    n_k = cdiv(kp, bk)
+    bp = _pad3(b, *spec.in_specs[1].extent[1:])
+    n_k = spec.grid[3]
     interp = should_interpret() if interpret is None else interpret
 
-    if nt:
-        b_spec = pl.BlockSpec((1, bn, bk), lambda gi, i, j, kk: (gi, j, kk))
-    else:
-        b_spec = pl.BlockSpec((1, bk, bn), lambda gi, i, j, kk: (gi, kk, j))
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, nt=nt),
-        grid=(g, cdiv(mp, bm), cdiv(np_, bn), n_k),
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda gi, i, j, kk: (gi, i, kk)),
-            b_spec,
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, kk: (gi, i, j)),
-        out_shape=jax.ShapeDtypeStruct((g, mp, np_), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in spec.in_specs],
+        out_specs=pl.BlockSpec(spec.out_spec.block, spec.out_spec.index_map),
+        out_shape=jax.ShapeDtypeStruct(spec.out_spec.extent, a.dtype),
+        # accumulator holds one batch slice's (bm, bn) tile
+        scratch_shapes=[pltpu.VMEM(spec.out_spec.block[1:], jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+            dimension_semantics=spec.dimension_semantics
         ),
         interpret=interp,
-        name="matmul_bnt" if nt else "matmul_bnn",
+        name=spec.name,
     )(ap, bp)
     return out[:, :m, :n]
 

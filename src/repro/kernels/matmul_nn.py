@@ -18,8 +18,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .common import CompilerParams, DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret
+from .gridspec import BlockMap, KernelGridSpec
 
-__all__ = ["matmul_nn"]
+__all__ = ["matmul_nn", "nn_grid_spec"]
+
+
+def nn_grid_spec(
+    m: int, n: int, k: int, block: Optional[Tuple[int, int, int]] = None
+) -> KernelGridSpec:
+    """The NN kernel's schedule at logical shape (m, n, k) — consumed by
+    ``matmul_nn`` below and verified by ``repro.analysis.coverage``."""
+    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    return KernelGridSpec(
+        name="matmul_nn",
+        grid=(cdiv(mp, bm), cdiv(np_, bn), cdiv(kp, bk)),
+        in_specs=(
+            BlockMap((bm, bk), lambda i, j, kk: (i, kk), (mp, kp)),
+            BlockMap((bk, bn), lambda i, j, kk: (kk, j), (kp, np_)),
+        ),
+        out_spec=BlockMap((bm, bn), lambda i, j, kk: (i, j), (mp, np_)),
+        sequential=(2,),
+    )
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -47,26 +67,24 @@ def matmul_nn(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
-    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
-    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    spec = nn_grid_spec(m, n, k, block)
+    mp, kp = spec.in_specs[0].extent
+    np_ = spec.out_spec.extent[1]
     ap, bp = pad2(a, mp, kp), pad2(b, kp, np_)
-    n_k = cdiv(kp, bk)
+    n_k = spec.grid[2]
     interp = should_interpret() if interpret is None else interpret
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
-        grid=(cdiv(mp, bm), cdiv(np_, bn), n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in spec.in_specs],
+        out_specs=pl.BlockSpec(spec.out_spec.block, spec.out_spec.index_map),
+        out_shape=jax.ShapeDtypeStruct(spec.out_spec.extent, a.dtype),
+        scratch_shapes=[pltpu.VMEM(spec.out_spec.block, jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=spec.dimension_semantics
         ),
         interpret=interp,
-        name="matmul_nn",
+        name=spec.name,
     )(ap, bp)
     return out[:m, :n]

@@ -24,8 +24,30 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .common import CompilerParams, DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret
+from .gridspec import BlockMap, KernelGridSpec
 
-__all__ = ["matmul_tnn_fused"]
+__all__ = ["matmul_tnn_fused", "tnn_fused_grid_spec"]
+
+
+def tnn_fused_grid_spec(
+    m: int, n: int, k: int, block: Optional[Tuple[int, int, int]] = None
+) -> KernelGridSpec:
+    """The fused-TNN schedule at logical shape (m, n, k).  The grid is
+    n-major (j outermost) so the B strip stays VMEM-resident; the index
+    maps reorder accordingly.  Verified by ``repro.analysis.coverage``."""
+    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    return KernelGridSpec(
+        name="matmul_tnn_fused",
+        # j outermost: B strip resident, A streams.
+        grid=(cdiv(np_, bn), cdiv(mp, bm), cdiv(kp, bk)),
+        in_specs=(
+            BlockMap((bm, bk), lambda j, i, kk: (i, kk), (mp, kp)),
+            BlockMap((bn, bk), lambda j, i, kk: (j, kk), (np_, kp)),
+        ),
+        out_spec=BlockMap((bm, bn), lambda j, i, kk: (i, j), (mp, np_)),
+        sequential=(2,),
+    )
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -58,27 +80,24 @@ def matmul_tnn_fused(
     m, k = a.shape
     n, k2 = b.shape
     assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}^T"
-    bm, bn, bk = normalize_block((m, n, k), block, DEFAULT_BLOCK)
-    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    spec = tnn_fused_grid_spec(m, n, k, block)
+    mp, kp = spec.in_specs[0].extent
+    np_ = spec.out_spec.extent[1]
     ap, bp = pad2(a, mp, kp), pad2(b, np_, kp)
-    n_k = cdiv(kp, bk)
+    n_k = spec.grid[2]
     interp = should_interpret() if interpret is None else interpret
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
-        # j outermost: B strip resident, A streams.
-        grid=(cdiv(np_, bn), cdiv(mp, bm), n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk)),
-            pl.BlockSpec((bn, bk), lambda j, i, kk: (j, kk)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in spec.in_specs],
+        out_specs=pl.BlockSpec(spec.out_spec.block, spec.out_spec.index_map),
+        out_shape=jax.ShapeDtypeStruct(spec.out_spec.extent, a.dtype),
+        scratch_shapes=[pltpu.VMEM(spec.out_spec.block, jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=spec.dimension_semantics
         ),
         interpret=interp,
-        name="matmul_tnn_fused",
+        name=spec.name,
     )(ap, bp)
     return out[:m, :n]

@@ -21,8 +21,25 @@ import jax
 from jax.experimental import pallas as pl
 
 from .common import DEFAULT_BLOCK, cdiv, normalize_block, pad2, round_up, should_interpret
+from .gridspec import BlockMap, KernelGridSpec
 
-__all__ = ["transpose_kernel", "transpose"]
+__all__ = ["transpose_kernel", "transpose", "transpose_grid_spec"]
+
+
+def transpose_grid_spec(
+    n: int, k: int, block: Optional[Tuple[int, int]] = None
+) -> KernelGridSpec:
+    """The transpose kernel's schedule for B:(n, k) -> (k, n) — consumed
+    by ``transpose`` below and verified by ``repro.analysis.coverage``.
+    No sequential axis: every grid step owns its output block outright."""
+    bn, bk = normalize_block((n, k), block, (DEFAULT_BLOCK[1], DEFAULT_BLOCK[2]))
+    np_, kp = round_up(n, bn), round_up(k, bk)
+    return KernelGridSpec(
+        name="oop_transpose",
+        grid=(cdiv(np_, bn), cdiv(kp, bk)),
+        in_specs=(BlockMap((bn, bk), lambda i, j: (i, j), (np_, kp)),),
+        out_spec=BlockMap((bk, bn), lambda i, j: (j, i), (kp, np_)),
+    )
 
 
 def _kernel(b_ref, out_ref):
@@ -39,19 +56,19 @@ def transpose(
 ) -> jax.Array:
     """B:(n,k) -> B^T:(k,n) via one bandwidth-bound Pallas kernel."""
     n, k = b.shape
-    bn, bk = normalize_block((n, k), block, (DEFAULT_BLOCK[1], DEFAULT_BLOCK[2]))
-    np_, kp = round_up(n, bn), round_up(k, bk)
+    spec = transpose_grid_spec(n, k, block)
+    np_, kp = spec.in_specs[0].extent
     bp = pad2(b, np_, kp)
     interp = should_interpret() if interpret is None else interpret
 
     out = pl.pallas_call(
         _kernel,
-        grid=(cdiv(np_, bn), cdiv(kp, bk)),
-        in_specs=[pl.BlockSpec((bn, bk), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((kp, np_), b.dtype),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in spec.in_specs],
+        out_specs=pl.BlockSpec(spec.out_spec.block, spec.out_spec.index_map),
+        out_shape=jax.ShapeDtypeStruct(spec.out_spec.extent, b.dtype),
         interpret=interp,
-        name="oop_transpose",
+        name=spec.name,
     )(bp)
     return out[:k, :n]
 

@@ -62,6 +62,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import enum
+import threading
 import time
 import warnings
 from collections import deque
@@ -217,11 +218,14 @@ class ServeEngine:
         self.crashed_steps = 0
         self.deadline_evictions = 0
         self.rejected_submits = 0
-        self.queue: deque = deque()
+        # admission state is the submit/step contention surface: clients
+        # submit from request threads while the engine loop admits
+        self._lock = threading.Lock()
+        self.queue: deque = deque()  # guarded-by: _lock
         self.requests: Dict[int, Request] = {}
         self.clock = 0  # engine iterations (the virtual timeline)
         self._next_rid = 0
-        self._reserved = 0
+        self._reserved = 0  # guarded-by: _lock
         self._decode_steps: Dict[str, Any] = {}
         self._prefill_steps: Dict[str, Any] = {}
         for cls, policy in self.policies.items():
@@ -294,12 +298,13 @@ class ServeEngine:
         an overdue request is evicted as ``DEADLINE_EXCEEDED`` between
         decode steps.  Raises ``QueueFullError`` when the admission queue
         is at ``max_queue`` — explicit backpressure."""
-        if len(self.queue) >= self.max_queue:
-            self.rejected_submits += 1
-            raise QueueFullError(
-                f"admission queue is full ({self.max_queue} waiting); "
-                "shed load or retry after the queue drains"
-            )
+        with self._lock:
+            if len(self.queue) >= self.max_queue:
+                self.rejected_submits += 1
+                raise QueueFullError(
+                    f"admission queue is full ({self.max_queue} waiting); "
+                    "shed load or retry after the queue drains"
+                )
         if cls not in self.policies:
             raise KeyError(
                 f"unknown request class {cls!r}; engine classes: "
@@ -326,7 +331,8 @@ class ServeEngine:
         )
         self._next_rid += 1
         self.requests[req.rid] = req
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
         return req
 
     def _release(self, req: Request, state: RequestState) -> None:
@@ -335,9 +341,11 @@ class ServeEngine:
         QUEUED one's queue position."""
         if req.state is RequestState.ACTIVE:
             self.kv.free(req.slot)
-            self._reserved -= req.reserve
+            with self._lock:
+                self._reserved -= req.reserve
         elif req.state is RequestState.QUEUED:
-            self.queue.remove(req)
+            with self._lock:
+                self.queue.remove(req)
         req.state = state
         req.finish_step = self.clock
 
@@ -372,14 +380,17 @@ class ServeEngine:
         max-tokens budget holds, prefill it, land its cache in the slot."""
         admitted = []
         while self.queue:
-            req = self.queue[0]
-            if self._reserved + req.reserve > self.budget_tokens:
-                break  # head-of-line blocks: strict FCFS, no skip-ahead
-            slot = self.kv.allocate(req.rid)
-            if slot is None:
-                break
-            self.queue.popleft()
-            self._reserved += req.reserve
+            with self._lock:
+                if not self.queue:
+                    break
+                req = self.queue[0]
+                if self._reserved + req.reserve > self.budget_tokens:
+                    break  # head-of-line blocks: strict FCFS, no skip-ahead
+                slot = self.kv.allocate(req.rid)
+                if slot is None:
+                    break
+                self.queue.popleft()
+                self._reserved += req.reserve
             req.slot = slot
             req.state = RequestState.ACTIVE
             req.admit_step = self.clock

@@ -24,6 +24,7 @@ them.
 
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -48,9 +49,12 @@ class PagedKVCache:
         self.data = lm.init_lm_cache(
             cfg, self.n_slots + 1, max_seq, dtype=dtype
         )["segments"]
-        self._free: List[int] = list(range(self.n_slots))
+        # slot bookkeeping is shared with the engine's admission path;
+        # allocate/free must be atomic under concurrent submitters
+        self._lock = threading.Lock()
+        self._free: List[int] = list(range(self.n_slots))  # guarded-by: _lock
         self.lengths = np.zeros(self.n_slots + 1, np.int32)
-        self.owner: Dict[int, Any] = {}  # slot -> request id
+        self.owner: Dict[int, Any] = {}  # slot -> request id; guarded-by: _lock
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     @staticmethod
@@ -76,10 +80,11 @@ class PagedKVCache:
 
     def allocate(self, owner: Any) -> Optional[int]:
         """Claim a free slot for ``owner`` (None when the pool is full)."""
-        if not self._free:
-            return None
-        slot = self._free.pop(0)
-        self.owner[slot] = owner
+        with self._lock:
+            if not self._free:
+                return None
+            slot = self._free.pop(0)
+            self.owner[slot] = owner
         self.lengths[slot] = 0
         return slot
 
@@ -87,11 +92,12 @@ class PagedKVCache:
         """Release a slot back to the pool.  The KV rows are left in
         place — the next occupant's prefill overwrites them, and until
         then its zero length masks every stale position."""
-        if slot not in self.owner:
-            raise KeyError(f"slot {slot} is not allocated")
-        del self.owner[slot]
+        with self._lock:
+            if slot not in self.owner:
+                raise KeyError(f"slot {slot} is not allocated")
+            del self.owner[slot]
+            self._free.append(slot)
         self.lengths[slot] = 0
-        self._free.append(slot)
 
     def insert(self, prefill_cache: Dict[str, Any], slot: int, length: int):
         """Land a request's prefill cache (batch=1 pytree from

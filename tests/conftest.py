@@ -1,8 +1,9 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests and benches must see
 the single real CPU device (the 512-device override is dryrun-only)."""
 
+import os
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,6 +11,20 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def sanitize_report():
+    """Opt-in poison-padding sanitizer sweep: every registered candidate
+    run in interpret mode with NaN/±inf-poisoned padding (slow — several
+    seconds of interpret-mode kernels).  Enable with REPRO_SANITIZE=1;
+    skipped otherwise so the tier-1 wall time stays flat."""
+    if not os.environ.get("REPRO_SANITIZE"):
+        pytest.skip("poison-padding sanitizer sweep is opt-in "
+                    "(set REPRO_SANITIZE=1)")
+    from repro.analysis.sanitize import sanitize_candidates
+
+    return sanitize_candidates()
 
 
 @pytest.fixture(scope="session")

@@ -288,12 +288,12 @@ def test_artifacts_pass_detects_seeded_violations(tmp_path):
     assert any(x.rule == "AR201" for x in f)
 
 
-def test_artifacts_pass_runs_without_jax():
-    # hard guarantee: artifact validation works when jax cannot import
+def test_ast_passes_run_without_jax():
+    # hard guarantee: the AST passes work when jax cannot import
     code = (
         "import sys; sys.path.insert(0, 'src'); sys.modules['jax'] = None; "
         "from repro.analysis.lint import main; "
-        "sys.exit(main(['--passes', 'artifacts,dispatch']))"
+        "sys.exit(main(['--passes', 'artifacts,dispatch,concurrency']))"
     )
     proc = subprocess.run(
         [sys.executable, "-c", code],
@@ -360,3 +360,429 @@ def test_rule_catalogue_lists_every_emitted_rule(capsys):
     out = capsys.readouterr().out
     for rule in RULES:
         assert rule in out
+
+
+# -- index-map/coverage pass -------------------------------------------------
+
+
+def _square_spec(index_map, grid=(2, 2), in_map=None, sequential=()):
+    """A 256x256 two-axis spec with 128x128 blocks — the unit-test rig:
+    ``index_map`` drives the output, ``in_map`` (default: identity) the
+    single operand."""
+    from repro.kernels.gridspec import BlockMap, KernelGridSpec
+
+    out = BlockMap(block=(128, 128), index_map=index_map, extent=(256, 256))
+    inp = BlockMap(
+        block=(128, 128),
+        index_map=in_map or (lambda i, j: (i, j)),
+        extent=(256, 256),
+    )
+    return KernelGridSpec(
+        name="unit", grid=grid, in_specs=(inp,), out_spec=out,
+        sequential=sequential,
+    )
+
+
+def test_verify_spec_accepts_correct_schedules():
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import candidate_grid_specs
+
+    assert verify_spec(_square_spec(lambda i, j: (i, j))) == []
+    # ragged shapes, default and explicit tiles, all builders
+    for name, op in [
+        ("PALLAS_NT", "NT"), ("PALLAS_TNN", "NT"), ("PALLAS_NN", "NN"),
+        ("PALLAS_TN", "TN"), ("PALLAS_BNT", "BNT"), ("PALLAS_BNN", "BNN"),
+    ]:
+        for spec in candidate_grid_specs(name, op, 129, 127, 65, g=3):
+            assert verify_spec(spec) == [], (name, op, spec.name)
+
+
+def test_verify_spec_detects_overlapping_tiles():
+    from repro.analysis.coverage import verify_spec
+
+    # both grid rows write output block-row 0: overlap + a row-1 gap
+    rules = {r for r, _ in verify_spec(_square_spec(lambda i, j: (0, j)))}
+    assert "KC311" in rules and "KC310" in rules
+
+
+def test_verify_spec_sequential_axis_rewrites_are_not_overlaps():
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap, KernelGridSpec
+
+    # a k-style reduction axis revisits the same output block — that is
+    # the sequential-accumulation pattern, not a race
+    out = BlockMap(block=(128, 128), index_map=lambda i, kk: (i, 0),
+                   extent=(256, 128))
+    inp = BlockMap(block=(128, 128), index_map=lambda i, kk: (i, kk),
+                   extent=(256, 256))
+    spec = KernelGridSpec(name="acc", grid=(2, 2), in_specs=(inp,),
+                          out_spec=out, sequential=(1,))
+    assert verify_spec(spec) == []
+
+
+def test_verify_spec_detects_ragged_edge_gap():
+    from repro.analysis.coverage import verify_spec
+
+    # grid built with floor-div instead of cdiv: the ragged tail block
+    # is never written and the grid extent disagrees with cdiv
+    rules = {
+        r for r, _ in verify_spec(
+            _square_spec(lambda i, j: (i, j), grid=(1, 2))
+        )
+    }
+    assert "KC313" in rules and "KC310" in rules
+
+
+def test_verify_spec_detects_operand_overrun():
+    from repro.analysis.coverage import verify_spec
+
+    # off-by-one operand map walks past the padded extent
+    rules = {
+        r for r, _ in verify_spec(
+            _square_spec(lambda i, j: (i, j), in_map=lambda i, j: (i, j + 1))
+        )
+    }
+    assert rules == {"KC312"}
+
+
+def test_verify_spec_detects_transposed_index_map():
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap, KernelGridSpec
+
+    # operand map swaps the grid axes on a non-square grid: block (2, j)
+    # addresses row space that only has 2 blocks when j reaches 2
+    out = BlockMap(block=(128, 128), index_map=lambda i, j: (i, j),
+                   extent=(256, 384))
+    inp = BlockMap(block=(128, 128), index_map=lambda i, j: (j, i),
+                   extent=(256, 384))
+    spec = KernelGridSpec(name="tr", grid=(2, 3), in_specs=(inp,),
+                          out_spec=out)
+    rules = {r for r, _ in verify_spec(spec)}
+    assert rules == {"KC312"}
+
+
+def test_verify_spec_detects_malformed_maps():
+    from repro.analysis.coverage import verify_spec
+
+    # wrong arity for the grid
+    rules = {r for r, _ in verify_spec(_square_spec(lambda i: (i, 0)))}
+    assert "KC314" in rules
+    # wrong result rank for the block
+    rules = {r for r, _ in verify_spec(_square_spec(lambda i, j: (i,)))}
+    assert "KC314" in rules
+
+
+def test_coverage_pass_proves_every_registered_pair():
+    from repro.analysis.coverage import check_coverage
+    from repro.core.candidates import CANDIDATES
+
+    report = check_coverage(repo_root=REPO_ROOT)
+    assert report.findings == [], [f.render() for f in report.findings]
+    all_pairs = {(n, op) for n, c in CANDIDATES.items() for op in c.ops}
+    assert set(report.pairs) == all_pairs
+    tunable_pairs = {
+        (n, op) for n, c in CANDIDATES.items() for op in c.ops if c.tunable
+    }
+    # every Pallas schedule proven, at the default tile and the shortlist
+    assert set(report.proven_pairs) == tunable_pairs
+    assert report.cells >= len(tunable_pairs)
+
+
+def test_coverage_pass_detects_missing_grid_spec():
+    from repro.analysis.coverage import check_coverage
+    from repro.core.candidates import register_candidate, unregister_candidate
+
+    @register_candidate(
+        "_NO_SPEC", sim_algo="NT_DIRECT", tunable=True, ops=("NT",)
+    )
+    def _ns(a, b, block=None):  # pragma: no cover - never run
+        return a
+
+    try:
+        findings = check_coverage(shapes=((64, 64, 64, 1),)).findings
+        assert any(
+            f.rule == "KC315" and "_NO_SPEC" in f.context for f in findings
+        )
+    finally:
+        unregister_candidate("_NO_SPEC")
+
+
+# -- numerics-accumulation pass ----------------------------------------------
+
+
+def test_numerics_pass_repo_is_clean():
+    from repro.analysis import numerics
+
+    assert numerics.check_numerics(shapes=((96, 160, 224, 2),)) == []
+
+
+def test_numerics_detects_missing_preferred_element_type():
+    import jax.numpy as jnp
+
+    from repro.analysis import numerics
+    from repro.core.candidates import register_candidate, unregister_candidate
+
+    @register_candidate("_NM_LEAK", sim_algo="NT_DIRECT", ops=("NT",))
+    def _leaky(a, b):
+        return jnp.dot(a, b.T)  # bf16 accumulation
+
+    try:
+        findings = numerics.check_numerics(shapes=((96, 160, 224, 2),))
+        assert any(
+            f.rule == "NM401" and "_NM_LEAK" in f.context for f in findings
+        )
+    finally:
+        unregister_candidate("_NM_LEAK")
+
+
+def test_numerics_detects_downcast_before_accumulation():
+    import jax.numpy as jnp
+
+    from repro.analysis import numerics
+    from repro.core.candidates import register_candidate, unregister_candidate
+
+    @register_candidate("_NM_DOWN", sim_algo="NT_DIRECT", ops=("NT",))
+    def _down(a, b):
+        c = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+        d = c.astype(a.dtype)  # downcast ...
+        return (d + d).astype(a.dtype)  # ... then accumulate
+
+    try:
+        findings = numerics.check_numerics(shapes=((96, 160, 224, 2),))
+        assert any(
+            f.rule == "NM403" and "_NM_DOWN" in f.context for f in findings
+        )
+    finally:
+        unregister_candidate("_NM_DOWN")
+
+
+def test_numerics_detects_low_precision_scratch(tmp_path):
+    from repro.analysis.numerics import lint_kernel_scratch
+
+    src = textwrap.dedent(
+        """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def f(kernel, shape):
+            return pl.pallas_call(
+                kernel,
+                out_shape=shape,
+                scratch_shapes=[pltpu.VMEM((8, 128), jnp.bfloat16)],
+            )
+        """
+    )
+    p = tmp_path / "bad_kernel.py"
+    p.write_text(src)
+    findings = lint_kernel_scratch(str(p), "bad_kernel.py")
+    assert [f.rule for f in findings] == ["NM402"]
+
+
+def test_repo_kernel_scratch_is_f32():
+    from repro.analysis import numerics
+
+    kernels = os.path.join(REPO_ROOT, "src", "repro", "kernels")
+    for fn in sorted(os.listdir(kernels)):
+        if not fn.endswith(".py"):
+            continue
+        path = os.path.join(kernels, fn)
+        assert numerics.lint_kernel_scratch(path, fn) == []
+
+
+# -- poison-padding sanitizer ------------------------------------------------
+
+
+def test_sanitizer_pallas_kernels_do_not_leak_padding():
+    from repro.analysis.sanitize import sanitize_candidates
+
+    report = sanitize_candidates(
+        shapes=((65, 63, 33, 2),),
+        dtypes=("float32",),
+        poisons=("nan", "+inf"),
+        candidates=("PALLAS_NT", "PALLAS_NN", "PALLAS_BNT"),
+    )
+    assert report.findings == [], [f.render() for f in report.findings]
+    assert report.cells > 0
+
+
+def test_sanitizer_detects_seeded_padding_leak():
+    import jax.numpy as jnp
+
+    from repro.analysis.sanitize import sanitize_candidates
+    from repro.core.candidates import register_candidate, unregister_candidate
+
+    @register_candidate("_PAD_LEAK", sim_algo="NT_DIRECT", ops=("NT",))
+    def _leak(a, b):
+        # 0.0 * sum(padding) is 0 for zero padding but NaN for poisoned
+        # padding — the canonical masking bug shape
+        acc = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+        return (acc + 0.0 * a.sum()).astype(a.dtype)
+
+    try:
+        report = sanitize_candidates(
+            shapes=((33, 31, 17, 1),),
+            dtypes=("float32",),
+            poisons=("nan",),
+            candidates=("_PAD_LEAK",),
+        )
+        assert any(f.rule == "NM404" for f in report.findings), [
+            f.render() for f in report.findings
+        ]
+    finally:
+        unregister_candidate("_PAD_LEAK")
+
+
+def test_sanitizer_full_sweep_opt_in(sanitize_report):
+    # opt-in (REPRO_SANITIZE=1): every registered candidate, every op,
+    # NaN/±inf-poisoned padding, bit-identical to the zero-padded run
+    assert sanitize_report.findings == [], [
+        f.render() for f in sanitize_report.findings
+    ]
+
+
+# -- concurrency / lock-discipline pass --------------------------------------
+
+
+def test_concurrency_pass_repo_is_clean():
+    from repro.analysis import concurrency
+
+    findings = concurrency.run(REPO_ROOT)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_concurrency_detects_seeded_violations(tmp_path):
+    from repro.analysis.concurrency import check_file
+
+    src = textwrap.dedent(
+        """
+        import contextvars
+        import threading
+
+        _LOCK = threading.Lock()
+        _STATE = {}  # guarded-by: _LOCK
+        _CTX = contextvars.ContextVar("ctx", default=None)
+
+
+        def good(key, value):
+            with _LOCK:
+                _STATE[key] = value
+
+
+        def bad_mutation(key, value):
+            _STATE[key] = value  # CC501
+
+
+        def bad_ctx():
+            _CTX.set("x")  # CC503: no reset in a finally
+
+
+        def bad_thread():
+            threading.Thread(target=good).start()  # CC504: never joined
+
+
+        def bad_acquire():
+            _LOCK.acquire()  # CC505
+
+
+        class Holder:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []  # guarded-by: _lock
+                self.other = 0  # guarded-by: _missing_lock (CC502)
+
+            def ok(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def racy(self, x):
+                self.items.append(x)  # CC501
+        """
+    )
+    p = tmp_path / "seeded_cc.py"
+    p.write_text(src)
+    findings = check_file(str(p), "seeded_cc.py")
+    rules = sorted(f.rule for f in findings)
+    assert rules == ["CC501", "CC501", "CC502", "CC503", "CC504", "CC505"], [
+        f.render() for f in findings
+    ]
+    # the guarded mutations under 'with' stay clean
+    assert not any("good" in f.context or ":ok:" in f.context
+                   for f in findings)
+
+
+# -- baseline hygiene: duplicates --------------------------------------------
+
+
+def test_baseline_duplicate_fingerprints_warn_bl903(tmp_path):
+    raw = (
+        '{"entries": {"DL001:p.py:c": "first", "DL001:p.py:c": "second"}}'
+    )
+    path = tmp_path / "dup.json"
+    path.write_text(raw)
+    bl = Baseline.load(str(path))
+    assert bl.duplicates == ["DL001:p.py:c"]
+    assert bl.entries["DL001:p.py:c"] == "second"  # JSON keeps the last
+
+    f = Finding(rule="DL001", path="p.py", line=1, message="m", context="c")
+    active, suppressed = apply_baseline([f], bl)
+    assert len(suppressed) == 1
+    assert [a.rule for a in active] == ["BL903"]
+    assert active[0].severity == "warning"
+
+
+def test_write_baseline_output_is_stable_and_sorted(tmp_path):
+    path = str(tmp_path / "bl.json")
+    assert lint_main(["--passes", "dispatch", "--baseline", path,
+                      "--write-baseline"]) == 0
+    first = open(path).read()
+    assert lint_main(["--passes", "dispatch", "--baseline", path,
+                      "--write-baseline"]) == 0
+    assert open(path).read() == first  # idempotent re-write
+    entries = json.loads(first)["entries"]
+    assert list(entries) == sorted(entries)
+
+
+# -- driver: formats, stats, generated docs ----------------------------------
+
+
+def test_lint_cli_json_format(capsys):
+    assert lint_main(["--passes", "artifacts,dispatch", "--format",
+                      "json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["passes"] == ["artifacts", "dispatch"]
+    assert payload["summary"]["errors"] == 0
+    assert payload["summary"]["baselined"] > 0
+    assert payload["stats"]["files_parsed"] > 0
+    for f in payload["findings"] + payload["suppressed"]:
+        assert f["rule"] in RULES and f["fingerprint"]
+
+
+def test_lint_cli_stats_line(capsys):
+    assert lint_main(["--passes", "artifacts,dispatch", "--stats"]) == 0
+    out = capsys.readouterr().out
+    assert "repro-lint: pass dispatch:" in out
+    assert "parse cache:" in out
+
+
+def test_rules_md_catalogue_is_committed_and_current(capsys):
+    assert lint_main(["--list-rules", "--format", "md"]) == 0
+    rendered = capsys.readouterr().out
+    committed = open(os.path.join(REPO_ROOT, "docs", "lint-rules.md")).read()
+    assert rendered.rstrip("\n") == committed.rstrip("\n"), (
+        "docs/lint-rules.md is stale; regenerate with "
+        "python -m repro.analysis.lint --list-rules --format md"
+    )
+
+
+def test_rule_sections_partition_the_catalogue():
+    from repro.analysis.lint import RULE_SECTIONS
+
+    sectioned = [r for _, _, rules in RULE_SECTIONS for r in rules]
+    assert sorted(sectioned) == sorted(RULES)
+    assert len(sectioned) == len(set(sectioned))
+
+
+def test_lint_cli_rejects_md_without_list_rules():
+    with pytest.raises(SystemExit):
+        lint_main(["--format", "md"])

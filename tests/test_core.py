@@ -1,11 +1,8 @@
 """The paper's contribution: GBDT/DT/SVM learners, dataset construction,
 selector dispatch, paper-metric computation."""
 
-import os
-
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import core
 from repro.core.gbdt import DecisionTreeClassifier, GBDTClassifier, GBDTRegressor

@@ -2,16 +2,10 @@
 multi-device checks run in a subprocess with 8 forced host devices (the
 main test process must keep the single real device — see conftest)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import jax
-import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -5,7 +5,6 @@ cold-miss/warm-hit semantics with analytic fallback, the autotune policy
 spec, and retraining the paper's GBDT from autotune-collected records."""
 
 import json
-import os
 
 import jax
 import jax.numpy as jnp

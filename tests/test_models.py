@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.models import lm
-from repro.models.attention import AttnConfig, attention, attention_decode, init_attention, init_attn_cache
+from repro.models.attention import AttnConfig, attention, attention_decode, init_attention
 from repro.models.moe import MoEConfig, init_moe, moe_layer
 from repro.models.ssm import SSMConfig, init_ssm, ssm_layer
 

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro import core
-from repro.core import engine, policy as policy_mod
 from repro.core.hardware import TPU_V5E
 
 

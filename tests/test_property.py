@@ -101,6 +101,91 @@ def test_quantized_allreduce_error_bound(seed):
     assert err.max() <= bound + 1e-6
 
 
+# -- broken BlockSpec schedules must be caught by the coverage verifier ------
+
+_tiles = st.sampled_from([8, 16, 32, 128])
+_edges = st.integers(min_value=1, max_value=500)
+
+
+def _cdiv(a, b):
+    return -(-a // b)
+
+
+def _spec(grid, out, ins, sequential=()):
+    from repro.kernels.gridspec import KernelGridSpec
+
+    return KernelGridSpec(
+        name="prop", grid=grid, in_specs=tuple(ins), out_spec=out,
+        sequential=sequential,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
+def test_correct_schedules_always_verify(m, n, bm, bn):
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap
+
+    gm, gn = _cdiv(m, bm), _cdiv(n, bn)
+    bmap = BlockMap(block=(bm, bn), index_map=lambda i, j: (i, j),
+                    extent=(gm * bm, gn * bn))
+    assert verify_spec(_spec((gm, gn), bmap, [bmap])) == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
+def test_overlapping_tiles_always_fire_kc311(m, n, bm, bn):
+    from hypothesis import assume
+
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap
+
+    gm, gn = _cdiv(m, bm), _cdiv(n, bn)
+    assume(gm > 1)
+    out = BlockMap(block=(bm, bn), index_map=lambda i, j: (0, j),
+                   extent=(gm * bm, gn * bn))
+    inp = BlockMap(block=(bm, bn), index_map=lambda i, j: (i, j),
+                   extent=(gm * bm, gn * bn))
+    rules = {r for r, _ in verify_spec(_spec((gm, gn), out, [inp]))}
+    assert "KC311" in rules
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
+def test_ragged_edge_floor_grid_always_fires(m, n, bm, bn):
+    from hypothesis import assume
+
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap
+
+    # ragged edge: floor-div drops the tail block (m < bm would make the
+    # floor grid empty, which the verifier rejects as KC314 instead)
+    assume(m % bm != 0 and m > bm)
+    gm, gn = _cdiv(m, bm), _cdiv(n, bn)
+    bmap = BlockMap(block=(bm, bn), index_map=lambda i, j: (i, j),
+                    extent=(gm * bm, gn * bn))
+    rules = {r for r, _ in verify_spec(_spec((m // bm, gn), bmap, [bmap]))}
+    assert "KC310" in rules and "KC313" in rules
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
+def test_transposed_operand_map_always_fires_kc312(m, n, bm, bn):
+    from hypothesis import assume
+
+    from repro.analysis.coverage import verify_spec
+    from repro.kernels.gridspec import BlockMap
+
+    gm, gn = _cdiv(m, bm), _cdiv(n, bn)
+    assume(gm != gn)  # on a square grid the swap is harmless
+    out = BlockMap(block=(bm, bn), index_map=lambda i, j: (i, j),
+                   extent=(gm * bm, gn * bn))
+    inp = BlockMap(block=(bm, bn), index_map=lambda i, j: (j, i),
+                   extent=(gm * bm, gn * bn))
+    rules = {r for r, _ in verify_spec(_spec((gm, gn), out, [inp]))}
+    assert "KC312" in rules
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     b=st.integers(1, 3),

@@ -25,9 +25,10 @@ and re-run by the CI ``serve-load-smoke`` job):
   * top-level and per-class schema keys hold in both files;
   * every request class, decode-batch bucket, and prefill-length bucket
     in the committed report is still produced by the fresh run;
-  * every class's fresh dispatch table routes the batched attention
-    contractions (BNT *and* BNN rows) — i.e. per-class policy scoping
-    still reaches the attention GEMMs;
+  * every class's fresh dispatch table routes the paired attention plan
+    op (``ATTN`` rows) — i.e. per-class policy scoping still reaches the
+    fused-vs-unfused attention decision (the unfused arm's BNT/BNN
+    sub-ops appear only when that arm wins, so they are not required);
   * the fresh run made zero post-warmup cold-miss measurements.
 
   PYTHONPATH=src python -m benchmarks.bench_drift \\
@@ -62,7 +63,7 @@ REQUIRED_SERVE_TOP_KEYS = frozenset(
 REQUIRED_SERVE_CLASS_KEYS = frozenset(
     {"policy", "requests", "tokens", "p50_ms", "p99_ms", "dispatch"}
 )
-REQUIRED_SERVE_DISPATCH_OPS = ("BNT", "BNN")  # batched attention contractions
+REQUIRED_SERVE_DISPATCH_OPS = ("ATTN",)  # the paired attention plan key
 
 ShapeKey = Tuple[str, int, int, int, int]  # (op, g, m, n, k)
 
@@ -173,8 +174,8 @@ def check_serve_drift(fresh: Dict, committed: Dict) -> List[str]:
         for op in REQUIRED_SERVE_DISPATCH_OPS:
             if not row["dispatch"].get(op):
                 errors.append(
-                    f"fresh class {cls!r} has no {op} dispatch rows — batched "
-                    "attention contractions no longer route through its policy"
+                    f"fresh class {cls!r} has no {op} dispatch rows — the "
+                    "attention plan no longer routes through its policy"
                 )
 
     misses = fresh["cold_misses_after_warmup"]

@@ -5,10 +5,12 @@ the current schema versions and their declared migration paths — pure
 stdlib, no jax import, so CI can gate committed files without the
 accelerator stack:
 
-  * measurement caches (``core.measure`` v4 key grammar; older versions
-    validated against *their* grammar since they migrate on load, newer
-    rejected);
-  * selector artifacts (``core.selector`` v4 payload layout, same
+  * measurement caches (``core.measure`` v5 key grammar — the v4 layout
+    with ``ATTN`` admitted in the op slot for the paired
+    fused-vs-unfused rows; older versions validated against *their*
+    grammar since they migrate on load, newer rejected);
+  * selector artifacts (``core.selector`` v5 payload layout — the ATTN
+    binary pair plus 2-part ``BQxBK`` tile-config keys — same
     older-migrates/newer-rejects rule);
   * ``benchmarks/BENCH_kernels.json`` sweep grids (row schema, op/config
     grammar, exactly one ``best`` row per cell);
@@ -28,11 +30,11 @@ from typing import Dict, List, Optional, Sequence
 
 from .findings import Finding
 from .schemas import (
-    BATCHED_OPS,
     BENCH_KERNELS_ROW_KEYS,
     BENCH_KERNELS_TOP_KEYS,
     BENCH_SERVE_CLASS_KEYS,
     BENCH_SERVE_TOP_KEYS,
+    GROUPED_OPS,
     MEASURE_SCHEMA_VERSION,
     OPS,
     SELECTOR_SCHEMA_VERSION,
@@ -289,7 +291,7 @@ def _validate_bench_kernels(payload: Dict, path: str, add) -> None:
             add("AR204", f"{ctx} has non-positive extents "
                 f"(g={g}, m={m}, n={n}, k={k})", f"{ctx}:extents")
             continue
-        if g != 1 and op not in BATCHED_OPS:
+        if g != 1 and op not in GROUPED_OPS:
             add("AR204",
                 f"{ctx} gives unbatched op {op!r} batch extent g={g}",
                 f"{ctx}:batch")

@@ -1,7 +1,8 @@
 """Kernel-contract checker: every candidate's shape/dtype contract, traced.
 
-Every registered candidate promises ``f(a, b) -> c`` in its op's storage
-layout (``core.measure.operand_shapes``) with the output in the input
+Every registered candidate promises ``f(*operands) -> c`` in its op's
+storage layout (``core.measure.operand_shapes`` — two GEMM operands, or
+q/k/v for the fused-attention plan ops) with the output in the input
 dtype.  ``jax.eval_shape`` proves that promise abstractly — no FLOP is
 executed, no accelerator needed — over a deliberately *ragged* shape
 grid (extents off the 128 MXU edge), because padding/clamping bugs hide
@@ -54,6 +55,8 @@ class ContractReport:
 
 
 def _expected_out(op: str, m: int, n: int, k: int, g: int):
+    if op == "ATTN":  # q:(g, m, k) k/v:(g, n, k) -> (g, m, k); k is d_head
+        return (g, m, k)
     return (g, m, n) if op in ("BNT", "BNN") else (m, n)
 
 
@@ -84,8 +87,13 @@ def check_contracts(
 
     from repro.core.candidates import CANDIDATES, candidate_op_pairs
     from repro.core.measure import operand_shapes
+    from repro.core.opkey import GROUPED_OPS
     from repro.kernels.common import MXU_EDGE, round_up
-    from repro.kernels.tiling import fits_vmem
+    from repro.kernels.tiling import (
+        DEFAULT_VMEM_BUDGET_BYTES,
+        attn_vmem_bytes,
+        fits_vmem,
+    )
 
     report = ContractReport()
     report.pairs = candidate_op_pairs()
@@ -102,8 +110,8 @@ def check_contracts(
 
         for op in cand.ops:
             for (m, n, k, g) in shapes:
-                g = g if op in ("BNT", "BNN") else 1
-                sa, sb = operand_shapes(op, m, n, k, g)
+                g = g if op in GROUPED_OPS else 1
+                op_shapes = operand_shapes(op, m, n, k, g)
                 want = _expected_out(op, m, n, k, g)
                 for dtype in dtypes:
                     if cand.dtypes is not None and dtype not in cand.dtypes:
@@ -117,9 +125,13 @@ def check_contracts(
                     if space:
                         configs.append(space[0])
                     # KC302: every enumerated config must be statically
-                    # admissible, not just the one we trace
+                    # admissible, not just the one we trace.  Attention
+                    # configs are (bq, bk) over the (m, n) axes with the
+                    # head dim riding whole; their working set is the
+                    # flash kernel's VMEM residency, not a matmul tile's.
+                    cfg_axes = (m, n) if cand.config_arity == 2 else (m, n, k)
                     for cfg in space:
-                        for edge, dim in zip(cfg, (m, n, k)):
+                        for edge, dim in zip(cfg, cfg_axes):
                             if edge <= 0 or edge % MXU_EDGE:
                                 add(
                                     "KC302",
@@ -138,7 +150,13 @@ def check_contracts(
                                     f"of its axis (dim {dim})",
                                     f"tile:{name}:{op}:{m}x{n}x{k}",
                                 )
-                        if not fits_vmem(cfg, dsize):
+                        over_budget = (
+                            attn_vmem_bytes(cfg, k, dsize)
+                            > DEFAULT_VMEM_BUDGET_BYTES
+                            if cand.config_arity == 2
+                            else not fits_vmem(cfg, dsize)
+                        )
+                        if over_budget:
                             add(
                                 "KC302",
                                 f"candidate {name!r} enumerates tile {cfg} "
@@ -152,13 +170,14 @@ def check_contracts(
                             f"contract:{name}:{op}:{m}x{n}x{k}x{g}:{dtype}"
                             f":{'default' if cfg is None else 'tiled'}"
                         )
-                        a = jax.ShapeDtypeStruct(sa, jnp.dtype(dtype))
-                        b = jax.ShapeDtypeStruct(sb, jnp.dtype(dtype))
+                        structs = tuple(
+                            jax.ShapeDtypeStruct(s, jnp.dtype(dtype))
+                            for s in op_shapes
+                        )
                         try:
                             out = jax.eval_shape(
-                                lambda x, y, _c=cfg: cand.run(x, y, _c),
-                                a,
-                                b,
+                                lambda *xs, _c=cfg: cand.run(*xs, config=_c),
+                                *structs,
                             )
                         except Exception as exc:  # trace failure IS a finding
                             add(

@@ -207,6 +207,7 @@ def check_coverage(
     dsizes: Iterable[int] = (4, 2),
 ) -> CoverageReport:
     from repro.core.candidates import CANDIDATES
+    from repro.core.opkey import GROUPED_OPS
     from repro.kernels.gridspec import GRID_SPEC_BUILDERS, candidate_grid_specs
     from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
 
@@ -241,8 +242,7 @@ def check_coverage(
                 continue
             pair_clean = True
             for m, n, k, g in shapes:
-                batched = op.startswith("B")
-                gg = g if batched else 1
+                gg = g if op in GROUPED_OPS else 1
                 configs = [None]
                 seen_keys = {DEFAULT_CONFIG_KEY}
                 for dsize in dsizes:

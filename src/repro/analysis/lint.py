@@ -260,6 +260,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         "registered candidate in interpret mode — slower)",
     )
     parser.add_argument(
+        "--sanitize-full",
+        action="store_true",
+        help="run the sanitizer over the full nightly grid (all pairs x "
+        "dtypes x every shortlist tile x extra ragged shapes; implies "
+        "--sanitize, much slower — meant for the scheduled CI job)",
+    )
+    parser.add_argument(
         "--stats",
         action="store_true",
         help="print per-pass wall time and parse-cache counters",
@@ -297,11 +304,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     repo_root = os.path.abspath(args.root) if args.root else _repo_root()
     stats: Dict[str, float] = {}
     findings = run_passes(passes, repo_root, jobs=args.jobs, stats=stats)
+    if args.sanitize_full:
+        args.sanitize = True
     if args.sanitize:
         from . import sanitize
 
         t0 = time.perf_counter()
-        findings.extend(sanitize.run(repo_root))
+        findings.extend(sanitize.run(repo_root, full=args.sanitize_full))
         stats["sanitize"] = time.perf_counter() - t0
 
     baseline: Optional[Baseline] = None

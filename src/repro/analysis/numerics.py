@@ -15,7 +15,12 @@ everywhere); this pass enforces it by lint:
          downcast before the final accumulation throws away the mantissa
          the f32 accumulator exists to keep.  The terminal
          ``astype(out_dtype)`` store is fine — its consumer is a store,
-         not an arithmetic op.
+         not an arithmetic op.  A downcast feeding a ``dot_general``
+         that itself carries ``preferred_element_type=float32`` is also
+         fine: that is NM401's blessed mixed-precision pattern — a
+         quantized MXU *operand* re-accumulated in f32 (the flash
+         kernels' ``probs.astype(v.dtype)`` before the PV mix), not a
+         lost accumulator.
   NM402  AST check over ``kernels/*.py``: every ``scratch_shapes`` entry
          (the VMEM accumulators) must be ``pltpu.VMEM(<shape>,
          jnp.float32)``
@@ -113,17 +118,25 @@ def _check_traced(fn, avals, where: str) -> List[Tuple[str, str]]:
                 ):
                     out = eqn.outvars[0]
                     for user in consumers.get(id(out), []):
-                        if user.primitive.name in _ACCUM_PRIMS:
-                            problems.append(
-                                (
-                                    "NM403",
-                                    f"{where}: f32 value downcast to "
-                                    f"{jnp.dtype(new_dtype).name} then fed "
-                                    f"to {user.primitive.name}: downcast "
-                                    "before accumulation",
-                                )
+                        uname = user.primitive.name
+                        if uname not in _ACCUM_PRIMS:
+                            continue
+                        if uname == "dot_general":
+                            upet = user.params.get("preferred_element_type")
+                            if upet is not None and jnp.dtype(upet) == f32:
+                                # quantized MXU operand, f32 accumulation:
+                                # the mixed-precision pattern NM401 blesses
+                                continue
+                        problems.append(
+                            (
+                                "NM403",
+                                f"{where}: f32 value downcast to "
+                                f"{jnp.dtype(new_dtype).name} then fed "
+                                f"to {uname}: downcast "
+                                "before accumulation",
                             )
-                            break
+                        )
+                        break
     return problems
 
 
@@ -137,6 +150,7 @@ def check_numerics(
 
     from repro.core.candidates import CANDIDATES
     from repro.core.measure import operand_shapes
+    from repro.core.opkey import GROUPED_OPS
     from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
 
     from .contracts import _candidate_location
@@ -149,11 +163,10 @@ def check_numerics(
         path, line = _candidate_location(cand, repo_root)
         for op in cand.ops:
             for m, n, k, g in shapes:
-                gg = g if op.startswith("B") else 1
-                sa, sb = operand_shapes(op, m, n, k, g=gg)
-                avals = (
-                    jax.ShapeDtypeStruct(sa, dtype),
-                    jax.ShapeDtypeStruct(sb, dtype),
+                gg = g if op in GROUPED_OPS else 1
+                avals = tuple(
+                    jax.ShapeDtypeStruct(s, dtype)
+                    for s in operand_shapes(op, m, n, k, g=gg)
                 )
                 space = cand.config_space(m, n, k, dtype.dtype.itemsize)
                 configs = [None] + ([tuple(space[0])] if space else [])
@@ -162,7 +175,7 @@ def check_numerics(
                     where = f"{name}:{op}:{m}x{n}x{k}x{gg}:{ck}"
                     try:
                         problems = _check_traced(
-                            lambda a, b, _c=cfg: cand.run(a, b, _c),
+                            lambda *xs, _c=cfg: cand.run(*xs, config=_c),
                             avals,
                             where,
                         )

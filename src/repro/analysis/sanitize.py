@@ -17,6 +17,14 @@ pad regions are exactly the ones we control), then:
     elements ARE accumulated, by design, and zero is the masking the
     kernels rely on
 
+The fused-attention plan ops follow the same taxonomy with attention's
+axes: query rows >= m and V head-dim cols >= dh are output-axis padding
+(poisoned); the head-dim pad of Q and K is contracted in ``Q K^T``
+(zeros); and the kv extent stays *logical* — key rows are
+softmax-accumulated, so the kernel itself pads and validity-masks them
+(its ``lengths`` operand + V zeroing, exercised directly by
+``tests/test_attention_fused.py``).
+
 Run the candidate on the poisoned operands and on an identical
 zero-filled pair.  The logical [:m, :n] region must be **bit-identical**
 between the two runs — one poisoned lane anywhere in the reduction makes
@@ -39,6 +47,11 @@ __all__ = ["SanitizeReport", "sanitize_candidates", "run"]
 
 # one ragged cell: every axis unaligned so every axis has a pad region
 DEFAULT_SHAPES: Tuple[Tuple[int, int, int, int], ...] = ((129, 127, 65, 3),)
+# the nightly full grid adds a second ragged cell with a different
+# alignment profile (m under one tile, n spanning several, tiny k)
+FULL_SHAPES: Tuple[Tuple[int, int, int, int], ...] = DEFAULT_SHAPES + (
+    (63, 300, 33, 2),
+)
 DEFAULT_POISONS: Tuple[str, ...] = ("nan", "+inf", "-inf")
 
 
@@ -49,16 +62,31 @@ class SanitizeReport:
     cells: int = 0
 
 
-def _padded_extents(m: int, n: int, k: int, cfg):
-    from repro.kernels.common import DEFAULT_BLOCK, normalize_block, round_up
+def _padded_extents(m: int, n: int, k: int, cfg, op: str = "NT"):
+    from repro.kernels.common import (
+        DEFAULT_BLOCK,
+        MXU_EDGE,
+        normalize_block,
+        round_up,
+    )
 
+    if op == "ATTN":
+        # queries pad to the bq edge (output axis), the head dim to the
+        # MXU edge (contraction axis); the kv extent stays *logical* —
+        # key rows are softmax-accumulated, so the kernel itself must
+        # pad and validity-mask them (attention_fused's lengths operand),
+        # which a pre-padded operand would hide from this check.
+        bq, _bk = normalize_block(
+            (m, n), cfg, (DEFAULT_BLOCK[0], DEFAULT_BLOCK[2])
+        )
+        return round_up(m, bq), n, round_up(max(k, 1), MXU_EDGE)
     bm, bn, bk = normalize_block((m, n, k), cfg, DEFAULT_BLOCK)
     return round_up(m, bm), round_up(n, bn), round_up(k, bk)
 
 
 def _build_operands(op, m, n, k, g, mp, np_, kp, dtype, poison, rng):
-    """Pre-padded (A, B) with poison in output-axis padding and zeros in
-    contraction-axis padding.  Returns numpy arrays."""
+    """Pre-padded operand tuple with poison in output-axis padding and
+    zeros in contraction-axis padding.  Returns numpy arrays."""
     import numpy as np
 
     def body(rows, cols):
@@ -106,21 +134,37 @@ def _build_operands(op, m, n, k, g, mp, np_, kp, dtype, poison, rng):
             b[gi, :k, :n] = body(k, n)
             b[gi, k:, :n] = 0
         return a, b
+    if op == "ATTN":
+        # q:(g, mp, kp) k:(g, n, kp) v:(g, n, kp) — (np_ == n here, see
+        # _padded_extents).  Poisonable pads: q's query rows >= m (their
+        # output rows are sliced off) and v's head-dim cols >= k (their
+        # output cols are sliced off).  Zero pads: every head-dim col of
+        # q and k_ (contracted in Q K^T).
+        q = np.full((g, mp, kp), poison, dtype)
+        k_ = np.zeros((g, n, kp), dtype)
+        v = np.full((g, n, kp), poison, dtype)
+        for gi in range(g):
+            q[gi, :m, :k] = body(m, k)
+            q[gi, :m, k:] = 0
+            k_[gi, :, :k] = body(n, k)
+            v[gi, :, :k] = body(n, k)
+        return q, k_, v
     raise ValueError(f"unknown op {op!r}")
 
 
-def _logical(out, op, m, n):
+def _logical(out, op, m, n, k):
+    if op == "ATTN":  # out:(g, m, dh) with dh == k
+        return out[:, :m, :k]
     if op.startswith("B"):
         return out[:, :m, :n]
     return out[:m, :n]
 
 
-def _reference(op, a_live, b_live):
+def _reference(op, *live):
     """f64 oracle on the *live* (unpadded) operand regions."""
     import numpy as np
 
-    a64 = np.asarray(a_live, np.float64)
-    b64 = np.asarray(b_live, np.float64)
+    a64, b64 = np.asarray(live[0], np.float64), np.asarray(live[1], np.float64)
     if op == "NT":
         return a64 @ b64.T
     if op == "NN":
@@ -131,6 +175,12 @@ def _reference(op, a_live, b_live):
         return np.einsum("gmk,gnk->gmn", a64, b64)
     if op == "BNN":
         return np.einsum("gmk,gkn->gmn", a64, b64)
+    if op == "ATTN":
+        v64 = np.asarray(live[2], np.float64)
+        s = np.einsum("gmd,gnd->gmn", a64, b64)
+        p = np.exp(s - s.max(axis=-1, keepdims=True))
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.einsum("gmn,gnd->gmd", p, v64)
     raise ValueError(f"unknown op {op!r}")
 
 
@@ -145,6 +195,12 @@ def _live(arr, op, m, n, k):
         return arr[0][:, :m, :k], arr[1][:, :n, :k]
     if op == "BNN":
         return arr[0][:, :m, :k], arr[1][:, :k, :n]
+    if op == "ATTN":
+        return (
+            arr[0][:, :m, :k],
+            arr[1][:, :, :k],
+            arr[2][:, :, :k],
+        )
     raise ValueError(f"unknown op {op!r}")
 
 
@@ -154,11 +210,13 @@ def sanitize_candidates(
     poisons: Sequence[str] = DEFAULT_POISONS,
     repo_root: Optional[str] = None,
     candidates: Optional[Sequence[str]] = None,
+    full: bool = False,
 ) -> SanitizeReport:
     import numpy as np
 
     import jax.numpy as jnp
     from repro.core.candidates import CANDIDATES
+    from repro.core.opkey import GROUPED_OPS
     from repro.kernels.tiling import DEFAULT_CONFIG_KEY, config_key
 
     from .contracts import _candidate_location
@@ -174,31 +232,40 @@ def sanitize_candidates(
         for op in cand.ops:
             report.pairs.append((name, op))
             for m, n, k, g in shapes:
-                gg = g if op.startswith("B") else 1
+                gg = g if op in GROUPED_OPS else 1
                 for dtype_name in dtypes:
                     if cand.dtypes is not None and dtype_name not in cand.dtypes:
                         continue
                     dtype = jnp.dtype(dtype_name)
                     space = cand.config_space(m, n, k, dtype.itemsize)
-                    configs = [None] + ([tuple(space[0])] if space else [])
+                    if full:
+                        # nightly grid: every shortlist tile, not just the
+                        # roofline front-runner
+                        configs = [None] + [tuple(c) for c in space]
+                    else:
+                        configs = [None] + (
+                            [tuple(space[0])] if space else []
+                        )
                     for cfg in configs:
                         ck = (DEFAULT_CONFIG_KEY if cfg is None
                               else config_key(cfg))
-                        mp, np_, kp = _padded_extents(m, n, k, cfg)
+                        mp, np_, kp = _padded_extents(m, n, k, cfg, op=op)
                         cell = f"{name}:{op}:{m}x{n}x{k}x{gg}:{dtype_name}:{ck}"
                         report.cells += 1
                         # the zero-filled twin is the leak oracle
-                        az, bz = _build_operands(
+                        zs = _build_operands(
                             op, m, n, k, gg, mp, np_, kp, dtype_name, 0.0,
                             np.random.default_rng(20260809),
                         )
                         out_z = np.asarray(
-                            _logical(cand.run(jnp.asarray(az),
-                                              jnp.asarray(bz), cfg),
-                                     op, m, n)
+                            _logical(
+                                cand.run(
+                                    *(jnp.asarray(z) for z in zs), config=cfg
+                                ),
+                                op, m, n, k,
+                            )
                         )
-                        a_live, b_live = _live((az, bz), op, m, n, k)
-                        ref = _reference(op, a_live, b_live)
+                        ref = _reference(op, *_live(zs, op, m, n, k))
                         tol = 1e-5 if dtype_name == "float32" else 2e-2
                         if not np.allclose(
                             np.asarray(out_z, np.float64), ref,
@@ -219,15 +286,19 @@ def sanitize_candidates(
                             )
                             continue
                         for plabel in poisons:
-                            ap, bp = _build_operands(
+                            ps = _build_operands(
                                 op, m, n, k, gg, mp, np_, kp, dtype_name,
                                 poison_values[plabel],
                                 np.random.default_rng(20260809),
                             )
                             out_p = np.asarray(
-                                _logical(cand.run(jnp.asarray(ap),
-                                                  jnp.asarray(bp), cfg),
-                                         op, m, n)
+                                _logical(
+                                    cand.run(
+                                        *(jnp.asarray(p) for p in ps),
+                                        config=cfg,
+                                    ),
+                                    op, m, n, k,
+                                )
                             )
                             if not np.array_equal(out_p, out_z):
                                 bad = int(
@@ -252,5 +323,11 @@ def sanitize_candidates(
     return report
 
 
-def run(repo_root: Optional[str] = None, cache=None) -> List[Finding]:
-    return sanitize_candidates(repo_root=repo_root).findings
+def run(
+    repo_root: Optional[str] = None, cache=None, full: bool = False
+) -> List[Finding]:
+    return sanitize_candidates(
+        shapes=FULL_SHAPES if full else DEFAULT_SHAPES,
+        repo_root=repo_root,
+        full=full,
+    ).findings

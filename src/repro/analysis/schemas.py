@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 __all__ = [
     "OPS",
     "BATCHED_OPS",
+    "GROUPED_OPS",
     "MEASURE_SCHEMA_VERSION",
     "SELECTOR_SCHEMA_VERSION",
     "SERVE_SCHEMA_VERSION",
@@ -30,14 +31,15 @@ __all__ = [
     "parse_cache_key",
 ]
 
-# mirrors repro.core.opkey.OPS / BATCHED_OPS
-OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN")
+# mirrors repro.core.opkey.OPS / BATCHED_OPS / GROUPED_OPS
+OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN", "ATTN")
 BATCHED_OPS: Tuple[str, ...] = ("BNT", "BNN")
+GROUPED_OPS: Tuple[str, ...] = ("BNT", "BNN", "ATTN")
 
 # mirrors repro.core.measure.MEASURE_SCHEMA_VERSION
-MEASURE_SCHEMA_VERSION = 4
+MEASURE_SCHEMA_VERSION = 5
 # mirrors repro.core.selector.SCHEMA_VERSION
-SELECTOR_SCHEMA_VERSION = 4
+SELECTOR_SCHEMA_VERSION = 5
 # mirrors benchmarks.serve_load.SCHEMA_VERSION
 SERVE_SCHEMA_VERSION = 1
 
@@ -71,8 +73,10 @@ BENCH_SERVE_CLASS_KEYS = frozenset(
 
 def parse_config_key(key: str) -> Optional[Tuple[int, ...]]:
     """Tile-config key grammar (mirrors ``kernels.tiling.parse_config_key``
-    but accepts both the 3-D matmul and 2-D transpose arities).
-    ``'default'`` maps to None; raises ``ValueError`` on malformed keys."""
+    but accepts both arities: 3-part matmul ``BMxBNxBK`` keys and 2-part
+    keys — the transpose kernel's ``RxC`` and the fused attention
+    kernel's ``BQxBK``).  ``'default'`` maps to None; raises
+    ``ValueError`` on malformed keys."""
     if key == DEFAULT_CONFIG_KEY:
         return None
     try:
@@ -108,7 +112,7 @@ def parse_cache_key(
         raise ValueError(f"cache key {s!r} names unknown op {op!r}")
     if m < 1 or n < 1 or k < 1 or g < 1:
         raise ValueError(f"cache key {s!r} has non-positive extents")
-    if g != 1 and op not in BATCHED_OPS:
+    if g != 1 and op not in GROUPED_OPS:
         raise ValueError(
             f"cache key {s!r} gives unbatched op {op!r} batch extent g={g}"
         )

@@ -93,8 +93,10 @@ class Candidate:
     extra_memory: bool  # needs room for B^T (paper's OOM guard)
     platforms: Tuple[str, ...] = ALL_PLATFORMS  # backends it may run on
     dtypes: Optional[Tuple[str, ...]] = None  # None => any dtype
-    tunable: bool = False  # fn accepts a block=(bm, bn, bk) tile config
+    tunable: bool = False  # fn accepts a block=... tile config keyword
     ops: Tuple[str, ...] = ("NT",)  # op kinds the fn implements (opkey.OPS)
+    arity: int = 2  # operand count (2 for the GEMMs, 3 for attention q/k/v)
+    config_arity: int = 3  # tile-tuple length ((bm,bn,bk) GEMM, (bq,bk) attn)
 
     def supports(
         self, platform: Optional[str] = None, dtype=None, config=None,
@@ -117,7 +119,7 @@ class Candidate:
             from repro.kernels.tiling import validate_config
 
             try:
-                validate_config(config)
+                validate_config(config, arity=self.config_arity)
             except ValueError:
                 return False
         return True
@@ -130,25 +132,45 @@ class Candidate:
         dsize: int = 4,
         max_configs: int = 4,
         hardware=None,
-    ) -> Tuple[Tuple[int, int, int], ...]:
+    ) -> Tuple[Tuple[int, ...], ...]:
         """Admissible tile configs for this shape (empty for non-tunable
         candidates) — the autotune sweep list, pruned by the roofline of
         ``hardware`` (the *measuring* policy's descriptor, so the
-        shortlist is ranked for the machine actually being timed)."""
+        shortlist is ranked for the machine actually being timed).
+        Attention candidates (``config_arity == 2``) read the extents as
+        (m queries, n keys, k head-dim) and enumerate (bq, bk) pairs."""
         if not self.tunable:
             return ()
+        if self.config_arity == 2:
+            from repro.kernels.tiling import attn_config_space
+
+            return attn_config_space(
+                m, n, k, dsize, max_configs=max_configs, hardware=hardware
+            )
         from repro.kernels.tiling import shortlist_tile_configs
 
         return shortlist_tile_configs(
             m, n, k, dsize, max_configs=max_configs, hardware=hardware
         )
 
-    def run(self, a: jax.Array, b: jax.Array, config=None) -> jax.Array:
+    def run(self, *args, config=None) -> jax.Array:
         """Execute the candidate, at an explicit tile config when one is
-        given (tunable candidates only — the kernel validates/clamps)."""
+        given (tunable candidates only — the kernel validates/clamps).
+
+        Operand count is ``self.arity`` (2 for the GEMMs, 3 for the
+        attention q/k/v).  For back-compat the config may also ride as
+        one extra positional argument after the operands — the historic
+        ``run(a, b, cfg)`` form."""
+        if len(args) == self.arity + 1 and config is None:
+            args, config = args[:-1], args[-1]
+        if len(args) != self.arity:
+            raise TypeError(
+                f"candidate {self.name!r} takes {self.arity} operands, "
+                f"got {len(args)}"
+            )
         if config is None or not self.tunable:
-            return self.fn(a, b)
-        return self.fn(a, b, block=tuple(config))
+            return self.fn(*args)
+        return self.fn(*args, block=tuple(config))
 
 
 # The registry.  ``CANDIDATES`` is the same dict object (kept under its
@@ -167,6 +189,8 @@ def register_candidate(
     dtypes: Optional[Tuple[str, ...]] = None,
     tunable: bool = False,
     ops: Tuple[str, ...] = ("NT",),
+    arity: int = 2,
+    config_arity: int = 3,
 ):
     """Decorator registering ``fn(a, b) -> c`` as a dispatch candidate.
 
@@ -201,6 +225,8 @@ def register_candidate(
             dtypes=tuple(dtypes) if dtypes is not None else None,
             tunable=tunable,
             ops=tuple(check_op(o) for o in ops),
+            arity=int(arity),
+            config_arity=int(config_arity),
         )
         return fn
 
@@ -275,13 +301,23 @@ def candidate_fits_memory(
     (double-buffered operand blocks + f32 accumulator — one batch slice's
     working set, ``kernels/tiling.py``)."""
     if config is not None and cand.tunable:
-        from repro.kernels.tiling import fits_vmem, validate_config
+        from repro.kernels.tiling import (
+            DEFAULT_VMEM_BUDGET_BYTES,
+            attn_vmem_bytes,
+            fits_vmem,
+            validate_config,
+        )
 
         try:
-            validate_config(config)
+            validate_config(config, arity=cand.config_arity)
         except ValueError:
             return False
-        if not fits_vmem(config, dsize):
+        if cand.config_arity == 2:
+            # attention (bq, bk): the fused kernel's working set carries
+            # both GEMMs of the subgraph and the head dim (= the OpKey's k)
+            if attn_vmem_bytes(config, k, dsize) > DEFAULT_VMEM_BUDGET_BYTES:
+                return False
+        elif not fits_vmem(config, dsize):
             return False
     if not cand.extra_memory:
         return True
@@ -497,6 +533,48 @@ def _pallas_bnn(a, b, block=None):
     return ops.matmul_bnn(a, b, block=block)
 
 
+# -- the attention subgraph op: fused flash kernel vs the unfused pair --------
+
+
+@register_candidate(
+    "UNFUSED_ATTN",
+    sim_algo="ATTN_UNFUSED",
+    distributed_safe=True,
+    ops=("ATTN",),
+    arity=3,
+)
+def unfused_attn(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Unfused reference: batched NT logits, f32 XLA softmax, batched NN
+    mix — the exact composition the per-op dispatch path runs, but as a
+    *plain XLA* pipeline with no dispatch re-entry (so measuring this
+    candidate under an autotuning policy can never recurse into another
+    measurement).  q:(g,m,dh), k/v:(g,n,dh) -> (g,m,dh)."""
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+
+
+@register_candidate(
+    "FUSED_ATTN",
+    sim_algo="ATTN_FUSED",
+    platforms=("tpu", "cpu"),
+    tunable=True,
+    ops=("ATTN",),
+    arity=3,
+    config_arity=2,
+)
+def _fused_attn(q, k, v, block=None):
+    from repro.kernels.attention_fused import attention_fused
+
+    return attention_fused(q, k, v, block=block)
+
+
 # the paper's binary setting (the forward op)
 PAPER_PAIR: Tuple[str, str] = ("XLA_NT", "XLA_TNN")
 
@@ -510,6 +588,7 @@ BINARY_PAIRS_BY_OP: Dict[str, Tuple[str, str]] = {
     "TN": ("XLA_TN", "PALLAS_TN"),
     "BNT": ("XLA_BNT", "PALLAS_BNT"),
     "BNN": ("XLA_BNN", "PALLAS_BNN"),
+    "ATTN": ("UNFUSED_ATTN", "FUSED_ATTN"),
 }
 
 # The always-runnable reference candidate per op (distributed-safe, every
@@ -521,6 +600,7 @@ DEFAULT_BY_OP: Dict[str, str] = {
     "TN": "XLA_TN",
     "BNT": "XLA_BNT",
     "BNN": "XLA_BNN",
+    "ATTN": "UNFUSED_ATTN",
 }
 assert set(DEFAULT_BY_OP) == set(OPS)
 assert set(BATCHED_OPS) <= set(BINARY_PAIRS_BY_OP)

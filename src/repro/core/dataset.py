@@ -165,7 +165,7 @@ def collect_analytic(
 def _bench(fn, a, b, reps: int, warmup: int = 1) -> float:
     from .measure import bench_fn
 
-    return bench_fn(fn, a, b, reps, warmup=warmup, stat="min")
+    return bench_fn(fn, a, b, reps=reps, warmup=warmup, stat="min")
 
 
 def collect_measured(

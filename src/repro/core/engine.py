@@ -15,6 +15,16 @@ one batch extent ``g`` and the policy selects over the batched candidate
 sets, so one ``use_policy(...)`` scope governs dense *and* attention
 GEMMs in train and serve.
 
+``dispatch_attention(q, k, v, ...)`` raises the decision from one op to
+a *plan* over the whole attention subgraph: the policy answers the
+paired ``ATTN`` OpKey with either the fused flash kernel at a learned
+``(bq, bk)`` tile (``kernels/attention_fused.py`` — the logits matrix
+never touches HBM) or the existing unfused plan, whose ``BNT`` and
+``BNN`` sub-GEMMs are then dispatched under their own per-op keys.  The
+fallback chain terminates at the unfused plan, so a faulted or
+quarantined fused kernel degrades to exactly the pair of batched
+dispatches the model ran before fusion existed.
+
 Both entry points are ``custom_vjp``-wrapped: the backward rules rebuild
 gradient OpKeys and re-enter dispatch — the 2-D op space {NT, NN, TN} is
 closed under differentiation, and the batched space {BNT, BNN} is closed
@@ -39,6 +49,7 @@ import warnings
 from typing import Optional
 
 import jax
+import numpy as np
 
 from . import faults
 from .candidates import DEFAULT_BY_OP, fallback_chain, get_candidate
@@ -58,6 +69,7 @@ from .policy import (
 
 __all__ = [
     "dispatch",
+    "dispatch_attention",
     "dispatch_batched",
     "dispatch_report",
     "health_report",
@@ -79,9 +91,14 @@ class DispatchError(RuntimeError):
 
 POLICY_SPEC_HELP = (
     "dispatch policy: model[:artifact.json] | fixed:<NAME>[@BMxBNxBK] | "
-    "fixed:nt=<NAME>[@cfg],nn=...,tn=...,bnt=...,bnn=... | analytic | "
+    "fixed:nt=<NAME>[@cfg],nn=...,tn=...,bnt=...,bnn=...,"
+    "attn=<fused|unfused>[@BQxBK] | analytic | "
     "cascade:<A,B,...> | autotune[:cache.json]"
 )
+
+# ``fixed:attn=...`` accepts the plan-member aliases alongside literal
+# candidate names; the fused arm's tile configs are (bq, bk) pairs.
+_ATTN_ALIASES = {"fused": "FUSED_ATTN", "unfused": "UNFUSED_ATTN"}
 
 _WARNED: set = set()
 
@@ -272,6 +289,279 @@ def _dispatch3_bwd(op: str, res, g):
 _dispatch3.defvjp(_dispatch3_fwd, _dispatch3_bwd)
 
 
+# ---------------------------------------------------------------------------
+# The fused-attention plan: one ATTN decision spanning the BNT+BNN pair.
+# ---------------------------------------------------------------------------
+
+# Finite masked-logit fill (mirrors kernels/attention_fused.NEG_INF):
+# exp underflows to an exact 0.0 instead of producing inf - inf = nan.
+_MASK_NEG = -1e30
+
+
+def _attn_visibility(mask, lengths, m: int, n: int):
+    """The (g, m, n) boolean visibility of ``MaskParams`` + the traced
+    per-slice ``lengths`` — the jnp mirror of the in-kernel masking in
+    ``kernels/attention_fused.py`` (same position arithmetic, so the
+    fused and unfused plan arms agree bit-for-bit on *which* logits are
+    masked)."""
+    import jax.numpy as jnp
+
+    rows = jnp.arange(m, dtype=jnp.int32)
+    cols = jnp.arange(n, dtype=jnp.int32)
+    q_seg = mask.q_seg if mask.q_seg else m
+    q_pos = (mask.q_start + rows % q_seg)[None, :, None]  # (1, m, 1)
+    k_pos = (mask.k_start + cols)[None, None, :]  # (1, 1, n)
+    valid = cols[None, None, :] < lengths.reshape(-1, 1, 1)  # (g, 1, n)
+    vis = valid
+    if mask.causal:
+        vis = vis & (k_pos <= q_pos)
+    if mask.window:
+        vis = vis & (k_pos > q_pos - mask.window)
+    if mask.prefix_len:
+        vis = vis | (valid & (k_pos < mask.prefix_len))
+    return vis
+
+
+def _attn_logits(q, k):
+    """Raw f32 logits through the policy-dispatched batched GEMM — the
+    unfused plan's first sub-op (a BNT OpKey at dsize 4, matching the
+    model layer's pre-fusion upcast convention)."""
+    import jax.numpy as jnp
+
+    return _dispatch3(
+        "BNT", q.astype(jnp.float32), k.astype(jnp.float32)
+    ).astype(jnp.float32)
+
+
+def _attn_probs(mask, s_raw, lengths):
+    """f32 attention probabilities from raw logits: softcap, then the
+    static+validity mask at a finite ``_MASK_NEG``, then softmax.  Fully
+    masked columns come out exactly 0.0."""
+    import jax.numpy as jnp
+
+    m, n = s_raw.shape[-2:]
+    s = s_raw
+    if mask.softcap:
+        cap = jnp.float32(mask.softcap)
+        s = cap * jnp.tanh(s / cap)
+    s = jnp.where(_attn_visibility(mask, lengths, m, n), s, _MASK_NEG)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def _zero_invalid_kv(x, lengths):
+    """Zero key/value rows beyond each slice's valid length — same
+    poison hygiene as the fused kernel: an all-masked row's probs are
+    not 0, so junk rows must not be summable (0 * nan = nan)."""
+    import jax.numpy as jnp
+
+    n = x.shape[1]
+    valid = jnp.arange(n, dtype=jnp.int32)[None, :, None] < lengths.reshape(
+        -1, 1, 1
+    )
+    return jnp.where(valid, x, 0)
+
+
+def _unfused_attn_plan(mask, q, k, v, lengths):
+    """The unfused plan arm: dispatched BNT logits -> softcap/mask/f32
+    softmax -> dispatched BNN mix.  Each sub-GEMM goes through its own
+    per-op policy decision, so forcing ``attn=unfused`` reproduces the
+    pre-fusion dispatch behaviour exactly — this is also the fallback
+    chain's terminal arm."""
+    probs = _attn_probs(mask, _attn_logits(q, k), lengths)
+    vz = _zero_invalid_kv(v, lengths)
+    out = _dispatch3("BNN", probs.astype(v.dtype), vz)
+    return out.astype(q.dtype)
+
+
+def _run_attn(mask, q, k, v, lengths):
+    """Select and execute the attention plan (the custom_vjp core).
+
+    Mirrors ``run_decision`` — quarantine-skipped non-terminal arms,
+    fault checks, fallback recording — but executes *plans* rather than
+    ``Candidate.run``: ``FUSED_ATTN`` runs the flash kernel with the
+    mask folded inside; every other arm (``UNFUSED_ATTN`` included)
+    runs the unfused sub-dispatch plan."""
+    import jax.numpy as jnp
+
+    g, m, dh = q.shape
+    n = k.shape[1]
+    key = OpKey(
+        "ATTN", int(m), int(n), int(dh),
+        int(jnp.dtype(q.dtype).itemsize), int(g),
+    )
+    decision = policy_select(current_policy(), key)
+    chain = _decision_chain("ATTN", decision)
+    last_err: Optional[BaseException] = None
+    for i, dec in enumerate(chain):
+        terminal = i == len(chain) - 1
+        if not terminal and faults.is_quarantined(dec.name, "ATTN", dec.config):
+            continue
+        try:
+            faults.check_candidate_fault(dec.name, "ATTN")
+            if dec.name == "FUSED_ATTN":
+                from repro.kernels.attention_fused import attention_fused
+
+                block = tuple(dec.config) if dec.config is not None else None
+                out = attention_fused(q, k, v, lengths, mask=mask, block=block)
+            else:
+                out = _unfused_attn_plan(mask, q, k, v, lengths)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            faults.quarantine(dec.name, "ATTN", dec.config, e)
+            _warn_once(
+                f"quarantined:{dec.label()}:ATTN",
+                f"candidate {dec.label()!r} failed on op 'ATTN' "
+                f"({type(e).__name__}: {e}); quarantined for this process, "
+                "dispatch degrades down the fallback chain",
+            )
+            last_err = e
+            continue
+        if (dec.name, dec.config) != (decision.name, decision.config):
+            faults.record_fallback("ATTN", decision.label(), dec.label())
+        return out
+    raise DispatchError(
+        f"every arm of the fallback chain for {key} failed: "
+        f"{[d.label() for d in chain]}"
+    ) from last_err
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dispatch_attn(mask, q, k, v, lengths):
+    return _run_attn(mask, q, k, v, lengths)
+
+
+def _dispatch_attn_fwd(mask, q, k, v, lengths):
+    # Flash-style residuals: operands only, never the (m, n) probs
+    # matrix — the backward rule recomputes the softmax.
+    return _run_attn(mask, q, k, v, lengths), (q, k, v, lengths)
+
+
+def _dispatch_attn_bwd(mask, res, dout):
+    """Flash backward: recompute the masked softmax from the saved
+    operands, then take every gradient contraction through the batched
+    dispatch — dQ/dK/dV land on policy-governed BNT/BNN OpKeys, same
+    closure property as ``_dispatch3_bwd``.  ``lengths`` is integral:
+    its cotangent is float0."""
+    import jax.numpy as jnp
+
+    q, k, v, lengths = res
+    s_raw = _attn_logits(q, k)
+    probs = _attn_probs(mask, s_raw, lengths)  # (g, m, n) f32
+    dout32 = dout.astype(jnp.float32)
+    # dV = P^T dO; masked probs are exactly 0 so invalid rows get 0.
+    dv = _dispatch3("BNN", jnp.swapaxes(probs, -1, -2), dout32)
+    # dP = dO V^T (V zeroed beyond lengths, as in the forward mix).
+    dp = _dispatch3("BNT", dout32, _zero_invalid_kv(v, lengths).astype(jnp.float32))
+    # softmax vjp: dS = P * (dP - sum(dP * P)); masked entries stay 0.
+    ds = probs * (dp - jnp.sum(dp * probs, axis=-1, keepdims=True))
+    if mask.softcap:
+        cap = jnp.float32(mask.softcap)
+        ds = ds * (1.0 - jnp.tanh(s_raw / cap) ** 2)
+    k32 = k.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    dq = _dispatch3("BNN", ds, k32)
+    dk = _dispatch3("BNN", jnp.swapaxes(ds, -1, -2), q32)
+    dlen = np.zeros(lengths.shape, dtype=jax.dtypes.float0)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dlen
+
+
+_dispatch_attn.defvjp(_dispatch_attn_fwd, _dispatch_attn_bwd)
+
+
+def dispatch_attention(
+    q,
+    k,
+    v,
+    *,
+    lengths=None,
+    causal: bool = False,
+    window: int = 0,
+    q_start: int = 0,
+    k_start: int = 0,
+    prefix_len: int = 0,
+    q_seg: int = 0,
+    softcap: float = 0.0,
+    policy: Optional[SelectionPolicy] = None,
+):
+    """Compute the whole ``softmax(mask(Q K^T)) V`` subgraph through one
+    policy-selected attention *plan*.
+
+      dispatch_attention(q, k, v)   q:(..., m, dh) k/v:(..., n, dh) -> (..., m, dh)
+
+    The leading axes of all three operands must match (broadcast K/V
+    across the GQA group first, or fold the group into the row extent
+    and pass ``q_seg``) and collapse to one batch extent ``g``; the
+    policy sees ``OpKey("ATTN", m, n, dh, dsize, g)`` and answers with
+    either the fused flash kernel (``FUSED_ATTN``, optionally at a
+    learned ``(bq, bk)`` tile) or the unfused plan whose BNT/BNN
+    sub-GEMMs are dispatched under their own per-op keys.
+
+    Masking is part of the plan, not the caller: ``causal``, sliding
+    ``window``, ``prefix_len`` (prefix-LM bidirectional span),
+    ``q_start``/``k_start`` position offsets, ``q_seg`` (per-group query
+    count after a group fold — row ``r`` sits at ``q_start + r % q_seg``)
+    and per-slice valid-key ``lengths`` (shape matching the leading axes,
+    default: all ``n`` keys valid).  ``softcap`` applies the model
+    layer's ``cap * tanh(x / cap)`` logit cap before masking.  Queries
+    are expected pre-scaled by ``d_head**-0.5``, same as the unfused
+    convention.
+
+    Differentiating re-enters dispatch: the backward rule recomputes the
+    softmax flash-style (residuals are the operands, never the (m, n)
+    probs matrix) and lands every gradient contraction on batched
+    gradient OpKeys — wrap the whole ``value_and_grad`` call in one
+    ``use_policy`` scope.
+    """
+    import jax.numpy as jnp
+    from repro.kernels.attention_fused import MaskParams
+
+    if policy is not None:
+        with use_policy(policy):
+            return dispatch_attention(
+                q, k, v, lengths=lengths, causal=causal, window=window,
+                q_start=q_start, k_start=k_start, prefix_len=prefix_len,
+                q_seg=q_seg, softcap=softcap,
+            )
+    if q.ndim < 3 or k.ndim != q.ndim or v.ndim != q.ndim:
+        raise ValueError(
+            "dispatch_attention needs >= 3-D operands with matching "
+            f"leading batch axes; got {q.shape}, {k.shape}, {v.shape}"
+        )
+    lead = q.shape[:-2]
+    if k.shape[:-2] != lead or v.shape[:-2] != lead:
+        raise ValueError(
+            "dispatch_attention leading batch axes differ: "
+            f"{q.shape} vs {k.shape} vs {v.shape} — broadcast K/V across "
+            "the GQA group before dispatching"
+        )
+    if k.shape != v.shape or q.shape[-1] != k.shape[-1]:
+        raise ValueError(
+            "dispatch_attention operand extents mismatch: "
+            f"{q.shape} vs {k.shape} vs {v.shape}"
+        )
+    q3 = q.reshape((-1,) + q.shape[-2:])
+    k3 = k.reshape((-1,) + k.shape[-2:])
+    v3 = v.reshape((-1,) + v.shape[-2:])
+    g = q3.shape[0]
+    n = k3.shape[1]
+    if lengths is None:
+        lengths3 = jnp.full((g, 1), n, jnp.int32)
+    else:
+        lengths3 = jnp.asarray(lengths, jnp.int32).reshape(g, 1)
+    mask = MaskParams(
+        causal=bool(causal),
+        window=int(window or 0),
+        q_start=int(q_start),
+        k_start=int(k_start),
+        prefix_len=int(prefix_len or 0),
+        q_seg=int(q_seg or 0),
+        softcap=float(softcap or 0.0),
+    )
+    out = _dispatch_attn(mask, q3, k3, v3, lengths3)
+    return out.reshape(lead + out.shape[-2:])
+
+
 def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     """Compute one dense-layer GEMM through the policy-selected
     (candidate, tile config).
@@ -296,6 +586,11 @@ def dispatch(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     (prefer ``use_policy`` around the full computation).
     """
     check_op(op)
+    if op == "ATTN":
+        raise ValueError(
+            "op 'ATTN' is the attention plan; call "
+            "dispatch_attention(q, k, v, ...)"
+        )
     if op in BATCHED_OPS:
         raise ValueError(
             f"op {op!r} is batched; call dispatch_batched({op!r}, a, b)"
@@ -327,6 +622,11 @@ def dispatch_batched(op: str, a, b, policy: Optional[SelectionPolicy] = None):
     wrap the whole ``value_and_grad`` call in one ``use_policy`` scope.
     """
     check_op(op)
+    if op == "ATTN":
+        raise ValueError(
+            "op 'ATTN' is the attention plan; call "
+            "dispatch_attention(q, k, v, ...)"
+        )
     if op not in BATCHED_OPS:
         raise ValueError(
             f"op {op!r} is not batched; call dispatch({op!r}, a, b)"
@@ -384,16 +684,16 @@ def dispatch_report(policy: Optional[SelectionPolicy] = None) -> str:
         rows = [("-", label, count) for label, count in flat.items()]
     width = max(len("candidate[@tile]"), max(len(label) for _, label, _ in rows))
     lines.append(
-        f"  {'op':<3s} {'candidate[@tile]':<{width}s} {'calls':>8s} {'share':>7s}"
+        f"  {'op':<4s} {'candidate[@tile]':<{width}s} {'calls':>8s} {'share':>7s}"
     )
     op_order = {op: i for i, op in enumerate(OPS)}
     rows.sort(key=lambda r: (op_order.get(r[0], 99), -r[2], r[1]))
     for op, label, count in rows:
         lines.append(
-            f"  {op:<3s} {label:<{width}s} {count:8d} "
+            f"  {op:<4s} {label:<{width}s} {count:8d} "
             f"{100.0 * count / stats.calls:6.1f}%"
         )
-    lines.append(f"  {'':<3s} {'total':<{width}s} {stats.calls:8d}")
+    lines.append(f"  {'':<4s} {'total':<{width}s} {stats.calls:8d}")
     return "\n".join(lines)
 
 
@@ -415,7 +715,7 @@ def health_report() -> str:
         lines.append(f"  quarantined arms: {len(entries)}")
         for e in entries:
             lines.append(
-                f"    {e.op:<3s} {e.label():<24s} failures={e.count} "
+                f"    {e.op:<4s} {e.label():<24s} failures={e.count} "
                 f"[{e.error}]"
             )
     else:
@@ -425,7 +725,7 @@ def health_report() -> str:
         total = sum(fallbacks.values())
         lines.append(f"  fallbacks taken: {total}")
         for (op, selected, executed), n in sorted(fallbacks.items()):
-            lines.append(f"    {op:<3s} {selected} -> {executed} x{n}")
+            lines.append(f"    {op:<4s} {selected} -> {executed} x{n}")
     else:
         lines.append("  fallbacks taken: (none)")
     return "\n".join(lines)
@@ -433,18 +733,29 @@ def health_report() -> str:
 
 def _parse_fixed_arg(arg: str) -> FixedPolicy:
     """``fixed:`` spec bodies — either a single candidate or an
-    op-qualified table (``nt=XLA_NT,bnt=PALLAS_BNT@128x128x128``)."""
+    op-qualified table (``nt=XLA_NT,bnt=PALLAS_BNT@128x128x128,``
+    ``attn=fused@128x256``).  The ``attn=`` entry accepts the plan
+    aliases ``fused``/``unfused`` alongside literal candidate names, and
+    every config parses at its candidate's declared arity — ``BQxBK``
+    for the fused attention kernel, ``BMxBNxBK`` for the matmul tiles."""
     from repro.kernels.tiling import parse_config_key
 
-    def parse_entry(val: str):
+    def parse_entry(val: str, op: Optional[str] = None):
         name, _, cfg = val.partition("@")
+        name = name.strip()
+        if op == "ATTN":
+            name = _ATTN_ALIASES.get(name.lower(), name)
         config = None
         if cfg.strip():
             try:
-                config = parse_config_key(cfg.strip())
+                arity = get_candidate(name).config_arity
+            except KeyError:
+                arity = 3
+            try:
+                config = parse_config_key(cfg.strip(), arity=arity)
             except ValueError as e:
                 raise _spec_error(str(e))
-        return name.strip(), config
+        return name, config
 
     if "=" not in arg:
         name, config = parse_entry(arg)
@@ -459,9 +770,9 @@ def _parse_fixed_arg(arg: str) -> FixedPolicy:
         if not eq or op not in OPS or not val.strip():
             raise _spec_error(
                 f"malformed op-qualified fixed entry {part!r}; expected "
-                "nt=<NAME>[@BMxBNxBK] with op in nt/nn/tn/bnt/bnn"
+                "nt=<NAME>[@BMxBNxBK] with op in nt/nn/tn/bnt/bnn/attn"
             )
-        by_op[op] = parse_entry(val)
+        by_op[op] = parse_entry(val, op=op)
     if not by_op:
         raise _spec_error("fixed policy needs at least one op entry")
     return FixedPolicy(by_op=by_op)
@@ -478,6 +789,9 @@ def policy_from_spec(spec: str, distributed: bool = False) -> SelectionPolicy:
       fixed:nt=XLA_NT,nn=PALLAS_NN[@BMxBNxBK],tn=XLA_TN,bnt=PALLAS_BNT,bnn=XLA_BNN
                                 op-qualified FixedPolicy: force a
                                 (candidate, tile) per op kind
+      fixed:attn=fused@128x256  attention-plan entry: ``fused``/``unfused``
+                                alias the FUSED_ATTN/UNFUSED_ATTN pair;
+                                fused tiles are (bq, bk)
       analytic                  AnalyticPolicy on the default hardware
       cascade:A,B,C             CascadePolicy over the named candidates
       autotune[:cache.json]     AutotunePolicy over the (op, candidate,

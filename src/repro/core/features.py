@@ -37,7 +37,9 @@ __all__ = [
 FEATURE_NAMES = ("gm", "sm", "cc", "mbw", "l2c", "m", "n", "k", "op", "g")
 
 # Ordinal op encoding; index order matches opkey.OPS.
-OP_FEATURE = {"NT": 0.0, "NN": 1.0, "TN": 2.0, "BNT": 3.0, "BNN": 4.0}
+OP_FEATURE = {
+    "NT": 0.0, "NN": 1.0, "TN": 2.0, "BNT": 3.0, "BNN": 4.0, "ATTN": 5.0,
+}
 
 
 def make_features(

@@ -75,7 +75,13 @@ __all__ = [
 #       ({key: {name: {config_key: n}}} — how many bench tries each
 #       measurement took, retry-with-backoff observability).  Optional and
 #       schema-neutral: readers without the field ignore it.
-MEASURE_SCHEMA_VERSION = 4
+#   v5: the attention subgraph op — the key grammar is unchanged but the
+#       op slot admits "ATTN" (paired fused-vs-unfused rows keyed on the
+#       whole subgraph: m queries, n keys, k head-dim per slice) and
+#       entry values may carry 2-part "BQxBK" config keys for the fused
+#       kernel's (bq, bk) space.  v4 files load unchanged (their op slots
+#       simply never say ATTN); files newer than v5 are rejected.
+MEASURE_SCHEMA_VERSION = 5
 
 # select() receives an element size, not a dtype; measurement needs a real
 # dtype to build operands.  Sizes outside this map are not measurable (the
@@ -452,8 +458,12 @@ def _eval_scope():
     return contextlib.nullcontext()
 
 
-def bench_fn(fn, a, b, reps: int, warmup: int = 1, stat: str = "median") -> float:
-    """Warmup (incl. compile) then ``stat`` of ``reps`` wall-clock runs.
+def bench_fn(
+    fn, *operands, reps: int = 3, warmup: int = 1, stat: str = "median"
+) -> float:
+    """Warmup (incl. compile) then ``stat`` of ``reps`` wall-clock runs of
+    ``fn(*operands)`` — two operands for the GEMM ops, three (q, k, v)
+    for the attention subgraph op.
 
     The one timing loop in the codebase: ``measure_candidates`` uses the
     median (robust to scheduler noise in small-rep autotuning),
@@ -461,21 +471,25 @@ def bench_fn(fn, a, b, reps: int, warmup: int = 1, stat: str = "median") -> floa
     """
     import jax
 
-    jax.block_until_ready(fn(a, b))  # compile + first warmup
+    jax.block_until_ready(fn(*operands))  # compile + first warmup
     for _ in range(max(0, warmup - 1)):
-        jax.block_until_ready(fn(a, b))
+        jax.block_until_ready(fn(*operands))
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(a, b))
+        jax.block_until_ready(fn(*operands))
         ts.append(time.perf_counter() - t0)
     return float(statistics.median(ts) if stat == "median" else min(ts))
 
 
 def operand_shapes(op: str, m: int, n: int, k: int, g: int = 1):
-    """Storage-layout operand shapes of one GEMM op (``core/opkey.py``).
-    Batched ops get 3-D shapes with the leading batch extent ``g``."""
+    """Storage-layout operand shapes of one op (``core/opkey.py``).
+    Batched ops get 3-D shapes with the leading batch extent ``g``; the
+    attention subgraph op gets three (q, k, v) shapes with the OpKey's
+    extents read as (m queries, n keys, k head-dim) per slice."""
     check_op(op)
+    if op == "ATTN":
+        return (g, m, k), (g, n, k), (g, n, k)
     if op == "BNT":
         return (g, m, k), (g, n, k)
     if op == "BNN":
@@ -542,12 +556,14 @@ def measure_candidates(
     names = tuple(candidates or CANDIDATES)
     dt = jnp.dtype(dtype)
     dsize = dt.itemsize
-    a_shape, b_shape = operand_shapes(op, m, n, k, g)
+    shapes = operand_shapes(op, m, n, k, g)
     times: Dict[str, Dict[str, float]] = {}
     with _eval_scope():
-        ka, kb = jax.random.split(jax.random.PRNGKey(seed))
-        a = jax.random.normal(ka, a_shape, dtype=dt)
-        b = jax.random.normal(kb, b_shape, dtype=dt)
+        op_keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+        operands = tuple(
+            jax.random.normal(kk, s, dtype=dt)
+            for kk, s in zip(op_keys, shapes)
+        )
         for name in names:
             cand = get_candidate(name)
             if not candidate_fits_memory(
@@ -576,7 +592,9 @@ def measure_candidates(
                     n_try += 1
                     try:
                         faults.check_measure_fault(name, op)
-                        entry[ck] = bench_fn(jax.jit(fn), a, b, reps, warmup)
+                        entry[ck] = bench_fn(
+                            jax.jit(fn), *operands, reps=reps, warmup=warmup
+                        )
                         entry_tries[ck] = n_try
                         break
                     except (KeyboardInterrupt, SystemExit):

@@ -37,6 +37,7 @@ from typing import NamedTuple, Sequence, Tuple
 __all__ = [
     "OPS",
     "BATCHED_OPS",
+    "GROUPED_OPS",
     "OpKey",
     "check_op",
     "coerce_key",
@@ -50,10 +51,21 @@ __all__ = [
 # explicit transpose of one operand — d(BNT) -> {BNN}, d(BNN) -> {BNT,
 # BNN}; this is what lets the dispatch engine's custom_vjp re-enter
 # itself for both the 2-D and the batched entry points.
-OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN")
+#
+# ATTN is the first *subgraph* op: the whole ``softmax(Q K^T) V`` chain
+# as one decision point (the ROADMAP's stepping stone from per-op
+# Decisions to whole-block Plans).  Its extents read per slice: m
+# queries, n keys, k the head dim; ``g`` the collapsed (batch x kv-head)
+# axis.  d(ATTN) -> {BNT, BNN}: the flash backward recomputes the
+# softmax and re-enters dispatch through the batched GEMM ops.
+OPS: Tuple[str, ...] = ("NT", "NN", "TN", "BNT", "BNN", "ATTN")
 
 # The subset with a leading batch axis (attention contractions).
 BATCHED_OPS: Tuple[str, ...] = ("BNT", "BNN")
+
+# The ops whose OpKey carries a meaningful batch extent g: the batched
+# GEMMs plus the attention subgraph op (three (g, ., .) operands).
+GROUPED_OPS: Tuple[str, ...] = BATCHED_OPS + ("ATTN",)
 
 
 def check_op(op: str) -> str:
@@ -98,13 +110,13 @@ def coerce_key(key) -> OpKey:
     g = int(key.g)
     if g < 1:
         raise ValueError(f"OpKey batch extent g={g} must be >= 1")
-    if g != 1 and op not in BATCHED_OPS:
+    if g != 1 and op not in GROUPED_OPS:
         # an unbatched op measured/labelled under g>1 would poison the
         # cache and the selector's training rows with an extent the GEMM
         # never ran at
         raise ValueError(
             f"OpKey op {op!r} is unbatched; batch extent g={g} is only "
-            f"meaningful for {BATCHED_OPS}"
+            f"meaningful for {GROUPED_OPS}"
         )
     return OpKey(op, int(key.m), int(key.n), int(key.k), int(key.dsize), g)
 

@@ -216,7 +216,7 @@ class FixedPolicy(PolicyBase):
         if config is not None:
             from repro.kernels.tiling import validate_config
 
-            config = validate_config(config)
+            config = validate_config(config, arity=cand.config_arity)
             if not cand.tunable:
                 raise ValueError(
                     f"candidate {name!r} is not tunable; it cannot take a "
@@ -319,16 +319,31 @@ class AnalyticPolicy(PolicyBase):
         self._cache: Dict[Tuple[str, OpKey], Decision] = {}
 
     def _best_config(self, cand: Candidate, key: OpKey):
-        """Roofline-ranked tile for a tunable candidate (None otherwise)."""
-        from repro.kernels.tiling import enumerate_tile_configs
+        """Roofline-ranked tile for a tunable candidate (None otherwise).
+        Fused-attention candidates (``config_arity == 2``) rank their
+        (bq, bk) space with the attention tile model instead."""
+        from repro.kernels.tiling import (
+            enumerate_attn_configs,
+            enumerate_tile_configs,
+        )
 
-        from .simulate import tile_time
+        from .simulate import attn_tile_time, tile_time
 
         if not cand.tunable:
             return None
         best_cfg, best_t = None, None
         # the raw enumeration, not the shortlist: ranking happens right
         # here on self.hardware, so a pre-sorted list would be wasted work
+        if cand.config_arity == 2:
+            for cfg in enumerate_attn_configs(key.m, key.n, key.k, key.dsize):
+                if not self._admissible(cand, key, config=cfg):
+                    continue
+                t = attn_tile_time(
+                    self.hardware, key.m, key.n, key.k, key.dsize, block=cfg
+                )
+                if best_t is None or t < best_t:
+                    best_t, best_cfg = t, cfg
+            return best_cfg
         for cfg in enumerate_tile_configs(key.m, key.n, key.k, key.dsize):
             if not self._admissible(cand, key, config=cfg):
                 continue
@@ -568,7 +583,7 @@ class AutotunePolicy(PolicyBase):
                 cand = get_candidate(cand_name)
                 for cfg_key, t in cfgs.items():
                     try:
-                        cfg = parse_config_key(cfg_key)
+                        cfg = parse_config_key(cfg_key, arity=cand.config_arity)
                     except ValueError:
                         continue  # corrupt/foreign key: never dispatch it
                     if not self._admissible(cand, key, config=cfg):

@@ -78,7 +78,14 @@ DEFAULT_ARTIFACT = os.path.join(ARTIFACT_DIR, "default_model.json")
 #       batched pairs; models trained on the 8-dim paper layout or the
 #       9-dim op-space layout keep predicting (appended columns are
 #       invisible to trees trained without them).
-SCHEMA_VERSION = 4
+#   v5: the attention *subgraph* op — binary_pairs gain the ATTN
+#       fused-vs-unfused pair (UNFUSED_ATTN, FUSED_ATTN) and tile_tables
+#       may carry 2-part "BQxBK" config keys for the fused kernel's
+#       (bq, bk) space alongside the 3-part GEMM keys.  v4 artifacts
+#       migrate with the standard ATTN pair and an empty ATTN tile
+#       table — exactly how a v4 build would dispatch once the subgraph
+#       op entered the space.
+SCHEMA_VERSION = 5
 
 
 @dataclass
@@ -228,7 +235,15 @@ class MTNNSelector:
         entry = self.tile_tables.get(op, {}).get(name)
         if not entry:
             return None
-        from repro.kernels.tiling import fits_vmem, parse_config_key
+        cand = CANDIDATES.get(name)
+        if cand is None or not cand.tunable:
+            return None
+        from repro.kernels.tiling import (
+            DEFAULT_VMEM_BUDGET_BYTES,
+            attn_vmem_bytes,
+            fits_vmem,
+            parse_config_key,
+        )
 
         key = None
         by_shape = entry.get("by_shape") or {}
@@ -241,15 +256,21 @@ class MTNNSelector:
         if not key:
             return None
         try:
-            config = parse_config_key(key)
+            config = parse_config_key(key, arity=cand.config_arity)
         except ValueError:
             return None
         if config is None:
             return None
-        cand = CANDIDATES.get(name)
-        if cand is None or not cand.supports(config=config):
+        if not cand.supports(config=config):
             return None
-        if not fits_vmem(config, dsize):
+        if cand.config_arity == 2:
+            # fused attention: the working set carries the head dim (the
+            # ATTN OpKey's k); without a shape, admit and let dispatch's
+            # own guards re-check
+            dh = mnk[2] if mnk is not None else 128
+            if attn_vmem_bytes(config, dh, dsize) > DEFAULT_VMEM_BUDGET_BYTES:
+                return None
+        elif not fits_vmem(config, dsize):
             return None
         return config
 
@@ -531,6 +552,16 @@ def _migrate_payload(payload: Dict) -> Dict:
                 op, list(BINARY_PAIRS_BY_OP[op])
             )
         payload["schema_version"] = 4
+    if payload["schema_version"] < 5:
+        # v4 artifacts predate the attention subgraph op: the standard
+        # fused-vs-unfused pair fills in (tile tables stay empty for ATTN
+        # — the fused kernel runs its clamped default until retrained).
+        payload = dict(payload)
+        payload["binary_pairs"] = dict(payload.get("binary_pairs", {}))
+        payload["binary_pairs"].setdefault(
+            "ATTN", list(BINARY_PAIRS_BY_OP["ATTN"])
+        )
+        payload["schema_version"] = 5
     return payload
 
 
@@ -546,6 +577,8 @@ def _sim_to_candidate(sim_name: str) -> Optional[str]:
         "TN_VIA_NN": "PALLAS_TN",
         "BNT_DIRECT": "XLA_BNT",
         "BNN_DIRECT": "XLA_BNN",
+        "ATTN_FUSED": "FUSED_ATTN",
+        "ATTN_UNFUSED": "UNFUSED_ATTN",
         # already-candidate names pass through
         **{n: n for n in CANDIDATES},
     }

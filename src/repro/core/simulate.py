@@ -42,6 +42,7 @@ __all__ = [
     "simulate_time",
     "tile_time",
     "transpose_tile_time",
+    "attn_tile_time",
     "SIM_ALGOS",
     "OP_SIM_ALGOS",
 ]
@@ -55,8 +56,21 @@ SIM_ALGOS = ("NT_DIRECT", "TNN", "TNN_FUSED", "XLA_DOT")
 # model the attention contractions: ``g`` independent slices sharing one
 # kernel launch, each slice with its op's per-slice mechanics.
 # ``simulate_time`` accepts these in addition to SIM_ALGOS; the
-# paper-grid dataset builder keeps sweeping only the NT arms.
-OP_SIM_ALGOS = ("NN_DIRECT", "TN_DIRECT", "TN_VIA_NN", "BNT_DIRECT", "BNN_DIRECT")
+# paper-grid dataset builder keeps sweeping only the NT arms.  The ATTN
+# arms price the whole attention subgraph (Q K^T -> softmax -> probs V)
+# at per-slice extents (m queries, n keys, k head-dim): FUSED streams
+# k/v blocks through VMEM without materialising the (m, n) logits in
+# HBM; UNFUSED is the two batched GEMMs plus an HBM round-trip of the
+# logits for the XLA softmax.
+OP_SIM_ALGOS = (
+    "NN_DIRECT",
+    "TN_DIRECT",
+    "TN_VIA_NN",
+    "BNT_DIRECT",
+    "BNN_DIRECT",
+    "ATTN_FUSED",
+    "ATTN_UNFUSED",
+)
 
 _MXU = 128  # MXU systolic array edge
 _DEFAULT_BLOCK = (512, 512, 512)  # bm, bn, bk used by our Pallas kernels
@@ -142,6 +156,28 @@ def simulate_time(
         else:  # BNN_DIRECT: layout-clean per slice
             per_slice = _matmul_time(hw, m, n, k, dsize, 0.97)
         t = g * (per_slice - overhead) + overhead
+        return t * _noise(hw.name, f"{algo}|g{g}", m, n, k, sigma)
+
+    if algo in ("ATTN_FUSED", "ATTN_UNFUSED"):
+        # whole attention subgraph per slice: (m, k) queries x (n, k)
+        # keys -> (m, n) probs -> (m, k) out, g slices per launch.
+        overhead = hw.launch_overhead_us * 1e-6
+        flops = matmul_flops(m, n, k) * 2.0  # QK^T and probs@V
+        peak = (hw.peak_tflops_bf16 if dsize <= 2 else hw.peak_tflops_f32) * 1e12
+        t_compute = flops / (peak * mxu_efficiency(m, n, k) * 0.9)
+        if algo == "ATTN_FUSED":
+            # one kernel: q/k/v/out through HBM once; logits stay in VMEM.
+            # The online-softmax rescale adds a VPU term per logit.
+            traffic = (m * k + 2 * n * k + m * k) * dsize
+            t_softmax = (m * n * 4) / (bw * 0.9)
+            t = max(t_compute, traffic / bw) + t_softmax + overhead
+        else:
+            # three kernels: the two batched GEMMs plus an f32 HBM
+            # round-trip of the (m, n) logits for the XLA softmax.
+            traffic = (m * k + 2 * n * k + m * k + 2 * m * n) * dsize
+            t_softmax = (2.0 * m * n * 4) / bw
+            t = max(t_compute, traffic / bw) + t_softmax + 3 * overhead
+        t = g * (t - overhead) + overhead
         return t * _noise(hw.name, f"{algo}|g{g}", m, n, k, sigma)
 
     if algo == "TNN":
@@ -259,6 +295,37 @@ def transpose_tile_time(
     t_mem = (2.0 * rp * cp * dsize) / (hw.mem_bw_gbps * 1e9 * hw.transpose_bw_frac)
     steps = (rp // br) * (cp // bc)
     return t_mem + steps * step_overhead_us * 1e-6
+
+
+def attn_tile_time(
+    hw: HardwareSpec,
+    m: int,
+    n: int,
+    k: int,
+    dsize: int,
+    block: Tuple[int, int],
+    step_overhead_us: float = 0.1,
+) -> float:
+    """Roofline estimate of the fused-attention kernel at a (bq, bk)
+    tile — the attention analogue of ``tile_time``, and deliberately
+    *relative* in the same way: padded-extent MAC work for both GEMMs of
+    the subgraph, HBM traffic with the k/v strips re-read once per
+    q-tile, and a per-grid-step overhead charging tiny tiles for their
+    online-softmax rescale + bookkeeping.  Ranks the fused-attention
+    autotune shortlist (``kernels.tiling.attn_config_space``)."""
+    bq, bk = block
+    mp = math.ceil(m / bq) * bq
+    np_ = math.ceil(n / bk) * bk
+    kp = math.ceil(max(k, 1) / _MXU) * _MXU
+    peak = (hw.peak_tflops_bf16 if dsize <= 2 else hw.peak_tflops_f32) * 1e12
+    t_compute = (2.0 * matmul_flops(mp, np_, kp)) / (
+        peak * mxu_efficiency(mp, np_, kp)
+    )
+    n_tiles_q = mp // bq
+    traffic = dsize * (mp * kp + 2 * np_ * kp * n_tiles_q + mp * kp)
+    t_memory = traffic / (hw.mem_bw_gbps * 1e9)
+    steps = n_tiles_q * (np_ // bk)
+    return max(t_compute, t_memory) + steps * step_overhead_us * 1e-6
 
 
 def fits_memory(hw: HardwareSpec, m: int, n: int, k: int, dsize: int, tnn: bool) -> bool:

@@ -142,6 +142,14 @@ def _bnn_specs(op, m, n, k, g, block):
     return (batched_grid_spec(g, m, n, k, nt=False, block=block),)
 
 
+def _fused_attn_specs(op, m, n, k, g, block):
+    # ATTN OpKey extents: m queries, n keys, k head-dim per slice; the
+    # fused kernel's 2-D (bq, bk) tile rides in ``block``.
+    from .attention_fused import attn_grid_spec
+
+    return (attn_grid_spec(g, m, n, k, block=block),)
+
+
 GRID_SPEC_BUILDERS: Dict[str, Callable] = {
     "PALLAS_NT": _nt_specs,
     "PALLAS_NN": _nn_specs,
@@ -150,6 +158,7 @@ GRID_SPEC_BUILDERS: Dict[str, Callable] = {
     "PALLAS_TN": _tn_specs,
     "PALLAS_BNT": _bnt_specs,
     "PALLAS_BNN": _bnn_specs,
+    "FUSED_ATTN": _fused_attn_specs,
 }
 
 

@@ -47,10 +47,17 @@ __all__ = [
     "default_transpose_config",
     "enumerate_transpose_configs",
     "transpose_config_space",
+    "ATTN_TILE_EDGES",
+    "AttnConfig",
+    "attn_vmem_bytes",
+    "default_attn_config",
+    "enumerate_attn_configs",
+    "attn_config_space",
 ]
 
 TileConfig = Tuple[int, int, int]
 TransposeConfig = Tuple[int, int]
+AttnConfig = Tuple[int, int]
 
 # Candidate tile edges per axis.  bk may go deeper than the MN edges: a
 # longer contraction strip costs VMEM linearly but halves the number of
@@ -89,11 +96,14 @@ def parse_config_key(key: str, arity: int = 3):
     return parts
 
 
-def validate_config(config: Sequence[int]) -> TileConfig:
-    """A well-formed (bm, bn, bk) triple of positive ints, or ValueError."""
+def validate_config(config: Sequence[int], arity: int = 3) -> TileConfig:
+    """A well-formed tile tuple of positive ints, or ValueError.  The
+    default arity 3 is the matmul kernels' (bm, bn, bk); the fused
+    attention kernel validates its (bq, bk) pairs with ``arity=2``."""
     config = tuple(config)
-    if len(config) != 3:
-        raise ValueError(f"tile config {config} must be (bm, bn, bk)")
+    if len(config) != arity:
+        kinds = "(bq, bk)" if arity == 2 else "(bm, bn, bk)"
+        raise ValueError(f"tile config {config} must be {kinds}")
     for b in config:
         if not isinstance(b, int) or isinstance(b, bool) or b <= 0:
             raise ValueError(f"tile config {config} must be positive ints")
@@ -270,6 +280,101 @@ def shortlist_tile_configs(
         dflt = default_config(m, n, k)
         # keep the (budget-admissible) default so a sweep can never
         # regress below the status quo; an over-budget default stays out
+        if dflt not in keep and dflt in configs:
+            keep = keep[:-1] + [dflt]
+        ranked = keep
+    return tuple(ranked)
+
+
+# -- the fused-attention kernel's 2-D (bq, bk) config space ------------------
+#
+# The flash-style fused attention kernel (kernels/attention_fused.py) tiles
+# the query axis (parallel) and the key/value axis (sequential online-
+# softmax sweep); the head dim rides whole in every block.  Its config
+# space is therefore 2-D like the transpose kernel's, but its VMEM
+# accounting differs: both GEMMs of the subgraph, the f32 accumulator and
+# the f32 running max/sum live in one grid step.
+
+# Query blocks stay modest (the accumulator is bq x dh_padded f32); key
+# blocks may go deeper — a longer kv strip amortises the online-softmax
+# rescale per block.
+ATTN_TILE_EDGES: Tuple[int, ...] = (128, 256, 512)
+
+
+def attn_vmem_bytes(config: AttnConfig, dh: int, dsize: int) -> int:
+    """VMEM working set of one fused-attention grid step: double-buffered
+    q (bq, dh) / k (bk, dh) / v (bk, dh) operand blocks, the (bq, bk) f32
+    logits tile, the f32 output accumulator and running max/sum scratches,
+    and the staged output block."""
+    bq, bk = config
+    dhp = round_up(max(dh, 1), MXU_EDGE)
+    operands = 2 * (bq * dhp + 2 * bk * dhp) * dsize  # x2: double buffering
+    logits = bq * bk * 4  # f32 scores tile
+    accum = bq * dhp * 4 + 2 * bq * MXU_EDGE * 4  # acc + running max/sum
+    out_block = bq * dhp * dsize
+    return operands + logits + accum + out_block
+
+
+def default_attn_config(m: int, n: int) -> AttnConfig:
+    """What the fused kernel runs when no block is supplied: a square-ish
+    (bq, bk) derived from DEFAULT_BLOCK, clamped per axis."""
+    return (
+        pick_block(m, DEFAULT_BLOCK[0]),
+        pick_block(n, DEFAULT_BLOCK[2]),
+    )
+
+
+def enumerate_attn_configs(
+    m: int,
+    n: int,
+    dh: int,
+    dsize: int = 4,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+    edges: Sequence[int] = ATTN_TILE_EDGES,
+) -> Tuple[AttnConfig, ...]:
+    """Every admissible (bq, bk) for a (m queries, n keys, dh head-dim)
+    attention subgraph: MXU-aligned, clamped to the padded extents,
+    VMEM-budgeted.  The clamped default is a member whenever it fits."""
+    configs = {
+        (bq, bk)
+        for bq in _axis_tiles(m, edges)
+        for bk in _axis_tiles(n, edges)
+        if attn_vmem_bytes((bq, bk), dh, dsize) <= vmem_budget
+    }
+    dflt = default_attn_config(m, n)
+    if attn_vmem_bytes(dflt, dh, dsize) <= vmem_budget:
+        configs.add(dflt)
+    return tuple(sorted(configs))
+
+
+def attn_config_space(
+    m: int,
+    n: int,
+    dh: int,
+    dsize: int = 4,
+    max_configs: int = 4,
+    hardware=None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> Tuple[AttnConfig, ...]:
+    """The fused-attention autotune sweep list: the admissible (bq, bk)
+    space ranked by the roofline attention-tile model
+    (``simulate.attn_tile_time``), truncated to ``max_configs`` but always
+    keeping the clamped default.  ``max_configs <= 0`` means no
+    truncation."""
+    from repro.core.simulate import attn_tile_time
+
+    if hardware is None:
+        from repro.core.hardware import TPU_V5E
+
+        hardware = TPU_V5E
+    configs = enumerate_attn_configs(m, n, dh, dsize, vmem_budget)
+    ranked = sorted(
+        configs,
+        key=lambda c: attn_tile_time(hardware, m, n, dh, dsize, c),
+    )
+    if 0 < max_configs < len(ranked):
+        keep = ranked[:max_configs]
+        dflt = default_attn_config(m, n)
         if dflt not in keep and dflt in configs:
             keep = keep[:-1] + [dflt]
         ranked = keep

@@ -11,15 +11,22 @@ peak logits memory at ``chunk x S`` per head.
 GQA is computed in grouped form (``(kv, group)`` head axes) so K/V are
 never materialised at ``n_heads`` width.
 
-Both attention contractions — ``Q @ K^T`` (a batched NT) and
-``probs @ V`` (a batched NN) — route through ``core.dispatch_batched``,
-so the same ``use_policy(...)`` scope that governs the dense-layer GEMMs
-also selects the attention kernels (in train *and* serve; gradients
-re-enter dispatch through the engine's custom_vjp).  The leading
+The whole ``softmax(mask(Q K^T)) V`` subgraph — in train *and* serve —
+routes through ``core.dispatch_attention``, so the same
+``use_policy(...)`` scope that governs the dense-layer GEMMs selects
+the attention *plan*: the fused flash kernel (``FUSED_ATTN``,
+optionally at a learned ``(bq, bk)`` tile) or the unfused pair whose
+``Q K^T`` (batched NT) and ``probs @ V`` (batched NN) sub-GEMMs are
+dispatched under their own per-op keys.  Masking (causal, window,
+prefix-LM, per-row decode validity) is expressed as plan parameters,
+not caller-built boolean arrays, so both plan arms apply it
+identically and chaos-mode fallback is token-exact.  Gradients
+re-enter dispatch through the engine's custom_vjp.  The leading
 ``(batch, kv)`` axes collapse to the OpKey's batch extent ``g`` and the
-GQA group axis folds into the per-slice *query* extent ``m`` — each kv
-head's group of queries shares one K/V slice, so K/V are still never
-materialised (or broadcast) at ``n_heads`` width.
+GQA group axis folds into the per-slice *query* extent ``m`` (declared
+via ``q_seg``) — each kv head's group of queries shares one K/V slice,
+so K/V are still never materialised (or broadcast) at ``n_heads``
+width.
 """
 
 from __future__ import annotations
@@ -30,9 +37,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import dispatch_batched
+from repro.core.engine import dispatch_attention
 
-from .layers import Param, dense, init_dense, init_rmsnorm, rmsnorm, softcap
+from .layers import Param, dense, init_dense, init_rmsnorm, rmsnorm
 from .rope import apply_rope
 
 __all__ = [
@@ -119,56 +126,43 @@ _chunk_barrier = jax.custom_vjp(_barrier_impl)
 _chunk_barrier.defvjp(lambda q, dep: (_barrier_impl(q, dep), dep), _barrier_bwd)
 
 
-def _qk_logits(q_heads: jax.Array, k_slab: jax.Array) -> jax.Array:
-    """``Q @ K^T`` as a policy-dispatched batched NT.
-
-    q_heads: (B, kv, g, C, dh), k_slab: (B, L, kv, dh) -> (B, kv, g, C, L).
-    The GQA group folds into the per-slice query extent (m = g*C) so each
-    of the B*kv batch slices contracts against ONE K slice — no broadcast
-    or replication of K across the group, same as the einsum.  Operands
-    are upcast to f32 so the contraction accumulates *and lands* in f32,
-    matching the replaced einsum's ``preferred_element_type=f32`` logits
-    exactly (for sub-f32 operands this trades the low-precision matmul
-    rate for bit-identical logits; K is upcast once per slab, not per
-    group member).
-    """
-    B, kv, g, C, dh = q_heads.shape
-    L = k_slab.shape[1]
-    q2 = q_heads.reshape(B, kv, g * C, dh)
-    k2 = jnp.swapaxes(k_slab, 1, 2)  # (B, kv, L, dh)
-    logits = dispatch_batched(
-        "BNT", q2.astype(jnp.float32), k2.astype(jnp.float32)
-    )
-    return logits.reshape(B, kv, g, C, L)
-
-
-def _pv_mix(probs: jax.Array, v_slab: jax.Array) -> jax.Array:
-    """``probs @ V`` as a policy-dispatched batched NN.
-
-    probs: (B, kv, g, C, L), v_slab: (B, L, kv, dh) -> (B, C, kv, g, dh).
-    Group folds into the per-slice row extent like ``_qk_logits``: one V
-    slice per (batch, kv) pair, never replicated across the group.
-    """
-    B, kv, g, C, L = probs.shape
-    dh = v_slab.shape[-1]
-    p2 = probs.reshape(B, kv, g * C, L)
-    v2 = jnp.swapaxes(v_slab, 1, 2).astype(probs.dtype)  # (B, kv, L, dh)
-    out = dispatch_batched("BNN", p2, v2).reshape(B, kv, g, C, dh)
-    return out.transpose(0, 3, 1, 2, 4)  # (B, C, kv, g, dh)
-
-
 def _chunk_attend(
     q_chunk: jax.Array,  # (B, C, kv, g, dh) already scaled
     k_slab: jax.Array,  # (B, L, kv, dh)
     v_slab: jax.Array,  # (B, L, kv, dh)
-    mask: jax.Array,  # (C, L) bool
-    cap: float,
+    cfg: AttnConfig,
+    q_lo: int,  # absolute position of this chunk's first query
+    k_lo: int,  # absolute position of the slab's first key
+    prefix_len: int,
 ) -> jax.Array:
-    logits = _qk_logits(q_chunk.transpose(0, 2, 3, 1, 4), k_slab)
-    logits = softcap(logits, cap)
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v_slab.dtype)
-    return _pv_mix(probs, v_slab)
+    """One query chunk's attention as a policy-dispatched *plan*.
+
+    The GQA group folds into the per-slice query extent (m = g*C) so
+    each of the B*kv batch slices attends ONE K/V slice — no broadcast
+    or replication across the group, same as the einsum this replaced.
+    ``q_seg=C`` tells the plan the fold width, so row ``r`` of a slice
+    sits at absolute query position ``q_lo + r % C`` and the causal /
+    window / prefix masks land per group member, not per folded row.
+    """
+    B, C, kv, g, dh = q_chunk.shape
+    L = k_slab.shape[1]
+    q2 = q_chunk.transpose(0, 2, 3, 1, 4).reshape(B * kv, g * C, dh)
+    k2 = jnp.swapaxes(k_slab, 1, 2).reshape(B * kv, L, dh)
+    v2 = jnp.swapaxes(v_slab, 1, 2).reshape(B * kv, L, dh)
+    out = dispatch_attention(
+        q2,
+        k2,
+        v2,
+        causal=True,
+        window=cfg.window or 0,
+        q_start=q_lo,
+        k_start=k_lo,
+        prefix_len=prefix_len,
+        q_seg=C,
+        softcap=cfg.softcap,
+    )
+    out = out.reshape(B, kv, g, C, dh)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, C, kv, g, dh)
 
 
 def attention(
@@ -244,14 +238,7 @@ def attention(
         if cfg.sp_attention:
             # shard queries over 'model' for the chunk; K/V stay replicated
             q_chunk = constrain(q_chunk, _P(_daxes, "model"))
-        qpos = jnp.arange(q_lo, q_hi)
-        kpos = jnp.arange(lo, q_hi)
-        mask = kpos[None, :] <= qpos[:, None]
-        if cfg.window is not None:
-            mask &= kpos[None, :] > qpos[:, None] - cfg.window
-        if prefix_len > 0:
-            mask |= (kpos < prefix_len)[None, :]
-        o = _chunk_attend(q_chunk, k_slab, v_slab, mask, cfg.softcap)
+        o = _chunk_attend(q_chunk, k_slab, v_slab, cfg, q_lo, lo, prefix_len)
         if cfg.sp_attention:
             o = constrain(o, _P(_daxes, "model"))
         dep = o
@@ -329,14 +316,20 @@ def attention_decode(
     ck = upd(cache["k"], k_new.astype(cache["k"].dtype), write)
     cv = upd(cache["v"], v_new.astype(cache["v"].dtype), write)
 
-    # (B, slots): row i sees exactly the slots its own length has filled
-    valid = jnp.arange(slots)[None, :] < jnp.minimum(pos_b + 1, slots)[:, None]
-    logits = _qk_logits(q.transpose(0, 2, 3, 1, 4), ck.astype(q.dtype))
-    logits = softcap(logits, cfg.softcap)
-    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
-    # probs round-trip through the cache dtype (quantised like the cache),
-    # then the mix runs at q precision — the pre-dispatch einsum's promote
-    out = _pv_mix(probs.astype(q.dtype), cv.astype(q.dtype))
+    # per-row validity: row i sees exactly the slots its own length has
+    # filled, expressed as the plan's `lengths` operand (each kv head of
+    # a row shares that row's length) — short sequences never attend the
+    # stale/uninitialised slots beyond their length, in either plan arm
+    lengths = jnp.repeat(jnp.minimum(pos_b + 1, slots), cfg.n_kv)
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * cfg.n_kv, cfg.group, cfg.d_head)
+    k2 = jnp.swapaxes(ck.astype(q.dtype), 1, 2).reshape(
+        B * cfg.n_kv, slots, cfg.d_head
+    )
+    v2 = jnp.swapaxes(cv.astype(q.dtype), 1, 2).reshape(
+        B * cfg.n_kv, slots, cfg.d_head
+    )
+    out = dispatch_attention(
+        q2, k2, v2, lengths=lengths, softcap=cfg.softcap
+    )
     out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
     return dense(p["wo"], out), {"k": ck, "v": cv}

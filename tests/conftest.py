@@ -2,10 +2,41 @@
 the single real CPU device (the 512-device override is dryrun-only)."""
 
 import os
+import zlib
 
 import jax
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    """Deterministic test sharding for the CI tier-1 matrix: each shard
+    keeps the tests whose node-id hashes onto its slot.  The hash is a
+    stable CRC of the node id (not Python's randomized ``hash``), so the
+    same test always lands on the same shard across runs and machines —
+    the shards partition the suite exactly."""
+    group = parser.getgroup("shard")
+    group.addoption("--num-shards", type=int, default=1,
+                    help="total number of shards splitting the suite")
+    group.addoption("--shard-id", type=int, default=0,
+                    help="which shard this run executes (0-based)")
+
+
+def pytest_collection_modifyitems(config, items):
+    num = config.getoption("--num-shards")
+    if num <= 1:
+        return
+    shard = config.getoption("--shard-id")
+    if not 0 <= shard < num:
+        raise pytest.UsageError(
+            f"--shard-id {shard} out of range for --num-shards {num}"
+        )
+    keep, drop = [], []
+    for item in items:
+        bucket = zlib.crc32(item.nodeid.encode()) % num
+        (keep if bucket == shard else drop).append(item)
+    items[:] = keep
+    config.hook.pytest_deselected(items=drop)
 
 
 @pytest.fixture(scope="session")

@@ -145,17 +145,18 @@ class TestAttentionRouting:
         x = jnp.asarray(rng.randn(2, 16, 32), jnp.float32)
         return cfg, p, x
 
-    def test_attention_records_bnt_and_bnn(self, rng):
-        """One use_policy scope now governs dense *and* attention GEMMs:
-        the QK^T and probs*V contractions land on the policy as batched
-        OpKeys with g = batch x kv x group."""
+    def test_attention_records_attn_plan(self, rng):
+        """One use_policy scope governs dense GEMMs *and* the paired
+        attention plan: each prefill chunk lands one ``ATTN`` OpKey on
+        the policy (fused kernel vs unfused BNT+softmax+BNN is the
+        policy's decision, not the model's)."""
         from repro.models.attention import attention
 
         cfg, p, x = self._setup(rng)
         pol = core.AnalyticPolicy()
         with core.use_policy(pol):
             attention(p, x, cfg)
-        assert {"NT", "BNT", "BNN"} <= set(pol.stats.by_op)
+        assert {"NT", "ATTN"} <= set(pol.stats.by_op)
 
     def test_attention_pallas_batched_matches_xla(self, rng):
         from repro.models.attention import attention
@@ -163,7 +164,11 @@ class TestAttentionRouting:
         cfg, p, x = self._setup(rng)
         outs = {}
         for bnt, bnn in (("XLA_BNT", "XLA_BNN"), ("PALLAS_BNT", "PALLAS_BNN")):
-            pol = core.FixedPolicy(by_op={"BNT": bnt, "BNN": bnn})
+            # pin the plan to the unfused arm so its BNT/BNN sub-ops
+            # exercise the XLA-vs-Pallas batched kernels under test
+            pol = core.FixedPolicy(
+                by_op={"ATTN": "UNFUSED_ATTN", "BNT": bnt, "BNN": bnn}
+            )
             with core.use_policy(pol):
                 outs[bnt] = np.asarray(attention(p, x, cfg))
         np.testing.assert_allclose(
@@ -199,7 +204,8 @@ class TestAttentionRouting:
         with core.use_policy(pol):
             out, cache = attention_decode(p, x, cfg, cache, jnp.int32(0))
         assert out.shape == (2, 1, 32)
-        assert {"BNT", "BNN"} <= set(pol.stats.by_op)
+        # decode is one validity-masked ATTN dispatch per step now
+        assert "ATTN" in pol.stats.by_op
 
 
 class TestBatchedMeasurement:

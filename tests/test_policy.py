@@ -464,11 +464,12 @@ class TestTraceTimeDispatch:
                     jax.make_jaxpr(lambda p: lm.lm_forward(p, cfg, batch))(params)
                 )
             # every NT dispatch in the trace went to the forced candidate;
-            # the attention contractions (not covered by a single-name NT
-            # policy) ran their batched XLA references
+            # the attention plan (not covered by a single-name NT policy)
+            # ran its unfused arm, whose sub-GEMMs dispatched to the
+            # batched XLA references
             assert set(pol.stats.by_op["NT"]) == {name}
             assert set(pol.stats.by_candidate) == {
-                name, "XLA_BNT", "XLA_BNN"
+                name, "UNFUSED_ATTN", "XLA_BNT", "XLA_BNN"
             }
             assert pol.stats.calls > 0
         # the traced programs actually differ (TNN materialises B^T)

@@ -1,4 +1,10 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Example counts scale with ``REPRO_HYPOTHESIS_EXAMPLES_SCALE`` (default 1):
+per-PR CI runs the quick profile, the nightly deep job sets the scale to
+hammer the same properties 10x harder without forking the test code."""
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +20,11 @@ from repro.core.simulate import simulate_time
 from repro.core.hardware import TPU_V5E
 from repro.kernels import ops, ref
 
+_SCALE = max(1, int(os.environ.get("REPRO_HYPOTHESIS_EXAMPLES_SCALE", "1")))
 _dims = st.integers(min_value=1, max_value=96)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25 * _SCALE, deadline=None)
 @given(m=_dims, n=_dims, k=_dims, seed=st.integers(0, 2**16))
 def test_kernel_matches_oracle_any_shape(m, n, k, seed):
     """Pallas NT kernels == oracle for arbitrary (m, n, k)."""
@@ -33,7 +40,7 @@ def test_kernel_matches_oracle_any_shape(m, n, k, seed):
     )
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=30 * _SCALE, deadline=None)
 @given(m=_dims, n=_dims, k=_dims)
 def test_transpose_involution(m, n, k):
     rng = np.random.RandomState(m * 7 + n * 13 + k)
@@ -43,7 +50,7 @@ def test_transpose_involution(m, n, k):
     np.testing.assert_array_equal(np.asarray(btt), np.asarray(b))
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=40 * _SCALE, deadline=None)
 @given(
     m=st.sampled_from([128, 1024, 8192, 65536]),
     n=st.sampled_from([128, 1024, 8192, 65536]),
@@ -56,7 +63,7 @@ def test_cost_model_positive_and_deterministic(m, n, k, algo):
     assert t1 == t2 > 0  # deterministic noise keyed on inputs
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=20 * _SCALE, deadline=None)
 @given(
     m=st.sampled_from([128, 1024, 8192]),
     n=st.sampled_from([128, 1024, 8192]),
@@ -73,7 +80,7 @@ def test_selector_decision_matches_model(m, n, k):
     assert sel.select(core.OpKey("NT", m, n, k)) == want
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=15 * _SCALE, deadline=None)
 @given(seed=st.integers(0, 2**16), n=st.integers(20, 120))
 def test_gbdt_perfectly_separable(seed, n):
     """On a linearly separable threshold task GBDT reaches 100% train acc."""
@@ -86,7 +93,7 @@ def test_gbdt_perfectly_separable(seed, n):
     assert (clf.predict(X) == y).all()
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10 * _SCALE, deadline=None)
 @given(seed=st.integers(0, 2**16))
 def test_quantized_allreduce_error_bound(seed):
     """int8 chunk quantization: relative error bounded by 1/127 per chunk."""
@@ -120,7 +127,7 @@ def _spec(grid, out, ins, sequential=()):
     )
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=40 * _SCALE, deadline=None)
 @given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
 def test_correct_schedules_always_verify(m, n, bm, bn):
     from repro.analysis.coverage import verify_spec
@@ -132,7 +139,7 @@ def test_correct_schedules_always_verify(m, n, bm, bn):
     assert verify_spec(_spec((gm, gn), bmap, [bmap])) == []
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=40 * _SCALE, deadline=None)
 @given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
 def test_overlapping_tiles_always_fire_kc311(m, n, bm, bn):
     from hypothesis import assume
@@ -150,7 +157,7 @@ def test_overlapping_tiles_always_fire_kc311(m, n, bm, bn):
     assert "KC311" in rules
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=40 * _SCALE, deadline=None)
 @given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
 def test_ragged_edge_floor_grid_always_fires(m, n, bm, bn):
     from hypothesis import assume
@@ -168,7 +175,7 @@ def test_ragged_edge_floor_grid_always_fires(m, n, bm, bn):
     assert "KC310" in rules and "KC313" in rules
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=40 * _SCALE, deadline=None)
 @given(m=_edges, n=_edges, bm=_tiles, bn=_tiles)
 def test_transposed_operand_map_always_fires_kc312(m, n, bm, bn):
     from hypothesis import assume
@@ -186,7 +193,7 @@ def test_transposed_operand_map_always_fires_kc312(m, n, bm, bn):
     assert "KC312" in rules
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10 * _SCALE, deadline=None)
 @given(
     b=st.integers(1, 3),
     s=st.sampled_from([8, 16, 24]),
